@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: production path timing + Pallas validation cost.
+
+On CPU the production dispatch is the jnp oracle (Pallas interpret mode is a
+correctness harness, not a fast path); on TPU the same calls hit the Pallas
+kernels.  Reported numbers are steady-state (post-jit) per-call times of the
+production path at count-manager-realistic shapes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import emit
+
+
+def _bench(fn, *args, iters: int = 20, **kw) -> float:
+    jax.block_until_ready(fn(*args, **kw))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    n, bins = 1_000_000, 4096
+    keys = jnp.asarray(rng.integers(0, bins, n).astype(np.int32))
+    secs = _bench(ops.ct_count, keys, bins)
+    emit("kernels/ct_count_1M_4096", secs, f"rows_per_s={n / secs:.3g}")
+
+    w = jnp.asarray(rng.random(n).astype(np.float32))
+    secs = _bench(ops.ct_count, keys, bins, w)
+    emit("kernels/ct_count_weighted", secs, f"rows_per_s={n / secs:.3g}")
+
+    ct = jnp.asarray(rng.integers(0, 100, (65536, 8)).astype(np.float32))
+    secs = _bench(ops.mle_cpt, ct, 0.5)
+    emit("kernels/mle_cpt_64k_x8", secs, f"rows_per_s={65536 / secs:.3g}")
+
+    cpt = ops.mle_cpt(ct, 0.5)
+    secs = _bench(ops.factor_loglik, ct, cpt)
+    emit("kernels/factor_loglik_512k", secs, f"cells_per_s={ct.size / secs:.3g}")
+
+    A = jnp.asarray(rng.random((8192, 1024)).astype(np.float32))
+    L = jnp.asarray(rng.standard_normal((1024, 8)).astype(np.float32))
+    secs = _bench(ops.block_predict, A, L)
+    flops = 2 * 8192 * 1024 * 8
+    emit("kernels/block_predict_8kx1kx8", secs, f"gflops={flops / secs / 1e9:.2f}")
+
+
+def main(argv=None) -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Roofline table from the dry-run JSON cache (results/dryrun/*.json).
+
+Emits one CSV row per (arch x shape x mesh) cell with the three roofline
+terms; also used by tools/make_experiments.py to regenerate the
+EXPERIMENTS.md §Dry-run / §Roofline tables.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN_DIR = Path("results/dryrun")
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    files = sorted(glob.glob(str(DRYRUN_DIR / "*.json")))
+    if not files:
+        raise FileNotFoundError(f"no dry-run cache under {DRYRUN_DIR}")
+    recs = [json.loads(Path(f).read_text()) for f in files]
+    if mesh:
+        recs = [r for r in recs if r.get("mesh") == mesh]
+    return recs
+
+
+def run() -> None:
+    recs = load_records()
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skip":
+            emit(f"roofline/{cell}", 0.0, f"skip:{r['reason'][:60]}")
+            continue
+        if r.get("status") != "ok":
+            emit(f"roofline/{cell}", 0.0, "ERROR")
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory_analysis", {}).get("peak_bytes_est", 0) / 1e9
+        emit(
+            f"roofline/{cell}",
+            rf["roofline_s"],
+            f"bottleneck={rf['bottleneck']};compute_s={rf['compute_s']:.4g};"
+            f"memory_s={rf['memory_s']:.4g};collective_s={rf['collective_s']:.4g};"
+            f"useful={rf['useful_ratio']:.3f};frac={rf['roofline_fraction']:.4f};"
+            f"hbm_gb={mem:.1f}",
+        )
+
+
+def main(argv=None) -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: dataset instantiation, timing, CSV emission."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.database import RelationalDatabase
+from repro.data.relational import BENCHMARKS, SyntheticSpec, generate
+
+# Default scales keep a full `python -m benchmarks.run` pass tractable on a
+# single CPU core while preserving the paper's cross-dataset ordering
+# (MovieLens/IMDb ~10^5-10^6 tuples, the rest at full synthetic scale).
+# --paper-scale lifts MovieLens/IMDb to the paper's >10^6-tuple regime.
+DEFAULT_SCALES = {
+    "movielens": 0.25,
+    "mutagenesis": 1.0,
+    "uw-cse": 1.0,
+    "mondial": 1.0,
+    "hepatitis": 1.0,
+    "imdb": 0.1,
+}
+
+
+@dataclass
+class BenchDB:
+    name: str
+    spec: SyntheticSpec
+    db: RelationalDatabase
+
+
+_CACHE: dict[tuple[str, float, int], BenchDB] = {}
+
+
+def load(name: str, scale: float | None = None, seed: int = 7) -> BenchDB:
+    spec = BENCHMARKS[name]
+    s = scale if scale is not None else DEFAULT_SCALES[name]
+    key = (name, s, seed)
+    if key not in _CACHE:
+        scaled = spec.scaled(s)
+        _CACHE[key] = BenchDB(name, scaled, generate(scaled, seed=seed))
+    return _CACHE[key]
+
+
+def emit(name: str, seconds: float, derived: str) -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,78 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows:
+  * table6/*  — Table VI  (count manager: sufficient statistics + time)
+  * table7/*  — Table VII (model manager: parameter learning)
+  * table9/*  — Table IX  (structure learning, FB vs no-cache baseline)
+  * fig9/*    — Figure 9  (block vs single test-set prediction)
+  * kernels/* — hot-spot microbenchmarks
+  * roofline/*— dry-run-derived roofline terms (needs results/dryrun/*.json)
+
+``--fast`` shrinks datasets for CI; ``--paper-scale`` lifts MovieLens/IMDb to
+the paper's >10^6-tuple regime (slow on one CPU core).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fast", action="store_true", help="tiny datasets (CI smoke)")
+    p.add_argument("--paper-scale", action="store_true", help="full 10^6-tuple runs")
+    p.add_argument("--skip", nargs="*", default=[],
+                   help="benches to skip: counts params structure predict kernels roofline")
+    a = p.parse_args(argv)
+
+    scale = 0.02 if a.fast else (1.0 if a.paper_scale else None)
+    datasets = (
+        ["movielens", "mutagenesis", "uw-cse", "hepatitis"]
+        if a.fast
+        else ["movielens", "mutagenesis", "uw-cse", "mondial", "hepatitis", "imdb"]
+    )
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    if "kernels" not in a.skip:
+        from . import bench_kernels
+
+        bench_kernels.run()
+
+    if "counts" not in a.skip:
+        from . import bench_counts
+
+        bench_counts.run(datasets, scale)
+
+    if "params" not in a.skip:
+        from . import bench_params
+
+        bench_params.run(datasets, scale)
+
+    if "structure" not in a.skip:
+        from . import bench_structure
+
+        bench_structure.run(datasets, scale)
+
+    if "predict" not in a.skip:
+        from . import bench_predict
+
+        bench_predict.run(datasets, scale, single_cap=8 if a.fast else 24)
+
+    if "roofline" not in a.skip:
+        try:
+            from . import bench_roofline
+
+            bench_roofline.run()
+        except FileNotFoundError:
+            print("roofline/skipped,0.0,no results/dryrun cache — run launch/dryrun.py first",
+                  flush=True)
+
+    print(f"# total benchmark wall time: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Distributed FactorBase: GROUP BY COUNT on a (fake) device mesh.
+
+The paper's count manager pushed onto a data-parallel mesh via shard_map:
+relationship rows are sharded across devices, each device histograms its
+shard with the count-manager kernel, and a psum yields the global
+contingency table — validated cell-exactly against the single-device
+Möbius pipeline.  Block prediction shards the *test entities* instead
+(zero collectives).
+
+Run:  PYTHONPATH=src python examples/distributed_count.py
+(uses XLA_FLAGS to fake an 8-device host; the same shard_map code lowers
+for the 512-chip production mesh in the dry-run)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.counts import contingency_table
+from repro.core.distributed import sharded_block_predict, single_rel_ct_sharded
+from repro.data.relational import MOVIELENS, generate
+from repro.launch.mesh import make_mesh_from_shape
+
+
+def main() -> None:
+    mesh = make_mesh_from_shape((4, 2))
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"on {mesh.devices.size} devices")
+
+    spec = MOVIELENS.scaled(0.05)
+    db = generate(spec, seed=11)
+    print(f"database: {spec.name} with {db.total_tuples} tuples "
+          f"({db.relationships['rated'].n_rows} facts)")
+
+    rvs = ("rated(user0,movie0)", "rating(user0,movie0)", "age(user0)",
+           "genre(movie0)")
+    t0 = time.perf_counter()
+    ct_d = single_rel_ct_sharded(db, "rated", rvs, mesh)
+    jax.block_until_ready(ct_d.table)
+    t_d = time.perf_counter() - t0
+
+    ct_s = contingency_table(db, rvs)
+    same = np.allclose(np.asarray(ct_d.table), np.asarray(ct_s.table))
+    print(f"distributed CT {ct_d.table.shape}: total={float(ct_d.table.sum()):.0f} "
+          f"in {t_d:.3f}s; matches single-device pipeline: {same}")
+    assert same
+
+    # sharded block scoring: entities over the data axis
+    rng = np.random.default_rng(0)
+    counts = rng.random((512, 96)).astype(np.float32)
+    log_cpt = rng.standard_normal((96, 3)).astype(np.float32)
+    scores = sharded_block_predict(
+        jax.numpy.asarray(counts), jax.numpy.asarray(log_cpt), mesh
+    )
+    ok = np.allclose(np.asarray(scores), counts @ log_cpt, atol=1e-4)
+    print(f"sharded block prediction (512 entities x 3 classes): exact={ok}")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

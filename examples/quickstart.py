@@ -1,0 +1,65 @@
+"""FactorBase quickstart: learn a Bayesian network for a whole database.
+
+Reproduces the paper's running example end-to-end on the University
+database of Figure 2:
+
+  schema analyzer (VDB)  ->  count manager (CDB, Möbius virtual join)
+  -> structure learning (learn-and-join)  ->  parameter manager (CPTs)
+  -> model scores (AIC)  ->  block test-set prediction (§VI)
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CountCache,
+    learn_and_join,
+    learn_parameters,
+    predict_block,
+    score_structure,
+    university_db,
+)
+
+
+def main() -> None:
+    db = university_db()
+    print("== VDB: par-RVs discovered by the schema analyzer ==")
+    for v in db.catalog.par_rvs:
+        print(f"  {v.vid:35s} kind={v.kind:12s} domain={v.domain}")
+
+    print("\n== CDB: joint contingency table (pre-counting) ==")
+    cache = CountCache(db, mode="precount")
+    jt = cache.joint
+    print(f"  par-RVs={len(jt.rvs)} cells={jt.n_cells} "
+          f"sufficient statistics (nonzero)={jt.n_nonzero()} total={float(jt.total()):.0f}")
+
+    print("\n== Structure learning (learn-and-join, AIC) ==")
+    res = learn_and_join(db, cache, score="aic", max_parents=2, max_chain=1)
+    for p, c in res.bn.edges():
+        print(f"  {p}  ->  {c}")
+    print(f"  lattice nodes={res.n_lattice_nodes} families scored={res.n_candidates_scored} "
+          f"in {res.seconds:.2f}s")
+
+    print("\n== MDB: parameters + scores ==")
+    factors = learn_parameters(res.bn, cache, alpha=0.0)
+    scores = score_structure(res.bn, cache)
+    print(f"  log-likelihood={scores.loglik:.3f}  #params={scores.n_params}  "
+          f"AIC={scores.aic:.3f}")
+    cap = factors["capability(prof0,student0)"]
+    print(f"  CPT for capability(P,S): parents={cap.parents} table shape={cap.table.shape}")
+
+    print("\n== §VI block prediction: P(intelligence(S) | rest) ==")
+    target = "intelligence(student0)"
+    pred = predict_block(db, res.bn, factors, target)
+    true = np.asarray(db.entities["student"].attrs["intelligence"])
+    print("  probs:")
+    for i, row in enumerate(np.asarray(pred.probs)):
+        print(f"   student {i}: {np.round(row, 3)}  (true code {true[i]})")
+    print(f"  accuracy={pred.accuracy(jnp.asarray(true)):.3f}  "
+          f"CLL={pred.conditional_loglik(jnp.asarray(true)):.3f}")
+
+
+if __name__ == "__main__":
+    main()

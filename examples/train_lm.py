@@ -1,0 +1,85 @@
+"""End-to-end training driver: train a small LM for a few hundred steps.
+
+Demonstrates the full substrate on CPU: config system, deterministic data
+pipeline, jitted train step (AdamW + grad accumulation + remat), atomic
+async checkpointing with resume, and the fault-tolerance path (optional
+--inject-fault).  On real hardware the same driver takes --arch qwen3_4b
+(or any assigned arch) and the production mesh.
+
+Run (CPU, ~2-4 min):
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --resume   # continue
+  PYTHONPATH=src python examples/train_lm.py --preset 100m          # hardware
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig, get_config
+from repro.data.pipeline import DataConfig
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+# ~19M params: a real (if small) qwen3-family transformer; trains visibly
+# on the synthetic Markov+motif stream within a few hundred CPU steps.
+CPU_SMALL = ModelConfig(
+    name="cpu-small-20m", family="dense", n_layers=4, d_model=256,
+    n_heads=8, n_kv_heads=4, d_ff=1024, vocab=32768, qk_norm=True,
+    tie_embeddings=True,
+)
+
+PRESETS = {"cpu-small": CPU_SMALL}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--preset", default="cpu-small",
+                   help="cpu-small | 100m | any --arch id")
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--seq-len", type=int, default=256)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--accum", type=int, default=1)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--inject-fault", type=int, default=-1,
+                   help="raise a fake node failure at this step once")
+    a = p.parse_args()
+
+    if a.preset in PRESETS:
+        cfg = PRESETS[a.preset]
+    elif a.preset == "100m":
+        cfg = dataclasses.replace(
+            CPU_SMALL, name="repro-100m", n_layers=12, d_model=768,
+            n_heads=12, n_kv_heads=4, d_ff=2048, vocab=50304,
+        )
+    else:
+        cfg = get_config(a.preset, smoke=False)
+    print(f"model: {cfg.name}  params={cfg.n_params()/1e6:.1f}M")
+
+    data = DataConfig(vocab=cfg.vocab, seq_len=a.seq_len, global_batch=a.batch)
+    tc = TrainerConfig(
+        steps=a.steps, ckpt_every=max(a.steps // 10, 1), log_every=10,
+        ckpt_dir=a.ckpt_dir, accum_steps=a.accum,
+        schedule="cosine", warmup=max(a.steps // 20, 1),
+        opt=AdamWConfig(lr=a.lr),
+    )
+
+    faults = {a.inject_fault} if a.inject_fault >= 0 else set()
+
+    def fault_hook(step):
+        if step in faults:
+            faults.discard(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+    tr = Trainer(cfg, data, tc, fault_hook=fault_hook if faults else None)
+    res = tr.run(resume=a.resume)
+    n = len(res.losses)
+    print(f"\nfinished step {res.final_step}: loss {res.losses[0]:.4f} -> "
+          f"{res.losses[-1]:.4f} (min {min(res.losses):.4f}) "
+          f"restarts={res.restarts} wall={res.seconds:.1f}s")
+    assert res.losses[-1] < res.losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

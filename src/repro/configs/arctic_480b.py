@@ -1,0 +1,38 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual path.
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864/expert vocab=32000
+[hf:Snowflake/snowflake-arctic-base].  Arctic's dense-MoE hybrid: a dense
+FFN residual runs in parallel with the 128-expert MoE FFN.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab=32000,
+    n_experts=128,
+    top_k=2,
+    moe_dense_residual=True,
+    dense_ff=4864,
+)
+
+SMOKE = ModelConfig(
+    name="arctic-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab=256,
+    n_experts=8,
+    top_k=2,
+    moe_dense_residual=True,
+    dense_ff=96,
+)

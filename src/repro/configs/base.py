@@ -1,0 +1,190 @@
+"""Model/run configuration system.
+
+One frozen dataclass describes every assigned architecture; per-arch modules
+(``src/repro/configs/<id>.py``) export ``CONFIG`` (the exact assigned
+configuration) and ``SMOKE`` (a reduced same-family config for CPU smoke
+tests).  ``registry()`` resolves ``--arch <id>`` for the launcher, dry-run
+and benchmarks.
+
+Input shapes are a separate small registry (the assignment's four shapes),
+with per-arch applicability rules (decode for decoder-bearing archs only;
+long-context only for sub-quadratic attention families) — see
+``cells()`` which enumerates the (arch x shape) dry-run matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qk_norm: bool = False       # qwen3: RMSNorm on per-head q/k
+    attn_bias: bool = False     # qwen1.5: bias on QKV projections
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    dense_ff: int = 0
+
+    # SSM (mamba2 SSD) — also used by the hybrid family
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    ssm_n_groups: int = 1
+
+    # hybrid (hymba): parallel attention + SSM heads in each block
+    hybrid: bool = False
+
+    # attention windowing (hymba SWA; enables long-context decode)
+    sliding_window: int = 0      # 0 = full attention
+    n_global_layers: int = 0     # hymba: first/middle/last layers stay global
+
+    # vlm (llama-3.2-vision): cross-attention to precomputed patch embeddings
+    cross_attn_every: int = 0    # a cross-attn layer every k-th layer
+    vision_tokens: int = 0
+
+    # audio enc-dec (whisper): encoder self-attn stack + decoder cross-attn;
+    # the conv/mel frontend is a stub — input_specs provides frame embeddings
+    encoder_layers: int = 0
+    audio_frames: int = 0
+
+    # numerics
+    dtype: str = "bfloat16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding/lm_head can
+        shard over a 16-way model axis (odd vocabs like minicpm's 122753
+        otherwise replicate a GB-scale matrix on every device).  Logits in
+        the pad region are masked to -inf; tokens never index pad rows."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch serve a 500k-token context?  (ssm state or SWA)."""
+        return self.family == "ssm" or (self.hybrid and self.sliding_window > 0)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + blocks); used for 6ND."""
+        from ..models.params import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def n_active_params(self) -> int:
+        from ..models.params import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+def pad_heads(cfg: ModelConfig, multiple: int = 16) -> ModelConfig:
+    """Pad MHA head counts up to ``multiple`` so attention shards over the
+    model axis instead of replicating (qwen1.5's 40 heads and minicpm's 36
+    otherwise put the FULL (B,H,S,S) score tensor on every device — the
+    measured cause of their memory-bound roofline cells; §Perf iteration
+    "pad-heads").  Padded head weights are regular parameters initialized
+    like the rest; zero-initialized output rows make them exact no-ops at
+    step 0 and they train as ordinary capacity afterwards.  Only applies to
+    MHA (n_heads == n_kv_heads); GQA group structure is never altered.
+    """
+    if cfg.n_heads != cfg.n_kv_heads or cfg.n_heads % multiple == 0 or cfg.n_heads == 0:
+        return cfg
+    hp = -(-cfg.n_heads // multiple) * multiple
+    return dataclasses.replace(
+        cfg, n_heads=hp, n_kv_heads=hp, head_dim=cfg.hd,
+        name=cfg.name + f"+padheads{hp}",
+    )
+
+
+ARCH_IDS = (
+    "mamba2_130m",
+    "llama32_vision_90b",
+    "hymba_1_5b",
+    "qwen3_4b",
+    "granite_8b",
+    "qwen15_32b",
+    "minicpm_2b",
+    "whisper_medium",
+    "phi35_moe",
+    "arctic_480b",
+)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def registry() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: 524k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def cells() -> list[tuple[str, str, bool, str]]:
+    """The 40-cell (arch x shape) matrix: (arch, shape, runs, skip_reason)."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            runs, why = shape_applicable(cfg, s)
+            out.append((a, s.name, runs, why))
+    return out

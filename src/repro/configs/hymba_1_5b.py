@@ -1,0 +1,48 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads per block.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001 ssm_state=16
+[arXiv:2411.13676].  Sliding-window attention (1024) everywhere except the
+3 global-attention layers at {first, middle, last} — which is what makes
+long_500k feasible (O(W) attention + O(1) SSM state).
+head_dim 64 (25 x 64 = 1600).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    hybrid=True,
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    sliding_window=1024,
+    n_global_layers=3,
+)
+
+SMOKE = ModelConfig(
+    name="hymba-smoke",
+    family="hybrid",
+    hybrid=True,
+    n_layers=5,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=256,
+    ssm_state=8,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_chunk=16,
+    sliding_window=32,
+    n_global_layers=3,
+)

@@ -1,0 +1,36 @@
+"""llama-3.2-vision-90b [vlm] — cross-attention image layers.
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256
+[hf:meta-llama/Llama-3.2-90B-Vision].  Cross-attn every 5th layer (20 cross
++ 80 self = 100).  The vision tower is a STUB: input_specs() supplies
+precomputed patch embeddings (B, vision_tokens, d_model).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    rope_theta=5e5,
+    cross_attn_every=4,   # 4 self layers then 1 cross layer per superblock
+    vision_tokens=1600,
+)
+
+SMOKE = ModelConfig(
+    name="llama-vision-smoke",
+    family="vlm",
+    n_layers=5,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    cross_attn_every=4,
+    vision_tokens=16,
+)

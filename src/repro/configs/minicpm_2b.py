@@ -1,0 +1,32 @@
+"""minicpm-2b [dense] — llama-like arch trained with the WSD schedule.
+
+40L d_model=2304 36H (GQA kv=36) d_ff=5760 vocab=122753  [arXiv:2404.06395]
+The WSD (warmup-stable-decay) schedule is in repro.training.schedules and
+selected by this config's train recipe.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab=122753,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="minicpm-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=72,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=144,
+    vocab=256,
+    tie_embeddings=True,
+)

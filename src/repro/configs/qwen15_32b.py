@@ -1,0 +1,32 @@
+"""qwen1.5-32b [dense] — QKV bias, MHA-style GQA (kv == heads).
+
+64L d_model=5120 40H (GQA kv=40) d_ff=27392 vocab=152064
+[hf:Qwen/Qwen1.5-32B]
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab=152064,
+    attn_bias=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="qwen15-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=160,
+    vocab=256,
+    attn_bias=True,
+)

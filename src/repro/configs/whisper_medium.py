@@ -1,0 +1,34 @@
+"""whisper-medium [audio] — encoder-decoder with (stubbed) conv frontend.
+
+24L d_model=1024 16H d_ff=4096 vocab=51865  [arXiv:2212.04356]
+24 encoder + 24 decoder layers; the mel/conv frontend is a STUB:
+input_specs() provides precomputed frame embeddings (B, 1500, d_model).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,          # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    audio_frames=1500,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    n_layers=2,
+    encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    audio_frames=32,
+)

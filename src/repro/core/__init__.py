@@ -1,0 +1,50 @@
+"""FactorBase core: the paper's contribution as composable JAX modules.
+
+Pipeline (paper Figure 4):
+
+    RelationalSchema --analyze_schema--> VariableCatalog          (VDB)
+    RelationalDatabase --contingency_table/joint_--> CTs          (CDB)
+    CTs --mle_factor/score_*--> FactorTables, ScoreTables         (MDB)
+    learn_and_join / hill_climb --> BayesNet                      (structure)
+    predict_block / predict_single_loop --> class probabilities   (§VI)
+    distributed.* --> the same, sharded over a TPU mesh
+"""
+
+from .bn import BayesNet
+from .counts import (
+    ContingencyTable,
+    contingency_table,
+    ct_conditional,
+    joint_contingency_table,
+)
+from .cpt import FactorTable, learn_parameters, mle_factor
+from .database import (
+    EntityTable,
+    RelationalDatabase,
+    RelationshipTable,
+    from_labels,
+    university_db,
+)
+from .predict import PredictionResult, predict_block, predict_single_loop
+from .schema import (
+    EntityDecl,
+    ParRV,
+    RelationalSchema,
+    RelationshipDecl,
+    VariableCatalog,
+    analyze_schema,
+    make_schema,
+)
+from .scores import ScoreTable, score_family, score_structure
+from .structure import CountCache, LearnAndJoinResult, hill_climb, learn_and_join
+
+__all__ = [
+    "BayesNet", "ContingencyTable", "contingency_table", "ct_conditional",
+    "joint_contingency_table", "FactorTable", "learn_parameters", "mle_factor",
+    "EntityTable", "RelationalDatabase", "RelationshipTable", "from_labels",
+    "university_db", "PredictionResult", "predict_block", "predict_single_loop",
+    "EntityDecl", "ParRV", "RelationalSchema", "RelationshipDecl",
+    "VariableCatalog", "analyze_schema", "make_schema", "ScoreTable",
+    "score_family", "score_structure", "CountCache", "LearnAndJoinResult",
+    "hill_climb", "learn_and_join",
+]

@@ -1,0 +1,96 @@
+"""Bayesian-network structure objects — the Models Database (MDB) schema.
+
+Paper §V-A stores the graph in a ``BayesNet(child, parent)`` table, one
+``@par-RVID@_CPT`` factor table per node, and a ``Scores`` table.  Here the
+structure is a frozen mapping child -> parents over par-RV ids, with the
+factor/score tables managed by :mod:`repro.core.cpt` / :mod:`repro.core.scores`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+
+@dataclass(frozen=True)
+class BayesNet:
+    """A parametrized BN structure: DAG over par-RV ids."""
+
+    rvs: tuple[str, ...]
+    parents: Mapping[str, tuple[str, ...]]
+
+    def __post_init__(self):
+        for child, ps in self.parents.items():
+            assert child in self.rvs, child
+            for p in ps:
+                assert p in self.rvs, (child, p)
+            assert len(set(ps)) == len(ps), f"duplicate parents for {child}"
+
+    @staticmethod
+    def empty(rvs: Iterable[str]) -> "BayesNet":
+        rvs = tuple(rvs)
+        return BayesNet(rvs, {r: () for r in rvs})
+
+    def family(self, child: str) -> tuple[str, ...]:
+        """child + parents — the par-factor of this node (paper §II-B)."""
+        return (child,) + tuple(self.parents[child])
+
+    def edges(self) -> tuple[tuple[str, str], ...]:
+        return tuple(
+            (p, c) for c in self.rvs for p in self.parents.get(c, ())
+        )
+
+    @property
+    def n_edges(self) -> int:
+        return sum(len(self.parents.get(c, ())) for c in self.rvs)
+
+    def with_edge(self, parent: str, child: str) -> "BayesNet":
+        ps = self.parents[child]
+        assert parent not in ps
+        new = dict(self.parents)
+        new[child] = ps + (parent,)
+        return BayesNet(self.rvs, new)
+
+    def without_edge(self, parent: str, child: str) -> "BayesNet":
+        new = dict(self.parents)
+        new[child] = tuple(p for p in self.parents[child] if p != parent)
+        return BayesNet(self.rvs, new)
+
+    def reversed_edge(self, parent: str, child: str) -> "BayesNet":
+        return self.without_edge(parent, child).with_edge(child, parent)
+
+    def has_edge(self, parent: str, child: str) -> bool:
+        return parent in self.parents.get(child, ())
+
+    def is_acyclic(self) -> bool:
+        return self.topological_order() is not None
+
+    def topological_order(self) -> tuple[str, ...] | None:
+        """Kahn's algorithm; None if cyclic."""
+        indeg = {r: len(self.parents.get(r, ())) for r in self.rvs}
+        children: dict[str, list[str]] = {r: [] for r in self.rvs}
+        for c in self.rvs:
+            for p in self.parents.get(c, ()):
+                children[p].append(c)
+        queue = sorted(r for r, d in indeg.items() if d == 0)
+        order: list[str] = []
+        while queue:
+            n = queue.pop(0)
+            order.append(n)
+            for c in children[n]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    queue.append(c)
+            queue.sort()
+        return tuple(order) if len(order) == len(self.rvs) else None
+
+    def union(self, other: "BayesNet") -> "BayesNet":
+        """Edge union over the union of node sets (used by learn-and-join)."""
+        rvs = tuple(dict.fromkeys(self.rvs + other.rvs))
+        parents = {}
+        for r in rvs:
+            ps = tuple(dict.fromkeys(
+                self.parents.get(r, ()) + other.parents.get(r, ())
+            ))
+            parents[r] = ps
+        return BayesNet(rvs, parents)

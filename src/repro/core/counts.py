@@ -1,0 +1,613 @@
+"""The Count Manager (paper §IV): contingency tables as dense tensors.
+
+The contingency-table problem: given par-RVs **V** and a database instance,
+produce the table of counts of every joint value assignment, where the count
+ranges over the *cross product of the first-order variables' populations*
+(so relationship par-RVs take value F for unlinked tuples, and relationship
+attributes take ``n/a`` there — paper Fig. 3(c)).
+
+TPU-native construction (replaces the SQL metaquery pipeline):
+
+  * a **query conditioned on relationships = True** is a join-tree
+    contraction: relationship tables are factors over entity indices, entity
+    attributes are code columns, and GROUP BY COUNT is a mixed-radix encode +
+    histogram (``kernels.ct_count``).  Eliminating a leaf first-order
+    variable through a relationship is a *weighted histogram* — the tensor
+    analogue of a foreign-key join.
+  * the **Möbius virtual join** (paper §IV, citing Qian et al. CIKM'14)
+    recovers the R = False blocks without ever materializing a cross join:
+    ``CT[F] = CT[*] - CT[T]`` axis group by axis group, where the
+    "don't-care" table of an untouched population is just an outer product
+    of entity-attribute histograms.
+
+Counts are float32 tensors (exact for cells < 2**24; tests cross-check an
+int64 numpy brute force on small instances).  Every public function is
+metadata-driven via the :class:`VariableCatalog` — the analogue of the
+paper's metaqueries reading the VDB.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import reduce
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .database import RelationalDatabase
+from .schema import (
+    KIND_ENTITY_ATTR,
+    KIND_REL,
+    KIND_REL_ATTR,
+    ParRV,
+    VariableCatalog,
+)
+
+
+# ---------------------------------------------------------------------------
+# Contingency tables
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ContingencyTable:
+    """Dense sufficient-statistics tensor: one axis per par-RV (by vid)."""
+
+    rvs: tuple[str, ...]
+    table: jax.Array  # float32, shape = tuple(cardinality of each rv)
+
+    def __post_init__(self):
+        assert self.table.ndim == len(self.rvs), (self.rvs, self.table.shape)
+
+    @property
+    def n_cells(self) -> int:
+        return int(np.prod(self.table.shape)) if self.table.ndim else 1
+
+    def total(self) -> jax.Array:
+        return jnp.sum(self.table)
+
+    def n_nonzero(self) -> int:
+        """Number of realized sufficient statistics (the paper's #SS)."""
+        return int(jnp.sum(self.table > 0))
+
+    def marginal(self, keep: tuple[str, ...]) -> "ContingencyTable":
+        """GROUP BY a subset of the par-RVs (sum out the rest)."""
+        missing = [v for v in keep if v not in self.rvs]
+        if missing:
+            raise KeyError(f"par-RVs {missing} not in this CT {self.rvs}")
+        drop_axes = tuple(i for i, v in enumerate(self.rvs) if v not in keep)
+        t = jnp.sum(self.table, axis=drop_axes) if drop_axes else self.table
+        kept = tuple(v for v in self.rvs if v in keep)
+        ct = ContingencyTable(kept, t)
+        return ct.transpose(keep)
+
+    def transpose(self, order: tuple[str, ...]) -> "ContingencyTable":
+        if tuple(order) == self.rvs:
+            return self
+        perm = tuple(self.rvs.index(v) for v in order)
+        return ContingencyTable(tuple(order), jnp.transpose(self.table, perm))
+
+
+# ---------------------------------------------------------------------------
+# Mixed-radix code helpers
+# ---------------------------------------------------------------------------
+
+
+def radix_strides(cards: list[int]) -> list[int]:
+    """Row-major strides so that code = sum_i digit_i * stride_i."""
+    strides = [1] * len(cards)
+    for i in range(len(cards) - 2, -1, -1):
+        strides[i] = strides[i + 1] * cards[i + 1]
+    return strides
+
+
+def encode_columns(cols: list[jax.Array], cards: list[int]) -> jax.Array:
+    """Mixed-radix composite key over int32 code columns."""
+    if not cols:
+        raise ValueError("need at least one column")
+    strides = radix_strides(cards)
+    key = cols[0] * strides[0]
+    for c, s in zip(cols[1:], strides[1:]):
+        key = key + c * s
+    return key
+
+
+# ---------------------------------------------------------------------------
+# Column access (the SELECT list of the metaquery)
+# ---------------------------------------------------------------------------
+
+
+def _entity_attr_column(db: RelationalDatabase, rv: ParRV) -> jax.Array:
+    return db.entities[rv.table].attrs[rv.column]
+
+
+def _rel_attr_column(db: RelationalDatabase, rv: ParRV) -> jax.Array:
+    return db.relationships[rv.table].attrs[rv.column]
+
+
+def _rel_fk(db: RelationalDatabase, rel_name: str, fovar_id: str) -> jax.Array:
+    """Foreign-key column of a relationship table for a given first-order var."""
+    decl = db.schema.relationship(rel_name)
+    t = db.relationships[rel_name]
+    cat = db.catalog
+    rel_rv = cat.rel_var_of(rel_name)
+    f1, f2 = rel_rv.fovars
+    if fovar_id == f1.fid:
+        return t.fk1
+    if fovar_id == f2.fid:
+        return t.fk2
+    raise KeyError(f"{fovar_id} is not a first-order variable of {rel_name} ({decl.entities})")
+
+
+# ---------------------------------------------------------------------------
+# Join-tree contraction: CT conditioned on relationships = True
+# ---------------------------------------------------------------------------
+
+
+def _fold_codes(
+    msg: jax.Array, cards: list[int], col: jax.Array, card: int
+) -> tuple[jax.Array, list[int]]:
+    """Fold a per-row code column into a (rows, C) message -> (rows, C * card).
+
+    message'[r, c * card + col[r]] = message[r, c] — the tensor analogue of
+    adding a column to the GROUP BY list.
+    """
+    onehot = jax.nn.one_hot(col, card, dtype=msg.dtype)  # (rows, card)
+    out = msg[:, :, None] * onehot[:, None, :]
+    return out.reshape(msg.shape[0], -1), cards + [card]
+
+
+def _combine_messages(
+    a: jax.Array, a_cards: list[int], b: jax.Array, b_cards: list[int]
+) -> tuple[jax.Array, list[int]]:
+    """Pointwise product over shared entity rows, code spaces concatenated."""
+    out = a[:, :, None] * b[:, None, :]
+    return out.reshape(a.shape[0], -1), a_cards + b_cards
+
+
+GROUP_AXIS = "__group__"  # pseudo par-RV id for the target-entity axis (§VI)
+
+
+def ct_conditional(
+    db: RelationalDatabase,
+    attr_rvs: tuple[str, ...],
+    cond_true: tuple[str, ...],
+    fovar_universe: tuple[str, ...] | None = None,
+    *,
+    impl: str = "auto",
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+) -> ContingencyTable:
+    """CT over attribute par-RVs, conditioned on ``cond_true`` relationships.
+
+    This is the paper's Figure-6 metaquery generalized to relationship
+    chains/trees: the count of each joint attribute assignment among tuples
+    of the first-order-variable cross product for which *all* relationships
+    in ``cond_true`` hold.
+
+    ``fovar_universe`` fixes the population cross product (needed by the
+    Möbius recursion so that T- and don't-care branches count over the same
+    tuple space); it defaults to the first-order variables referenced by the
+    query itself.
+
+    ``group_fovar`` implements the paper's §VI *block access*: the entity id
+    of that first-order variable is added to the GROUP BY, appearing as a
+    leading pseudo-axis named ``__group__`` in the result.  ``restrict``
+    maps first-order variables to a single entity row (the single-instance
+    ``WHERE S.s_id = jack`` baseline) — counting is restricted to groundings
+    using exactly that entity.
+    """
+    cat = db.catalog
+    rvs = [cat[v] for v in attr_rvs]
+    for rv in rvs:
+        if rv.kind == KIND_REL:
+            raise ValueError(
+                f"{rv.vid} is a relationship par-RV; use contingency_table() "
+                "for queries with relationship variables"
+            )
+    for rv in rvs:
+        if rv.kind == KIND_REL_ATTR and rv.table not in cond_true:
+            raise ValueError(
+                f"{rv.vid}: relationship attribute requires {rv.table} in cond_true"
+            )
+
+    # First-order variable universe.
+    q_fovars: list[str] = []
+    for rv in rvs:
+        for f in rv.fovars:
+            if f.fid not in q_fovars:
+                q_fovars.append(f.fid)
+    for rname in cond_true:
+        for f in cat.rel_var_of(rname).fovars:
+            if f.fid not in q_fovars:
+                q_fovars.append(f.fid)
+    restrict = restrict or {}
+    if group_fovar is not None and group_fovar not in q_fovars:
+        q_fovars.append(group_fovar)
+    for f in restrict:
+        if f not in q_fovars:
+            q_fovars.append(f)
+    universe = list(fovar_universe) if fovar_universe is not None else q_fovars
+    for f in (group_fovar,) if group_fovar is not None else ():
+        if f not in universe:
+            universe.append(f)
+    for f in restrict:
+        if f not in universe:
+            universe.append(f)
+    for f in q_fovars:
+        if f not in universe:
+            raise ValueError(f"query fovar {f} outside universe {universe}")
+
+    # Group attribute rvs.
+    ent_attrs: dict[str, list[ParRV]] = {f: [] for f in universe}
+    rel_attrs: dict[str, list[ParRV]] = {r: [] for r in cond_true}
+    for rv in rvs:
+        if rv.kind == KIND_ENTITY_ATTR:
+            ent_attrs[rv.fovars[0].fid].append(rv)
+        else:
+            rel_attrs[rv.table].append(rv)
+
+    # Join graph over first-order variables.
+    adj: dict[str, list[tuple[str, str]]] = {f: [] for f in universe}  # fid -> [(rel, other)]
+    for rname in cond_true:
+        f1, f2 = (f.fid for f in cat.rel_var_of(rname).fovars)
+        if f1 == f2:
+            raise NotImplementedError("degenerate self-loop relationship")
+        adj[f1].append((rname, f2))
+        adj[f2].append((rname, f1))
+
+    # Connected components over the universe.
+    comp_of: dict[str, int] = {}
+    comps: list[list[str]] = []
+    for f in universe:
+        if f in comp_of:
+            continue
+        stack, comp = [f], []
+        comp_of[f] = len(comps)
+        while stack:
+            g = stack.pop()
+            comp.append(g)
+            for _, h in adj[g]:
+                if h not in comp_of:
+                    comp_of[h] = len(comps)
+                    stack.append(h)
+        comps.append(comp)
+
+    n_edges_by_comp = [0] * len(comps)
+    for rname in cond_true:
+        f1 = cat.rel_var_of(rname).fovars[0].fid
+        n_edges_by_comp[comp_of[f1]] += 1
+    for ci, comp in enumerate(comps):
+        if n_edges_by_comp[ci] != len(comp) - 1 and n_edges_by_comp[ci] > 0:
+            raise NotImplementedError(
+                f"cyclic join graph in component {comp}; only trees/chains supported"
+            )
+
+    def fovar_n_rows(fid: str) -> int:
+        return db.entities[cat.fovar(fid).entity].n_rows
+
+    def initial_message(fid: str) -> tuple[jax.Array, list[int], list[str]]:
+        """(n_rows, C) message with this fovar's own attribute codes folded in."""
+        n = fovar_n_rows(fid)
+        msg = jnp.ones((n, 1), jnp.float32)
+        if fid in restrict:
+            ind = (jnp.arange(n, dtype=jnp.int32) == restrict[fid]).astype(jnp.float32)
+            msg = msg * ind[:, None]
+        cards: list[int] = []
+        folded: list[str] = []
+        for rv in ent_attrs[fid]:
+            msg, cards = _fold_codes(msg, cards, _entity_attr_column(db, rv), rv.cardinality)
+            folded.append(rv.vid)
+        return msg, cards, folded
+
+    def finish_root(
+        fid: str, msgs: list[tuple[jax.Array, list[int], list[str]]]
+    ) -> tuple[jax.Array, list[int], list[str]]:
+        """Contract the root's message list over its entity rows.
+
+        For k messages M_i (n, C_i) the result is
+        ``out[c_1..c_k] = sum_n prod_i M_i[n, c_i]``.  Materializing the full
+        (n, prod C_i) product first is the hub blow-up (IMDb-scale joins);
+        instead the messages are split into two balanced groups A, B and the
+        row sum becomes one matmul A^T @ B — the MXU-native join reduction.
+        For the §VI *block* path the per-entity product IS the result, so the
+        group fovar keeps its row axis (families are small, so no blow-up).
+        """
+        msgs = [m for m in msgs if m is not None]
+        if fid == group_fovar:
+            msg, cards, folded = msgs[0]
+            for m2, c2, f2 in msgs[1:]:
+                msg, _ = _combine_messages(msg, cards, m2, c2)
+                cards, folded = cards + c2, folded + f2
+            return msg.reshape(-1), [msg.shape[0]] + cards, [GROUP_AXIS] + folded
+
+        # Greedy balanced partition by code-space size.
+        sizes = [int(np.prod(c)) if c else 1 for _, c, _ in msgs]
+        order = np.argsort(sizes)[::-1]
+        ga: list[int] = []
+        gb: list[int] = []
+        pa = pb = 1
+        for i in order:
+            if pa <= pb:
+                ga.append(int(i))
+                pa *= sizes[int(i)]
+            else:
+                gb.append(int(i))
+                pb *= sizes[int(i)]
+
+        def fold_group(idxs: list[int]):
+            if not idxs:
+                return None
+            msg, cards, folded = msgs[idxs[0]]
+            for i in idxs[1:]:
+                m2, c2, f2 = msgs[i]
+                msg, _ = _combine_messages(msg, cards, m2, c2)
+                cards, folded = cards + c2, folded + f2
+            return msg, cards, folded
+
+        a = fold_group(ga)
+        b = fold_group(gb)
+        if b is None:
+            msg, cards, folded = a
+            return jnp.sum(msg, axis=0), cards, folded
+        (ma, ca, fa), (mb, cb, fb) = a, b
+        out = jnp.einsum("na,nb->ab", ma, mb).reshape(-1)
+        return out, ca + cb, fa + fb
+
+    def contract_component(comp: list[str]) -> tuple[jax.Array, list[int], list[str]]:
+        """Eliminate the component down to a flat (C,) count vector."""
+        if len(comp) == 1 and not adj[comp[0]]:
+            msg, cards, folded = initial_message(comp[0])
+            return finish_root(comp[0], [(msg, cards, folded)])
+
+        # Per-fovar state: list of pending messages (own attrs + subtree
+        # contributions).  Messages are only *combined* when a fovar is
+        # eliminated through a relationship (interior nodes of chains) or at
+        # the root via the balanced matmul contraction.
+        state: dict[str, list[tuple[jax.Array, list[int], list[str]]]] = {
+            f: [initial_message(f)] for f in comp
+        }
+        remaining_edges = {
+            rname: tuple(f.fid for f in cat.rel_var_of(rname).fovars)
+            for rname in cond_true
+            if comp_of[cat.rel_var_of(rname).fovars[0].fid] == comp_of[comp[0]]
+        }
+        degree = {f: len(adj[f]) for f in comp}
+        alive = set(comp)
+        # Root choice: the group fovar if present (its rows must survive),
+        # else the max-degree hub so interior combines stay small and the
+        # final contraction uses the balanced matmul.
+        if group_fovar in comp:
+            root = group_fovar
+        else:
+            root = max(comp, key=lambda f: (degree[f], f))
+
+        while len(alive) > 1:
+            # pick a leaf of the join tree (tree guaranteed above)
+            leaf = min(f for f in alive if degree[f] <= 1 and f != root)
+            # its single remaining edge
+            edge = next(
+                (rn, fs) for rn, fs in remaining_edges.items() if leaf in fs
+            )
+            rname, (f1, f2) = edge
+            other = f2 if leaf == f1 else f1
+            # fold the leaf's pending messages into one (leaf-side combine)
+            msg, cards, folded = state[leaf][0]
+            for m2, c2, f2_ in state[leaf][1:]:
+                msg, _ = _combine_messages(msg, cards, m2, c2)
+                cards, folded = cards + c2, folded + f2_
+            c_leaf = int(np.prod(cards)) if cards else 1
+            if msg.shape[0] * c_leaf > 2**31:
+                raise MemoryError(
+                    f"message for {leaf} through {rname} has {msg.shape[0]}x{c_leaf} "
+                    "cells; reorder the join tree or marginalize attributes earlier"
+                )
+
+            # relationship attribute codes (n/a-augmented domains; stored codes >= 1)
+            r_cols: list[jax.Array] = []
+            r_cards: list[int] = []
+            r_names: list[str] = []
+            for rv in rel_attrs[rname]:
+                r_cols.append(_rel_attr_column(db, rv))
+                r_cards.append(rv.cardinality)
+                r_names.append(rv.vid)
+            d_r = int(np.prod(r_cards)) if r_cards else 1
+
+            fk_leaf = _rel_fk(db, rname, leaf)
+            fk_other = _rel_fk(db, rname, other)
+            n_other = fovar_n_rows(other)
+            n_rows = int(fk_leaf.shape[0])
+
+            out_card = c_leaf * d_r
+            if n_rows == 0:
+                new_msg = jnp.zeros((n_other, out_card), jnp.float32)
+            else:
+                # weights: leaf message gathered per relationship row
+                w = msg[fk_leaf]  # (rows, c_leaf)
+                # key base: other-entity row index, then leaf codes, then rel codes
+                if r_cols:
+                    rcode = encode_columns(r_cols, r_cards)
+                else:
+                    rcode = jnp.zeros((n_rows,), jnp.int32)
+                base = fk_other.astype(jnp.int32) * out_card + rcode
+                keys2d = base[:, None] + (
+                    jnp.arange(c_leaf, dtype=jnp.int32) * d_r
+                )[None, :]
+                flat = ops.ct_count(
+                    keys2d.reshape(-1),
+                    n_other * out_card,
+                    weights=w.reshape(-1),
+                    impl=impl,
+                )
+                new_msg = flat.reshape(n_other, out_card)
+
+            new_cards = cards + r_cards
+            new_folded = folded + r_names
+
+            state[other].append((new_msg, new_cards, new_folded))
+            alive.discard(leaf)
+            degree[other] -= 1
+            degree[leaf] -= 1
+            del remaining_edges[rname]
+
+        assert next(iter(alive)) == root
+        return finish_root(root, state[root])
+
+    # Contract each component; combine with outer products (cross product).
+    vec = jnp.ones((1,), jnp.float32)
+    all_cards: list[int] = []
+    all_folded: list[str] = []
+    for comp in comps:
+        cvec, cards, folded = contract_component(comp)
+        vec = (vec[:, None] * cvec[None, :]).reshape(-1)
+        all_cards += cards if cards else [1]
+        all_folded += folded if folded else ["__scalar__"]
+
+    shape = tuple(c for c in all_cards)
+    tensor = vec.reshape(shape) if shape else vec.reshape(())
+    # Drop the placeholder axes of attribute-less components (size 1).
+    keep_axes = [i for i, v in enumerate(all_folded) if v != "__scalar__"]
+    tensor = jnp.squeeze(
+        tensor, axis=tuple(i for i, v in enumerate(all_folded) if v == "__scalar__")
+    ) if len(keep_axes) != len(all_folded) else tensor
+    folded_order = tuple(v for v in all_folded if v != "__scalar__")
+    ct = ContingencyTable(folded_order, tensor)
+    out_order = tuple(attr_rvs)
+    if group_fovar is not None:
+        out_order = (GROUP_AXIS,) + out_order
+    return ct.transpose(out_order)
+
+
+# ---------------------------------------------------------------------------
+# Möbius virtual join: full CTs with relationship variables
+# ---------------------------------------------------------------------------
+
+
+def contingency_table(
+    db: RelationalDatabase,
+    rvs: tuple[str, ...],
+    *,
+    impl: str = "auto",
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+    fovar_universe: tuple[str, ...] | None = None,
+) -> ContingencyTable:
+    """Full contingency table for any par-RV set (paper Fig. 3(c)).
+
+    Relationship par-RVs become F/T axes; their attributes get ``n/a`` rows.
+    Internally, any relationship whose attributes appear without its
+    indicator is temporarily added, and summed out at the end.
+
+    With ``group_fovar``, the result carries a leading ``__group__`` axis
+    indexed by that entity's rows (§VI block access); with ``restrict``,
+    counts cover only groundings through the given entity rows (§VI single
+    access).
+    """
+    cat = db.catalog
+    want = [cat[v] for v in rvs]
+
+    rel_names: list[str] = []
+    for rv in want:
+        if rv.kind == KIND_REL and rv.table not in rel_names:
+            rel_names.append(rv.table)
+    added: list[str] = []
+    for rv in want:
+        if rv.kind == KIND_REL_ATTR and rv.table not in rel_names:
+            rel_names.append(rv.table)
+            added.append(rv.table)
+
+    attr_rvs = tuple(v.vid for v in want if v.kind != KIND_REL)
+
+    # Fixed population cross product for all branches of the recursion.
+    # An explicit ``fovar_universe`` (e.g. *all* catalog fovars) reproduces
+    # the paper's pre-counting semantics: every count is over the full
+    # grounding space, so scores from different families are commensurable.
+    universe: list[str] = list(fovar_universe) if fovar_universe else []
+    for rv in want:
+        for f in rv.fovars:
+            if f.fid not in universe:
+                universe.append(f.fid)
+    for rname in rel_names:
+        for f in cat.rel_var_of(rname).fovars:
+            if f.fid not in universe:
+                universe.append(f.fid)
+    universe_t = tuple(universe)
+
+    g_prefix: tuple[str, ...] = (GROUP_AXIS,) if group_fovar is not None else ()
+
+    def recurse(
+        remaining: tuple[str, ...], fixed_true: tuple[str, ...], attrs: tuple[str, ...]
+    ) -> ContingencyTable:
+        if not remaining:
+            return ct_conditional(
+                db, attrs, fixed_true, universe_t, impl=impl,
+                group_fovar=group_fovar, restrict=restrict,
+            )
+        r, rest = remaining[0], remaining[1:]
+        r_attr_vids = tuple(
+            v.vid for v in want if v.kind == KIND_REL_ATTR and v.table == r
+        )
+        t_branch = recurse(rest, fixed_true + (r,), attrs)
+        star_attrs = tuple(v for v in attrs if v not in r_attr_vids)
+        star_branch = recurse(rest, fixed_true, star_attrs)
+
+        # Align on all shared axes (deeper indicators, group axis, star
+        # attributes), with this relationship's attribute axes last.
+        shared = tuple(v for v in t_branch.rvs if v not in r_attr_vids)
+        t_ct = t_branch.transpose(shared + r_attr_vids)
+        n_r_axes = len(r_attr_vids)
+        t_tab = t_ct.table
+        if n_r_axes:
+            t_sum = jnp.sum(t_tab, axis=tuple(range(t_tab.ndim - n_r_axes, t_tab.ndim)))
+        else:
+            t_sum = t_tab
+        star_tab = star_branch.transpose(shared).table
+        f_count = star_tab - t_sum  # counts with r = False
+
+        # Assemble: new leading axis for the relationship indicator (F=0, T=1),
+        # with r-attr axes present in both branches (F-branch mass at n/a=0).
+        if n_r_axes:
+            r_cards = tuple(cat[v].cardinality for v in r_attr_vids)
+            f_block = jnp.zeros(f_count.shape + r_cards, jnp.float32)
+            idx = (Ellipsis,) + (0,) * n_r_axes
+            f_block = f_block.at[idx].set(f_count)
+            t_block = t_tab
+            # In the T branch, n/a codes (0) are structurally impossible; the
+            # histogram already returns zero there.
+        else:
+            f_block = f_count
+            t_block = t_tab
+        stacked = jnp.stack([f_block, t_block], axis=0)
+        rel_vid = cat.rel_var_of(r).vid
+        return ContingencyTable((rel_vid,) + shared + r_attr_vids, stacked)
+
+    full = recurse(tuple(rel_names), (), attr_rvs)
+    # Sum out indicators that were added only to support their attributes.
+    if added:
+        keep = g_prefix + tuple(v.vid for v in want)
+        full = full.marginal(keep)
+    return full.transpose(g_prefix + tuple(rvs))
+
+
+def joint_contingency_table(
+    db: RelationalDatabase, *, impl: str = "auto"
+) -> ContingencyTable:
+    """The pre-counting joint CT over *all* par-RVs (paper §VII-B).
+
+    This is the maximally-challenging count-manager workload: every entity
+    attribute, relationship indicator and relationship attribute of the
+    catalog in one table.  Local family CTs are then GROUP BY marginals
+    (:meth:`ContingencyTable.marginal`), which is why pre-counting makes
+    structure search fast.
+    """
+    vids = tuple(v.vid for v in db.catalog.par_rvs)
+    cells = math.prod(db.catalog[v].cardinality for v in vids)
+    if cells > 2**28:
+        raise MemoryError(
+            f"joint CT would have {cells:.3g} dense cells; use factored/on-demand "
+            "counting (ct_conditional + contingency_table on family subsets)"
+        )
+    return contingency_table(db, vids, impl=impl)

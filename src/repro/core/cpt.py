@@ -1,0 +1,89 @@
+"""The Parameter Manager (paper §V-B): factor tables / CPTs from count tables.
+
+Maximum-likelihood estimates are observed child frequencies given parent
+configurations; in the RDBMS this is a NATURAL JOIN of the family CT with a
+parent-marginal GROUP BY subquery, here a segmented row-normalization
+(Pallas ``mle_cpt`` kernel on TPU).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .bn import BayesNet
+from .counts import ContingencyTable
+from .schema import VariableCatalog
+
+
+@dataclass(frozen=True)
+class FactorTable:
+    """The ``@par-RVID@_CPT`` table: P(child | parents) for one family.
+
+    ``table`` is dense with axes ordered (*parents, child) — the same layout
+    as the family contingency table, so likelihood contractions are
+    co-indexed elementwise products.
+    """
+
+    child: str
+    parents: tuple[str, ...]
+    table: jax.Array  # float32 (*parent_cards, child_card)
+
+    @property
+    def rvs(self) -> tuple[str, ...]:
+        return self.parents + (self.child,)
+
+    @property
+    def n_parent_configs(self) -> int:
+        return int(np.prod(self.table.shape[:-1])) if self.table.ndim > 1 else 1
+
+    @property
+    def n_params(self) -> int:
+        """Free parameters: (#parent configs) x (child cardinality - 1) (§V-C.1)."""
+        return self.n_parent_configs * (self.table.shape[-1] - 1)
+
+
+def family_ct(joint_or_local: ContingencyTable, child: str, parents: tuple[str, ...]) -> ContingencyTable:
+    """Family CT with axes (*parents, child) from any CT covering the family."""
+    return joint_or_local.marginal(tuple(parents) + (child,))
+
+
+def mle_factor(
+    fct: ContingencyTable,
+    child: str,
+    parents: tuple[str, ...],
+    alpha: float = 0.0,
+    *,
+    impl: str = "auto",
+) -> FactorTable:
+    """Maximum-likelihood CPT from a family contingency table."""
+    ct = fct.transpose(tuple(parents) + (child,))
+    t = ct.table
+    child_card = t.shape[-1]
+    flat = t.reshape(-1, child_card)
+    cpt = ops.mle_cpt(flat, alpha, impl=impl)
+    return FactorTable(child, tuple(parents), cpt.reshape(t.shape))
+
+
+def learn_parameters(
+    bn: BayesNet,
+    counts_of: "callable",
+    alpha: float = 0.0,
+    *,
+    impl: str = "auto",
+) -> dict[str, FactorTable]:
+    """Estimate every family's CPT.  ``counts_of(rvs) -> ContingencyTable``.
+
+    ``counts_of`` is the count-manager handle — either marginals of a
+    pre-counted joint CT or on-demand queries (paper §VII-B discusses both).
+    """
+    factors = {}
+    for child in bn.rvs:
+        parents = tuple(bn.parents[child])
+        fct = counts_of(tuple(parents) + (child,))
+        factors[child] = mle_factor(fct, child, parents, alpha, impl=impl)
+    return factors

@@ -1,0 +1,189 @@
+"""Int-encoded relational database instances.
+
+The RDBMS stores tables of labelled values; the TPU adaptation stores every
+column as a dense ``int32`` code array (codes defined by the par-RV domains in
+the :class:`~repro.core.schema.VariableCatalog`).  Entity tables use their row
+index as the implicit primary key, so a relationship table's foreign-key
+columns are simply row indices into the referenced entity tables — a join is a
+``jnp.take``.
+
+This module is deliberately framework-light: plain pytrees of arrays so that
+tables can be donated to jitted count kernels and sharded with pjit/shard_map.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from .schema import RelationalSchema, VariableCatalog, analyze_schema
+
+
+@dataclass(frozen=True)
+class EntityTable:
+    """One entity population: ``attrs[name]`` is an int32 code array (n_rows,)."""
+
+    name: str
+    n_rows: int
+    attrs: Mapping[str, jnp.ndarray]
+
+    def column(self, attr: str) -> jnp.ndarray:
+        return self.attrs[attr]
+
+
+@dataclass(frozen=True)
+class RelationshipTable:
+    """One relationship instance table.
+
+    ``fk1``/``fk2`` are row indices into the two referenced entity tables
+    (ordered as in the :class:`RelationshipDecl`).  Only *true* groundings are
+    stored (as in the SQL tables); the count manager derives the ``F`` counts
+    with the Möbius virtual join.
+    """
+
+    name: str
+    n_rows: int
+    fk1: jnp.ndarray
+    fk2: jnp.ndarray
+    attrs: Mapping[str, jnp.ndarray]  # codes in the n/a-augmented domain (so >= 1)
+
+    def column(self, attr: str) -> jnp.ndarray:
+        return self.attrs[attr]
+
+
+@dataclass(frozen=True)
+class RelationalDatabase:
+    """A full database instance = one joint assignment X = x (paper §II-A)."""
+
+    schema: RelationalSchema
+    catalog: VariableCatalog
+    entities: Mapping[str, EntityTable]
+    relationships: Mapping[str, RelationshipTable]
+
+    @property
+    def total_tuples(self) -> int:
+        return int(
+            sum(t.n_rows for t in self.entities.values())
+            + sum(t.n_rows for t in self.relationships.values())
+        )
+
+    def entity(self, name: str) -> EntityTable:
+        return self.entities[name]
+
+    def relationship(self, name: str) -> RelationshipTable:
+        return self.relationships[name]
+
+    def validate(self) -> None:
+        """Cheap invariant checks (used by property tests)."""
+        for decl in self.schema.entities:
+            t = self.entities[decl.name]
+            for attr, dom in decl.attributes:
+                col = np.asarray(t.attrs[attr])
+                assert col.shape == (t.n_rows,), (decl.name, attr, col.shape)
+                assert col.min(initial=0) >= 0 and col.max(initial=0) < len(dom)
+        for decl in self.schema.relationships:
+            t = self.relationships[decl.name]
+            n1 = self.entities[decl.entities[0]].n_rows
+            n2 = self.entities[decl.entities[1]].n_rows
+            fk1, fk2 = np.asarray(t.fk1), np.asarray(t.fk2)
+            assert fk1.shape == fk2.shape == (t.n_rows,)
+            if t.n_rows:
+                assert fk1.min() >= 0 and fk1.max() < n1, decl.name
+                assert fk2.min() >= 0 and fk2.max() < n2, decl.name
+            for attr, dom in decl.attributes:
+                col = np.asarray(t.attrs[attr])
+                # stored groundings are true, so codes are in the declared
+                # domain shifted by one (0 is reserved for n/a)
+                assert col.shape == (t.n_rows,)
+                if t.n_rows:
+                    assert col.min() >= 1 and col.max() <= len(dom), (decl.name, attr)
+
+
+def from_labels(
+    schema: RelationalSchema,
+    entity_rows: Mapping[str, Mapping[str, list]],
+    relationship_rows: Mapping[str, dict],
+) -> RelationalDatabase:
+    """Build a database from labelled (string-valued) rows.
+
+    ``entity_rows[table][attr]`` is a list of labels (one per entity row).
+    ``relationship_rows[table]`` is a dict with keys ``fk1``, ``fk2`` (lists of
+    row indices) and ``attrs`` (mapping attr -> list of labels).
+    """
+    catalog = analyze_schema(schema)
+    entities = {}
+    for decl in schema.entities:
+        cols = entity_rows[decl.name]
+        n = len(next(iter(cols.values()))) if cols else 0
+        attrs = {}
+        for attr, dom in decl.attributes:
+            codes = np.array([dom.index(v) for v in cols[attr]], dtype=np.int32)
+            attrs[attr] = jnp.asarray(codes)
+            n = len(codes)
+        entities[decl.name] = EntityTable(decl.name, n, attrs)
+
+    relationships = {}
+    for decl in schema.relationships:
+        spec = relationship_rows.get(decl.name, {"fk1": [], "fk2": [], "attrs": {}})
+        fk1 = jnp.asarray(np.array(spec["fk1"], dtype=np.int32))
+        fk2 = jnp.asarray(np.array(spec["fk2"], dtype=np.int32))
+        attrs = {}
+        for attr, dom in decl.attributes:
+            labels = spec["attrs"][attr]
+            codes = np.array([dom.index(v) + 1 for v in labels], dtype=np.int32)  # +1: n/a==0
+            attrs[attr] = jnp.asarray(codes)
+        relationships[decl.name] = RelationshipTable(
+            decl.name, int(fk1.shape[0]), fk1, fk2, attrs
+        )
+
+    db = RelationalDatabase(schema, catalog, entities, relationships)
+    db.validate()
+    return db
+
+
+def university_db() -> RelationalDatabase:
+    """The paper's running example (Figure 2): Student, Professor, RA."""
+    from .schema import make_schema
+
+    schema = make_schema(
+        entities={
+            "student": {
+                "intelligence": ("1", "2", "3"),
+                "ranking": ("1", "2"),
+            },
+            "prof": {
+                "popularity": ("1", "2", "3"),
+                "teachingability": ("1", "2"),
+            },
+        },
+        relationships={
+            "RA": (
+                ("prof", "student"),
+                {
+                    "salary": ("low", "med", "high"),
+                    "capability": ("1", "2", "3"),
+                },
+            ),
+        },
+    )
+    # Figure 2 instances.  Students: jack, kim, paul.  Profs: jim, oliver, david.
+    students = {"intelligence": ["2", "3", "1"], "ranking": ["1", "1", "2"]}
+    profs = {"popularity": ["2", "3", "2"], "teachingability": ["1", "1", "2"]}
+    # RA rows: (jack,oliver,high,3), (kim,oliver,low,1), (paul,jim,med,2),
+    #          (kim,david,high,2).  fk1 indexes prof, fk2 indexes student.
+    ra = {
+        "fk1": [1, 1, 0, 2],   # oliver, oliver, jim, david
+        "fk2": [0, 1, 2, 1],   # jack, kim, paul, kim
+        "attrs": {
+            "salary": ["high", "low", "med", "high"],
+            "capability": ["3", "1", "2", "2"],
+        },
+    }
+    return from_labels(
+        schema,
+        entity_rows={"student": students, "prof": profs},
+        relationship_rows={"RA": ra},
+    )

@@ -1,0 +1,194 @@
+"""Distributed counting and prediction — FactorBase pushed onto a TPU mesh.
+
+The paper runs on single-node MySQL; the scalability story at 512+ chips is
+the classic star-schema split: *fact* (relationship) tables are sharded by
+row over the data axes of the mesh, *dimension* (entity) tables are
+replicated.  Each device histograms its row shard with the Pallas
+``ct_count`` kernel and a ``psum`` over the data axes yields the global
+contingency table — GROUP BY COUNT as an all-reduce of partial aggregates,
+which is exactly how a distributed RDBMS executes the same query plan.
+
+Block prediction shards the *test entities* instead: the grouped target CT
+rows live on the device that owns the entity, the (small) factor tables are
+replicated, and scoring is a local matmul with no collective at all.
+
+Everything here is shard_map-first so the same code lowers on the production
+meshes (``launch/mesh.py``) for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ops
+from .counts import ContingencyTable, encode_columns
+from .database import RelationalDatabase
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All mesh axes except 'model' carry data shards for counting."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def sharded_ct_count(
+    keys: jax.Array,
+    num_bins: int,
+    mesh: Mesh,
+    *,
+    weights: jax.Array | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """GROUP BY COUNT with rows sharded over the mesh's data axes.
+
+    ``keys`` must be padded (with -1) to a multiple of the data-axis device
+    count; the result is a replicated (num_bins,) count vector.
+    """
+    axes = _data_axes(mesh)
+
+    def local(keys_shard, w_shard):
+        part = ops.ct_count(keys_shard, num_bins, w_shard, impl=impl)
+        return jax.lax.psum(part.astype(jnp.float32), axes)
+
+    w = jnp.ones(keys.shape, jnp.float32) if weights is None else weights
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes), P(axes)),
+        out_specs=P(),
+    )
+    return fn(keys, w)
+
+
+def pad_rows(arr: jax.Array, multiple: int, fill) -> jax.Array:
+    n = arr.shape[0]
+    pad = -n % multiple
+    if pad == 0:
+        return arr
+    return jnp.concatenate([arr, jnp.full((pad,) + arr.shape[1:], fill, arr.dtype)])
+
+
+def single_rel_ct_sharded(
+    db: RelationalDatabase,
+    rel_name: str,
+    rvs: Sequence[str],
+    mesh: Mesh,
+    *,
+    impl: str = "auto",
+) -> ContingencyTable:
+    """Distributed Figure-6 metaquery + Möbius virtual join for one relationship.
+
+    ``rvs`` must consist of: the relationship indicator (optional), its
+    attributes, and entity attributes of its two first-order variables.
+    The relationship rows are sharded; entity tables are replicated (they
+    are the small dimension tables).  Validated cell-exactly against the
+    single-device :func:`repro.core.counts.contingency_table` in tests.
+    """
+    cat = db.catalog
+    rel_rv = cat.rel_var_of(rel_name)
+    f1, f2 = (f.fid for f in rel_rv.fovars)
+    rel_t = db.relationships[rel_name]
+
+    want = [cat[v] for v in rvs]
+    ent1 = [v for v in want if v.kind == "entity_attr" and v.fovars[0].fid == f1]
+    ent2 = [v for v in want if v.kind == "entity_attr" and v.fovars[0].fid == f2]
+    rattrs = [v for v in want if v.kind == "rel_attr"]
+    has_indicator = any(v.kind == "rel" for v in want)
+    for v in rattrs:
+        assert v.table == rel_name, (v.vid, rel_name)
+
+    # --- T-part: histogram over sharded relationship rows ------------------
+    cols: list[jax.Array] = []
+    cards: list[int] = []
+    order: list[str] = []
+    e1t, e2t = db.entities[cat.fovar(f1).entity], db.entities[cat.fovar(f2).entity]
+    for v in ent1:
+        cols.append(e1t.attrs[v.column][rel_t.fk1])
+        cards.append(v.cardinality)
+        order.append(v.vid)
+    for v in ent2:
+        cols.append(e2t.attrs[v.column][rel_t.fk2])
+        cards.append(v.cardinality)
+        order.append(v.vid)
+    for v in rattrs:
+        cols.append(rel_t.attrs[v.column])
+        cards.append(v.cardinality)
+        order.append(v.vid)
+
+    n_dev = int(np.prod([mesh.shape[a] for a in _data_axes(mesh)]))
+    nbins = int(np.prod(cards)) if cards else 1
+    if cols:
+        keys = encode_columns(cols, cards)
+    else:
+        keys = jnp.zeros((rel_t.n_rows,), jnp.int32)
+    keys = pad_rows(keys, max(n_dev, 1), -1)
+    t_flat = sharded_ct_count(keys, nbins, mesh, impl=impl)
+    t_block = t_flat.reshape(tuple(cards) if cards else ())
+
+    # --- don't-care part: outer product of replicated entity histograms ----
+    def ent_hist(et, attrs_):
+        if not attrs_:
+            return jnp.asarray(float(et.n_rows)), []
+        cs = [et.attrs[v.column] for v in attrs_]
+        cds = [v.cardinality for v in attrs_]
+        h = ops.ct_count(encode_columns(cs, cds), int(np.prod(cds)), impl=impl)
+        return h.astype(jnp.float32).reshape(tuple(cds)), cds
+
+    # ent_hist returns a scalar population size when the query has no
+    # attributes of that side — the outer product then degenerates to a
+    # broadcast multiply, which is exactly the cross-product count.
+    h1, _ = ent_hist(e1t, ent1)
+    h2, _ = ent_hist(e2t, ent2)
+    star = jnp.tensordot(jnp.atleast_1d(h1), jnp.atleast_1d(h2), axes=0)
+    star = star.reshape(tuple(v.cardinality for v in ent1 + ent2))
+
+    # --- Möbius: F-block = star - sum_over_rel_attrs(T) ---------------------
+    n_r = len(rattrs)
+    t_sum = t_block.sum(axis=tuple(range(t_block.ndim - n_r, t_block.ndim))) if n_r else t_block
+    f_count = star - t_sum
+    if n_r:
+        r_cards = tuple(v.cardinality for v in rattrs)
+        f_block = jnp.zeros(f_count.shape + r_cards, jnp.float32)
+        f_block = f_block.at[(Ellipsis,) + (0,) * n_r].set(f_count)
+    else:
+        f_block = f_count
+
+    if has_indicator:
+        table = jnp.stack([f_block, t_block.astype(jnp.float32)], axis=0)
+        names = (rel_rv.vid,) + tuple(order)
+    else:
+        table = f_block + t_block.astype(jnp.float32)
+        names = tuple(order)
+    ct = ContingencyTable(names, table)
+    return ct.transpose(tuple(rvs))
+
+
+def sharded_block_predict(
+    counts: jax.Array,
+    log_cpt: jax.Array,
+    mesh: Mesh,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Block scoring with test entities sharded over the data axes.
+
+    counts (E, C) is sharded on E; log_cpt (C, Y) is replicated; the output
+    (E, Y) stays sharded — zero collectives, which is the §VI point at scale.
+    """
+    axes = _data_axes(mesh)
+
+    def local(c_shard, l_rep):
+        return ops.block_predict(c_shard, l_rep, impl=impl)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(None, None)),
+        out_specs=P(axes, None),
+    )
+    return fn(counts, log_cpt)

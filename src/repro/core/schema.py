@@ -1,0 +1,300 @@
+"""Relational schema + par-RV catalog — the paper's Random Variable Database (VDB).
+
+FactorBase §III: the *schema analyzer* reads key constraints from the system
+catalog and automatically produces metadata about the parametrized random
+variables (par-RVs) of the statistical model:
+
+    Entity set            ->  first-order variable       (``S``, ``P``)
+    Entity attribute      ->  unary par-RV               (``Intelligence(S)``)
+    Relationship set      ->  boolean par-RV              (``RA(P,S)``)
+    Relationship attribute->  binary par-RV               (``Salary(P,S)``)
+
+In the RDBMS this metadata lives in tables (``Relationship``, ``AttributeColumns``,
+``Domain``, ...).  Here it lives in :class:`VariableCatalog`, a frozen, hashable
+object that plays the same role: every downstream module (count manager, model
+manager, structure search, prediction) is *driven by this metadata*, never by
+hard-coded table knowledge — the JAX analogue of the paper's metaqueries.
+
+Only finite domains are supported (as in the paper).  Relationship attributes
+get the distinguished value ``N_A`` at code 0, used when the relationship does
+not hold (paper §III, following Milch et al.'s BLOG convention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+N_A = "n/a"  # distinguished "undefined" value for relationship attributes
+
+
+# ---------------------------------------------------------------------------
+# Schema declarations (the analogue of CREATE TABLE + key constraints)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EntityDecl:
+    """An entity table: implicit primary key = row index, finite-domain attributes."""
+
+    name: str
+    attributes: tuple[tuple[str, tuple[str, ...]], ...]  # (attr_name, domain values)
+
+    def domain(self, attr: str) -> tuple[str, ...]:
+        for a, dom in self.attributes:
+            if a == attr:
+                return dom
+        raise KeyError(f"entity {self.name!r} has no attribute {attr!r}")
+
+
+@dataclass(frozen=True)
+class RelationshipDecl:
+    """A binary relationship table (paper footnote 2: relationships are binary).
+
+    ``entities`` names the two referenced entity tables; a *self-relationship*
+    (e.g. ``Borders(Country, Country)``) repeats the same name and yields two
+    first-order variables over the same population.
+    """
+
+    name: str
+    entities: tuple[str, str]
+    attributes: tuple[tuple[str, tuple[str, ...]], ...] = ()
+
+    @property
+    def is_self(self) -> bool:
+        return self.entities[0] == self.entities[1]
+
+    def domain(self, attr: str) -> tuple[str, ...]:
+        for a, dom in self.attributes:
+            if a == attr:
+                return dom
+        raise KeyError(f"relationship {self.name!r} has no attribute {attr!r}")
+
+
+@dataclass(frozen=True)
+class RelationalSchema:
+    entities: tuple[EntityDecl, ...]
+    relationships: tuple[RelationshipDecl, ...]
+
+    def entity(self, name: str) -> EntityDecl:
+        for e in self.entities:
+            if e.name == name:
+                return e
+        raise KeyError(f"no entity table {name!r}")
+
+    def relationship(self, name: str) -> RelationshipDecl:
+        for r in self.relationships:
+            if r.name == name:
+                return r
+        raise KeyError(f"no relationship table {name!r}")
+
+    def validate(self) -> None:
+        names = [e.name for e in self.entities] + [r.name for r in self.relationships]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate table names in schema: {names}")
+        for r in self.relationships:
+            for en in r.entities:
+                self.entity(en)  # raises if missing
+        for e in self.entities:
+            for _, dom in e.attributes:
+                if len(dom) < 2:
+                    raise ValueError(f"attribute domains need >=2 values, got {dom}")
+        for r in self.relationships:
+            for a, dom in r.attributes:
+                if N_A in dom:
+                    raise ValueError(
+                        f"{r.name}.{a}: do not declare {N_A!r}; it is added automatically"
+                    )
+
+
+def make_schema(
+    entities: Mapping[str, Mapping[str, Sequence[str]]],
+    relationships: Mapping[str, tuple[tuple[str, str], Mapping[str, Sequence[str]]]],
+) -> RelationalSchema:
+    """Convenience constructor from plain dicts (used by tests and generators)."""
+    ents = tuple(
+        EntityDecl(name, tuple((a, tuple(dom)) for a, dom in attrs.items()))
+        for name, attrs in entities.items()
+    )
+    rels = tuple(
+        RelationshipDecl(name, ents_pair, tuple((a, tuple(dom)) for a, dom in attrs.items()))
+        for name, (ents_pair, attrs) in relationships.items()
+    )
+    schema = RelationalSchema(ents, rels)
+    schema.validate()
+    return schema
+
+
+# ---------------------------------------------------------------------------
+# par-RVs (the VDB rows)
+# ---------------------------------------------------------------------------
+
+KIND_ENTITY_ATTR = "entity_attr"  # 1Variables in the paper's VDB schema
+KIND_REL = "rel"                  # Relationship
+KIND_REL_ATTR = "rel_attr"        # 2Variables
+
+
+@dataclass(frozen=True)
+class FirstOrderVar:
+    """A typed first-order variable, e.g. ``S0`` ranging over students."""
+
+    fid: str          # "student0"
+    entity: str       # "student"
+    index: int        # 0 normally; 1 for the second copy in a self-relationship
+
+
+@dataclass(frozen=True)
+class ParRV:
+    """One parametrized random variable with its finite domain.
+
+    ``domain[i]`` is the value with integer code ``i``; all tensor layers work
+    in codes and only the catalog can decode back to labels.
+    """
+
+    vid: str                         # e.g. "intelligence(student0)"
+    kind: str                        # one of the KIND_* constants
+    domain: tuple[str, ...]
+    fovars: tuple[FirstOrderVar, ...]
+    table: str                       # source table name
+    column: str | None = None        # source column (None for relationship par-RVs)
+
+    @property
+    def arity(self) -> int:
+        return len(self.fovars)
+
+    @property
+    def cardinality(self) -> int:
+        return len(self.domain)
+
+    def code(self, value: str) -> int:
+        return self.domain.index(value)
+
+    def __repr__(self) -> str:  # keep test output readable
+        return f"ParRV({self.vid})"
+
+
+@dataclass(frozen=True)
+class VariableCatalog:
+    """The Random Variable Database: all par-RVs derived from a schema."""
+
+    schema: RelationalSchema
+    par_rvs: tuple[ParRV, ...]
+    fovars: tuple[FirstOrderVar, ...]
+
+    def __getitem__(self, vid: str) -> ParRV:
+        for v in self.par_rvs:
+            if v.vid == vid:
+                return v
+        raise KeyError(f"no par-RV {vid!r}")
+
+    def of_kind(self, kind: str) -> tuple[ParRV, ...]:
+        return tuple(v for v in self.par_rvs if v.kind == kind)
+
+    @property
+    def entity_attrs(self) -> tuple[ParRV, ...]:
+        return self.of_kind(KIND_ENTITY_ATTR)
+
+    @property
+    def rel_vars(self) -> tuple[ParRV, ...]:
+        return self.of_kind(KIND_REL)
+
+    @property
+    def rel_attrs(self) -> tuple[ParRV, ...]:
+        return self.of_kind(KIND_REL_ATTR)
+
+    def rel_var_of(self, rel_name: str) -> ParRV:
+        for v in self.rel_vars:
+            if v.table == rel_name:
+                return v
+        raise KeyError(f"no relationship par-RV for table {rel_name!r}")
+
+    def attrs_of_rel(self, rel_name: str) -> tuple[ParRV, ...]:
+        return tuple(v for v in self.rel_attrs if v.table == rel_name)
+
+    def attrs_of_fovar(self, fid: str) -> tuple[ParRV, ...]:
+        return tuple(
+            v for v in self.entity_attrs if v.fovars[0].fid == fid
+        )
+
+    def fovar(self, fid: str) -> FirstOrderVar:
+        for f in self.fovars:
+            if f.fid == fid:
+                return f
+        raise KeyError(f"no first-order variable {fid!r}")
+
+
+def _fovar_id(entity: str, index: int) -> str:
+    return f"{entity}{index}"
+
+
+def analyze_schema(schema: RelationalSchema) -> VariableCatalog:
+    """The schema analyzer (paper §III + Appendix): schema -> VDB.
+
+    Mirrors the MySQL ``AchemaAnalyzer.sql`` pipeline: discover first-order
+    variables from entity tables (two copies for populations that appear on
+    both sides of a self-relationship), then emit 1Variables (entity
+    attributes), Relationship par-RVs, and 2Variables (relationship
+    attributes) with the ``n/a``-augmented domains.
+    """
+    schema.validate()
+
+    # Which entity populations need a second first-order variable?
+    needs_second = {r.entities[0] for r in schema.relationships if r.is_self}
+
+    fovars: list[FirstOrderVar] = []
+    for ent in schema.entities:
+        fovars.append(FirstOrderVar(_fovar_id(ent.name, 0), ent.name, 0))
+        if ent.name in needs_second:
+            fovars.append(FirstOrderVar(_fovar_id(ent.name, 1), ent.name, 1))
+    fov_by_id = {f.fid: f for f in fovars}
+
+    par_rvs: list[ParRV] = []
+
+    # 1Variables — entity attributes.  For entities with two first-order
+    # variables the attribute par-RV is emitted for each copy (paper's
+    # PVariables construction with index_number 0/1).
+    for ent in schema.entities:
+        copies = [0, 1] if ent.name in needs_second else [0]
+        for attr, dom in ent.attributes:
+            for idx in copies:
+                fid = _fovar_id(ent.name, idx)
+                par_rvs.append(
+                    ParRV(
+                        vid=f"{attr}({fid})",
+                        kind=KIND_ENTITY_ATTR,
+                        domain=tuple(dom),
+                        fovars=(fov_by_id[fid],),
+                        table=ent.name,
+                        column=attr,
+                    )
+                )
+
+    # Relationship par-RVs (boolean: F=0, T=1) and 2Variables.
+    for rel in schema.relationships:
+        e1, e2 = rel.entities
+        idx2 = 1 if rel.is_self else 0
+        f1, f2 = fov_by_id[_fovar_id(e1, 0)], fov_by_id[_fovar_id(e2, idx2)]
+        par_rvs.append(
+            ParRV(
+                vid=f"{rel.name}({f1.fid},{f2.fid})",
+                kind=KIND_REL,
+                domain=("F", "T"),
+                fovars=(f1, f2),
+                table=rel.name,
+                column=None,
+            )
+        )
+        for attr, dom in rel.attributes:
+            par_rvs.append(
+                ParRV(
+                    vid=f"{attr}({f1.fid},{f2.fid})",
+                    kind=KIND_REL_ATTR,
+                    domain=(N_A,) + tuple(dom),  # code 0 == n/a
+                    fovars=(f1, f2),
+                    table=rel.name,
+                    column=attr,
+                )
+            )
+
+    return VariableCatalog(schema=schema, par_rvs=tuple(par_rvs), fovars=tuple(fovars))

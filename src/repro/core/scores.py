@@ -1,0 +1,94 @@
+"""Model Score Computation (paper §V-C): log-likelihood, #params, AIC/BIC.
+
+BN scores are decomposable: the total is a sum of per-family local scores,
+each computed from the family CT and factor table by the
+``SUM(count * log cp)`` contraction (Pallas ``factor_loglik`` kernel on TPU).
+The ``Scores`` MDB table becomes :class:`ScoreTable`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .bn import BayesNet
+from .counts import ContingencyTable
+from .cpt import FactorTable, mle_factor
+
+
+@dataclass(frozen=True)
+class FamilyScore:
+    child: str
+    loglik: float
+    n_params: int
+
+    def aic(self) -> float:
+        """Paper's convention: AIC(G, D) = ln P(D) - #par(G)."""
+        return self.loglik - self.n_params
+
+    def bic(self, n_groundings: float) -> float:
+        return self.loglik - 0.5 * self.n_params * math.log(max(n_groundings, 1.0))
+
+
+@dataclass(frozen=True)
+class ScoreTable:
+    """The MDB ``Scores`` table: per-family rows + decomposable totals."""
+
+    families: dict[str, FamilyScore]
+
+    @property
+    def loglik(self) -> float:
+        return sum(f.loglik for f in self.families.values())
+
+    @property
+    def n_params(self) -> int:
+        return sum(f.n_params for f in self.families.values())
+
+    @property
+    def aic(self) -> float:
+        return sum(f.aic() for f in self.families.values())
+
+    def bic(self, n_groundings: float) -> float:
+        return sum(f.bic(n_groundings) for f in self.families.values())
+
+
+def family_loglik(
+    fct: ContingencyTable, factor: FactorTable, *, impl: str = "auto"
+) -> float:
+    """sum(count * log cp) for one family (the §V-C SQL query)."""
+    ct = fct.transpose(factor.rvs)
+    return float(ops.factor_loglik(ct.table, factor.table, impl=impl))
+
+
+def score_family(
+    counts_of,
+    child: str,
+    parents: tuple[str, ...],
+    alpha: float = 0.0,
+    *,
+    impl: str = "auto",
+) -> FamilyScore:
+    """MLE-fit one family and return its local score row."""
+    fct = counts_of(tuple(parents) + (child,))
+    factor = mle_factor(fct, child, parents, alpha, impl=impl)
+    ll = family_loglik(fct, factor, impl=impl)
+    return FamilyScore(child, ll, factor.n_params)
+
+
+def score_structure(
+    bn: BayesNet,
+    counts_of,
+    alpha: float = 0.0,
+    *,
+    impl: str = "auto",
+) -> ScoreTable:
+    """Score every family of a structure (decomposable total)."""
+    return ScoreTable(
+        {
+            child: score_family(counts_of, child, tuple(bn.parents[child]), alpha, impl=impl)
+            for child in bn.rvs
+        }
+    )

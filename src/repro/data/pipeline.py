@@ -1,0 +1,129 @@
+"""Deterministic synthetic LM data pipeline.
+
+Design goals (1000+-node posture):
+  * **stateless-resumable**: batch at step ``t`` is a pure function of
+    (seed, step) — no iterator state to checkpoint; straggler/hot-spare
+    recovery just asks for step t again (DESIGN.md §5).
+  * **host-shardable**: each host materializes only its slice
+    (``host_index / host_count``); on a real multi-host pod the global
+    array is assembled with ``jax.make_array_from_process_local_data``.
+  * **structured, not uniform noise**: tokens follow a seeded Markov chain
+    + copy motif so that a trained model's loss actually decreases
+    (examples/train_lm.py shows >2 nats of learnable signal).
+
+The same module feeds the relational pipeline: ``relational_token_stream``
+serializes FactorBase ground atoms into token sequences, which is how the
+paper's databases become an LM pretraining corpus (count-manager tie-in:
+domain-value frequencies are GROUP BY counts via ``kernels.ct_count``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_motifs: int = 64
+    motif_len: int = 16
+
+
+def _rng_for(cfg: DataConfig, step: int, host_index: int = 0) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, host_index])
+    )
+
+
+def _motifs(cfg: DataConfig) -> np.ndarray:
+    rng = np.random.default_rng(cfg.seed)
+    return rng.integers(2, cfg.vocab, size=(cfg.n_motifs, cfg.motif_len))
+
+
+def batch_at(
+    cfg: DataConfig, step: int, *, host_index: int = 0, host_count: int = 1
+) -> dict[str, np.ndarray]:
+    """Batch for ``step`` (this host's slice): tokens + next-token labels."""
+    assert cfg.global_batch % host_count == 0
+    b = cfg.global_batch // host_count
+    rng = _rng_for(cfg, step, host_index)
+    motifs = _motifs(cfg)
+
+    # order-1 Markov backbone with a small state space projected to vocab
+    n_states = min(cfg.vocab, 257)
+    trans = np.random.default_rng(cfg.seed + 1).dirichlet(
+        np.full(n_states, 0.2), size=n_states
+    )
+    seq = np.empty((b, cfg.seq_len + 1), np.int64)
+    state = rng.integers(0, n_states, size=b)
+    u = rng.random((b, cfg.seq_len + 1))
+    cum = np.cumsum(trans, axis=1)
+    for t in range(cfg.seq_len + 1):
+        state = (u[:, t : t + 1] < cum[state]).argmax(axis=1)
+        seq[:, t] = state
+    seq = seq % cfg.vocab
+
+    # splice in copyable motifs (induction-head signal)
+    n_splice = cfg.seq_len // (4 * cfg.motif_len)
+    for i in range(b):
+        ids = rng.integers(0, cfg.n_motifs, size=n_splice)
+        pos = rng.integers(0, cfg.seq_len - cfg.motif_len, size=n_splice)
+        for m, p in zip(ids, pos):
+            seq[i, p : p + cfg.motif_len] = motifs[m]
+
+    return {
+        "tokens": seq[:, :-1].astype(np.int32),
+        "labels": seq[:, 1:].astype(np.int32),
+    }
+
+
+def relational_token_stream(db, cfg: DataConfig, step: int) -> dict[str, np.ndarray]:
+    """Serialize relationship tuples as token sequences (FactorBase corpus).
+
+    Each relationship row becomes  [REL_ID, e1_attrs..., e2_attrs...,
+    rel_attrs..., SEP]; sequences are concatenations of random rows.  Vocab
+    layout: 0=PAD/SEP, 1..k reserved, attribute codes offset per par-RV so
+    the LM vocabulary mirrors the VDB domains.
+    """
+    rng = _rng_for(cfg, step)
+    cat = db.catalog
+    offsets: dict[str, int] = {}
+    off = 8
+    for v in cat.par_rvs:
+        offsets[v.vid] = off
+        off += v.cardinality
+    assert off <= cfg.vocab, f"vocab {cfg.vocab} < required {off}"
+
+    rows = []
+    for rname, rel in db.relationships.items():
+        rv = cat.rel_var_of(rname)
+        f1, f2 = rv.fovars
+        e1 = db.entities[f1.entity]
+        e2 = db.entities[f2.entity]
+        fk1 = np.asarray(rel.fk1)
+        fk2 = np.asarray(rel.fk2)
+        cols = [np.full(rel.n_rows, offsets[rv.vid] + 1)]  # R = T
+        for a in cat.attrs_of_fovar(f1.fid):
+            cols.append(offsets[a.vid] + np.asarray(e1.attrs[a.column])[fk1])
+        for a in cat.attrs_of_fovar(f2.fid):
+            cols.append(offsets[a.vid] + np.asarray(e2.attrs[a.column])[fk2])
+        for a in cat.attrs_of_rel(rname):
+            cols.append(offsets[a.vid] + np.asarray(rel.attrs[a.column]))
+        rows.append(np.stack(cols, axis=1))
+    atoms = np.concatenate([r.reshape(r.shape[0], -1) for r in rows], axis=0) \
+        if len({r.shape[1] for r in rows}) == 1 else None
+    flat = np.concatenate([np.concatenate([r, np.zeros((r.shape[0], 1), r.dtype)], 1).reshape(-1)
+                           for r in rows])
+    b = cfg.global_batch
+    need = b * (cfg.seq_len + 1)
+    start = rng.integers(0, max(len(flat) - need, 1))
+    stream = np.resize(flat[start:], need).reshape(b, cfg.seq_len + 1)
+    return {
+        "tokens": stream[:, :-1].astype(np.int32),
+        "labels": stream[:, 1:].astype(np.int32),
+    }

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the FactorBase hot spots.
+
+The paper's measured costs live in the count manager (GROUP BY COUNT over
+joins), the parameter manager (CT -> CPT normalization), score computation
+(count x log-parameter contraction) and block test-set prediction (the
+grouped scoring matmul).  Each hot spot has a Pallas kernel (<name>.py), a
+pure-jnp oracle (ref.py) and a jitted dispatching wrapper (ops.py).
+"""
+
+from .ops import block_predict, ct_count, factor_loglik, mle_cpt
+
+__all__ = ["block_predict", "ct_count", "factor_loglik", "mle_cpt"]

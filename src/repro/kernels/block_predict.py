@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for block test-set prediction.
+
+Paper §VI: adding the target-entity id to the SELECT/GROUP BY lists scores a
+whole test set with one query instead of one query per instance (the 10-100x
+"block access" speedup of Figure 9).  In tensor form the grouped target
+contingency table is a dense (entities, family_configs) matrix and scoring
+every entity against every candidate class label is a single MXU matmul:
+
+    scores[e, y] = sum_c target_ct[e, c] * log_cpt[c, y]
+
+This kernel is a classic tiled matmul with a K-loop accumulator resident in
+VMEM; it exists because block prediction is the paper's measured hot spot and
+because its baseline (the per-instance loop) is exactly what we benchmark
+against in ``benchmarks/bench_predict.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BE = 256   # entity rows per tile
+_BY = 128   # class labels per tile
+_BC = 512   # family configurations per K step
+
+
+def _block_predict_kernel(a_ref, l_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        l_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "be", "by", "bc"))
+def block_predict_pallas(
+    counts: jax.Array,
+    log_cpt: jax.Array,
+    *,
+    interpret: bool = False,
+    be: int = _BE,
+    by: int = _BY,
+    bc: int = _BC,
+) -> jax.Array:
+    """scores = counts(E, C) @ log_cpt(C, Y), tiled for VMEM."""
+    e, c = counts.shape
+    c2, y = log_cpt.shape
+    assert c == c2, (counts.shape, log_cpt.shape)
+    be, by, bc = min(be, max(8, e)), min(by, max(128, y)), min(bc, max(128, c))
+    ep, cp, yp = -e % be, -c % bc, -y % by
+    a = jnp.pad(counts.astype(jnp.float32), ((0, ep), (0, cp)))
+    l = jnp.pad(log_cpt.astype(jnp.float32), ((0, cp), (0, yp)))
+
+    out = pl.pallas_call(
+        _block_predict_kernel,
+        grid=((e + ep) // be, (y + yp) // by, (c + cp) // bc),
+        in_specs=[
+            pl.BlockSpec((be, bc), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bc, by), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((be, by), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((e + ep, y + yp), jnp.float32),
+        interpret=interpret,
+    )(a, l)
+    return out[:e, :y]

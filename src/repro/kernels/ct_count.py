@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for GROUP BY COUNT — the count manager's hot loop.
+
+The contingency-table problem (paper §IV) reduces to a histogram of
+mixed-radix composite keys.  A scatter-add histogram is hostile to the TPU
+memory system (random HBM updates); the MXU-native formulation instead
+materializes, per (row-block × bin-block) tile, the one-hot comparison matrix
+in VMEM and contracts it with a ones vector on the MXU:
+
+    counts[j*BK : (j+1)*BK] += ones(1, BN) @ (keys_block[:, None] == bins[None, :])
+
+The grid is (bins, rows) with the row dimension innermost so each bin block's
+VMEM accumulator is revisited consecutively ("arbitrary" semantics — the
+revolving output block stays in VMEM across the row sweep).
+
+Counts are accumulated in float32 (exact below 2**24 per bin per sweep);
+weighted counts (SUM(w) GROUP BY key) reuse the same contraction with the
+one-hot scaled by the weight column.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: the one-hot tile (BN x BK) f32 = 1 MB of VMEM; the lane dim BK
+# is a multiple of 128 for MXU alignment, BN a multiple of 8 for sublanes.
+_BN = 2048
+_BK = 128
+
+
+def _ct_count_kernel(keys_ref, w_ref, out_ref, *, bk: int):
+    j = pl.program_id(0)  # bin block
+    i = pl.program_id(1)  # row block
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # (BN, 1) int32
+    bins = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    onehot = (keys == bins).astype(jnp.float32)  # (BN, BK)
+    onehot = onehot * w_ref[...]  # weights broadcast (BN, 1)
+    ones = jnp.ones((1, keys.shape[0]), jnp.float32)
+    partial = jax.lax.dot_general(
+        ones,
+        onehot,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, BK)
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "interpret", "bn", "bk"))
+def ct_count_pallas(
+    keys: jax.Array,
+    num_bins: int,
+    weights: jax.Array | None = None,
+    *,
+    interpret: bool = False,
+    bn: int = _BN,
+    bk: int = _BK,
+) -> jax.Array:
+    """Histogram of int32 ``keys`` into ``num_bins`` float32 counts.
+
+    Keys outside ``[0, num_bins)`` (e.g. ``-1`` padding) are ignored.
+    """
+    n = keys.shape[0]
+    bn = min(bn, max(8, n))
+    n_pad = -n % bn
+    keys2 = jnp.pad(keys.astype(jnp.int32), (0, n_pad), constant_values=-1)[:, None]
+    if weights is None:
+        w2 = jnp.ones((n + n_pad, 1), jnp.float32)
+    else:
+        w2 = jnp.pad(weights.astype(jnp.float32), (0, n_pad))[:, None]
+    k_pad = -num_bins % bk
+    kb = num_bins + k_pad
+
+    out = pl.pallas_call(
+        functools.partial(_ct_count_kernel, bk=bk),
+        grid=(kb // bk, (n + n_pad) // bn),
+        in_specs=[
+            pl.BlockSpec((bn, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bk), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, kb), jnp.float32),
+        interpret=interpret,
+    )(keys2, w2)
+    return out[0, :num_bins]

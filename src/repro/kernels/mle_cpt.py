@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for maximum-likelihood CPT estimation.
+
+Paper §V-B: the parameter manager computes conditional probabilities from the
+contingency table by a NATURAL JOIN with the parent-marginal subquery.  In
+tensor form the CT is a dense (parent_configs, child_values) matrix and the
+"join" is a segmented row-normalization — one VPU pass per tile:
+
+    cpt[p, c] = (ct[p, c] + alpha) / (sum_c' ct[p, c'] + alpha * C)
+
+The child axis is small (par-RV cardinalities), so each tile holds full rows:
+the row sum never crosses tile boundaries and the grid is 1-D over parent
+blocks.  The child axis is padded to the 128-lane boundary; padded lanes are
+masked out of both numerator and row-sum so smoothing stays exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BP = 512  # parent-config rows per tile
+
+
+def _mle_cpt_kernel(ct_ref, out_ref, *, n_child: int, alpha: float):
+    ct = ct_ref[...]  # (BP, C_pad) f32
+    cpad = ct.shape[1]
+    valid = jax.lax.broadcasted_iota(jnp.int32, (1, cpad), 1) < n_child
+    ct = jnp.where(valid, ct, 0.0)
+    row = jnp.sum(ct, axis=1, keepdims=True)
+    denom = row + alpha * n_child
+    safe = jnp.where(denom > 0, denom, 1.0)
+    cpt = (ct + alpha) / safe
+    uniform = 1.0 / n_child
+    cpt = jnp.where(denom > 0, cpt, uniform)
+    out_ref[...] = jnp.where(valid, cpt, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "interpret", "bp"))
+def mle_cpt_pallas(
+    ct: jax.Array,
+    alpha: float = 0.0,
+    *,
+    interpret: bool = False,
+    bp: int = _BP,
+) -> jax.Array:
+    """Row-normalize a (parents, children) count matrix into a CPT."""
+    p, c = ct.shape
+    bp = min(bp, max(8, p))
+    p_pad = -p % bp
+    c_pad = -c % 128
+    ct2 = jnp.pad(ct.astype(jnp.float32), ((0, p_pad), (0, c_pad)))
+
+    out = pl.pallas_call(
+        functools.partial(_mle_cpt_kernel, n_child=c, alpha=float(alpha)),
+        grid=((p + p_pad) // bp,),
+        in_specs=[pl.BlockSpec((bp, c + c_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bp, c + c_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p + p_pad, c + c_pad), jnp.float32),
+        interpret=interpret,
+    )(ct2)
+    return out[:p, :c]

@@ -1,0 +1,82 @@
+"""Jitted public wrappers around the Pallas kernels with oracle fallback.
+
+Dispatch policy (``impl``):
+  * ``"auto"``   — Pallas (compiled) on TPU; pure-jnp oracle elsewhere.  The
+                   interpret-mode Pallas path exists for *validation*, not
+                   production CPU speed, so auto never picks it.
+  * ``"pallas"`` — force the kernel (interpret=True off-TPU).  Used by tests.
+  * ``"ref"``    — force the oracle.
+
+All wrappers take/return plain arrays so they can be called inside pjit /
+shard_map computations; the count manager's distributed path relies on that.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_predict import block_predict_pallas
+from .ct_count import ct_count_pallas
+from .factor_loglik import factor_loglik_pallas
+from .mle_cpt import mle_cpt_pallas
+
+
+def _use_pallas(impl: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "auto":
+        return on_tpu, False
+    if impl == "pallas":
+        return True, not on_tpu
+    if impl == "ref":
+        return False, False
+    raise ValueError(f"impl must be auto|pallas|ref, got {impl!r}")
+
+
+def ct_count(
+    keys: jax.Array,
+    num_bins: int,
+    weights: jax.Array | None = None,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """GROUP BY COUNT.  Returns int32 counts (float32 when ``weights`` given).
+
+    ``impl="matmul"`` selects the XLA-level MXU formulation (chunked one-hot
+    contraction) — the dry-run path whose HLO carries counting's real FLOPs.
+    """
+    if impl == "matmul":
+        out = ref.ct_count_matmul(keys, num_bins, weights)
+        return out if weights is not None else out.astype(jnp.int32)
+    use, interp = _use_pallas(impl)
+    if use:
+        out = ct_count_pallas(keys, num_bins, weights, interpret=interp)
+    else:
+        out = ref.ct_count_ref(keys, num_bins, weights)
+    return out if weights is not None else out.astype(jnp.int32)
+
+
+def mle_cpt(ct: jax.Array, alpha: float = 0.0, *, impl: str = "auto") -> jax.Array:
+    """Row-normalized CPT from a (parent_configs, child_values) count matrix."""
+    use, interp = _use_pallas(impl)
+    if use:
+        return mle_cpt_pallas(ct, alpha, interpret=interp)
+    return ref.mle_cpt_ref(ct, alpha)
+
+
+def factor_loglik(ct: jax.Array, cpt: jax.Array, *, impl: str = "auto") -> jax.Array:
+    """sum(count * log cp) with the 0*log0 := 0 convention.  Scalar float32."""
+    use, interp = _use_pallas(impl)
+    if use:
+        return factor_loglik_pallas(ct, cpt, interpret=interp)
+    return ref.factor_loglik_ref(ct, cpt)
+
+
+def block_predict(counts: jax.Array, log_cpt: jax.Array, *, impl: str = "auto") -> jax.Array:
+    """scores[e, y] = counts(E, C) @ log_cpt(C, Y) — §VI block access."""
+    use, interp = _use_pallas(impl)
+    if use:
+        return block_predict_pallas(counts, log_cpt, interpret=interp)
+    return ref.block_predict_ref(counts, log_cpt)

@@ -1,0 +1,84 @@
+"""Sweep driver: one subprocess per dry-run cell (isolation + fresh XLA).
+
+Runs every (arch x shape) cell for the requested meshes, skipping cells whose
+JSON already exists (resume semantics — delete results/dryrun to redo).  A
+cell crash (OOM, sharding bug) is recorded and the sweep continues.
+
+No jax import here: the child (repro.launch.dryrun) sets XLA_FLAGS itself.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ARCH_IDS = (
+    "mamba2_130m", "llama32_vision_90b", "hymba_1_5b", "qwen3_4b",
+    "granite_8b", "qwen15_32b", "minicpm_2b", "whisper_medium",
+    "phi35_moe", "arctic_480b",
+)
+SHAPE_IDS = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--meshes", nargs="*", default=["single", "multi"])
+    p.add_argument("--archs", nargs="*", default=list(ARCH_IDS))
+    p.add_argument("--shapes", nargs="*", default=list(SHAPE_IDS))
+    p.add_argument("--timeout", type=int, default=3000)
+    p.add_argument("--force", action="store_true")
+    a = p.parse_args(argv)
+
+    out = Path(a.out)
+    out.mkdir(parents=True, exist_ok=True)
+    cells = [
+        (arch, s, m)
+        for m in a.meshes  # mesh-major: all single-pod (roofline) first
+        for arch in a.archs
+        for s in a.shapes
+    ]
+    t0 = time.time()
+    n_ok = n_skip = n_err = n_cached = 0
+    for i, (arch, s, m) in enumerate(cells):
+        path = out / f"{arch}--{s}--{m}.json"
+        if path.exists() and not a.force:
+            try:
+                st = json.loads(path.read_text()).get("status")
+            except Exception:
+                st = None
+            if st in ("ok", "skip"):
+                n_cached += 1
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", s, "--mesh", m, "--out", str(out)]
+        print(f"[{i+1}/{len(cells)}] {arch} x {s} x {m} (t={time.time()-t0:.0f}s)",
+              flush=True)
+        try:
+            r = subprocess.run(cmd, timeout=a.timeout, capture_output=True, text=True)
+            if r.returncode != 0 and not path.exists():
+                path.write_text(json.dumps({
+                    "arch": arch, "shape": s, "mesh": m, "status": "error",
+                    "traceback": (r.stderr or "")[-8000:],
+                }, indent=1))
+        except subprocess.TimeoutExpired:
+            path.write_text(json.dumps({
+                "arch": arch, "shape": s, "mesh": m, "status": "error",
+                "traceback": f"timeout after {a.timeout}s",
+            }, indent=1))
+        st = json.loads(path.read_text()).get("status") if path.exists() else "error"
+        n_ok += st == "ok"
+        n_skip += st == "skip"
+        n_err += st == "error"
+        print(f"    -> {st}", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} err={n_err} cached={n_cached} "
+          f"wall={time.time()-t0:.0f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS *before* first init.
+
+Topology: TPU v5e pods; single-pod = 256 chips as (data=16, model=16),
+multi-pod = 2 pods x 256 as (pod=2, data=16, model=16).  DP/FSDP runs over
+(pod, data); TP/EP over model; ICI within a pod, DCI across pods — the
+``pod`` axis only ever carries data-parallel all-reduces.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_shape(shape: tuple[int, ...]):
+    """Arbitrary test meshes, e.g. (2,2,2) on 8 host devices."""
+    axes = ("pod", "data", "model")[-len(shape):] if len(shape) == 3 else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))

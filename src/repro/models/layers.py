@@ -1,0 +1,297 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full/chunked/SWA),
+SwiGLU MLP, cross-attention.  Pure functions over parameter pytrees.
+
+Attention is implemented with a chunked-query streaming softmax so that no
+(S x S) score matrix is ever materialized: per query chunk the scores are
+(B, H, C, S) — this is what lets prefill_32k fit v5e HBM and is the pure-JAX
+analogue of flash attention (the MXU does the two matmuls; XLA fuses the
+masking).  A sliding-window variant slices only the in-window keys per chunk,
+giving the O(S * W) cost that long_500k relies on (hymba).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.constraints import act
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms and embeddings
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,Sq,K,G,hd), k (B,Sk,K,hd) -> (B,K,G,Sq,Sk) float32."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p (B,K,G,Sq,Sk), v (B,Sk,K,hd) -> (B,Sq,K,G,hd).
+
+    Probabilities are cast to the value dtype (bf16 on TPU) for the PV
+    matmul — halves the attention working set; accumulation stays f32.
+    """
+    return jnp.einsum(
+        "bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """GQA attention.  q (B,Sq,H,hd); k,v (B,Sk,K,hd); H % K == 0.
+
+    Chunked over queries when Sq > chunk; with ``window`` only the in-window
+    key slice is read per chunk (O(S*W) work).  ``q_offset`` is the absolute
+    position of q[0] relative to k[0] (prefill continuation / decode).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kh, g, hd) * scale
+
+    def full_path():
+        scores = _gqa_scores(qg, k)
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        return _gqa_out(p, v).reshape(b, sq, h, hd).astype(q.dtype)
+
+    if sq <= chunk:
+        return full_path()
+
+    if sq % chunk != 0:
+        # pick the largest divisor of sq at most `chunk` (e.g. whisper's 1500
+        # encoder frames -> 750); degenerate to the full path if none useful
+        divs = [d for d in range(chunk, 0, -1) if sq % d == 0]
+        chunk = divs[0] if divs else sq
+        if chunk == sq or chunk < 128:
+            return full_path()
+
+    n_chunks = sq // chunk
+
+    # Per-chunk bodies are fully rematerialized: without this, the scan VJP
+    # stacks every chunk's (chunk x Sk) probabilities — the full S^2 f32
+    # score matrix — as backward residuals (measured: 34 GB/device for
+    # qwen3-4b train_4k; see EXPERIMENTS.md §Perf iteration 1).
+    remat_body = functools.partial(
+        jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable
+    )
+
+    if window > 0 and window + chunk < sk:
+        # pad keys on the left so each chunk reads a static (window+chunk) slice
+        span = window + chunk
+        kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+        def win_body(_, ci):
+            start = ci * chunk  # k-slice begins at (start - window) in unpadded coords
+            qc = jax.lax.dynamic_slice_in_dim(qg, start, chunk, axis=1)
+            kc = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+            scores = _gqa_scores(qc, kc)
+            qpos = q_offset + start + jnp.arange(chunk)[:, None]
+            kpos = start - window + jnp.arange(span)[None, :]
+            mask = (kpos >= 0) & (qpos - kpos < window)
+            if causal:
+                mask &= qpos >= kpos
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            p = jax.nn.softmax(scores, axis=-1)
+            out = _gqa_out(p, vc).reshape(b, chunk, h, hd).astype(q.dtype)
+            return None, out
+
+        _, outs = jax.lax.scan(remat_body(win_body), None, jnp.arange(n_chunks))
+        return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+    def body(_, ci):
+        start = ci * chunk
+        qc = jax.lax.dynamic_slice_in_dim(qg, start, chunk, axis=1)
+        scores = _gqa_scores(qc, k)  # (B,K,G,chunk,Sk)
+        qpos = q_offset + start + jnp.arange(chunk)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        mask = jnp.ones((chunk, sk), bool)
+        if causal:
+            mask = qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(p, v).reshape(b, chunk, h, hd).astype(q.dtype)
+        return None, out
+
+    _, outs = jax.lax.scan(remat_body(body), None, jnp.arange(n_chunks))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, valid_len
+) -> jax.Array:
+    """One-token decode: q (B,1,H,hd) against a (B,W,K,hd) cache.
+
+    ``valid_len`` masks ring-buffer slots not yet written (scalar or (B,)).
+    Keys are stored post-RoPE, so slot order inside the ring is irrelevant
+    to the softmax (set membership is what matters).
+    """
+    b, _, h, hd = q.shape
+    _, w, kh, _ = k_cache.shape
+    g = h // kh
+    qg = q.reshape(b, 1, kh, g, hd) * (1.0 / math.sqrt(hd))
+    scores = _gqa_scores(qg, k_cache)  # (B,K,G,1,W)
+    slot = jnp.arange(w)[None, :]
+    vl = jnp.asarray(valid_len)
+    if vl.ndim == 0:
+        vl = jnp.broadcast_to(vl, (b,))
+    mask = slot < vl[:, None]  # (B,W)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(p, v_cache).reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + qk-norm + rope) and MLP
+# ---------------------------------------------------------------------------
+
+
+def attn_project_qkv(p: Params, x: jax.Array, cfg, positions: jax.Array):
+    """x (B,S,D) -> roped q (B,S,H,hd), k,v (B,S,K,hd)."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.attn_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = act(q.reshape(b, s, h, hd), ("dp", None, "model", None))
+    k = act(k.reshape(b, s, kh, hd), ("dp", None, "model", None))
+    v = act(v.reshape(b, s, kh, hd), ("dp", None, "model", None))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(
+    p: Params, x: jax.Array, cfg, positions: jax.Array, *, window: int = 0
+) -> jax.Array:
+    q, k, v = attn_project_qkv(p, x, cfg, positions)
+    o = attention(q, k, v, causal=True, window=window)
+    o = act(o, ("dp", None, "model", None))
+    out = o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+    return act(out, ("dp", None, None))
+
+
+def swiglu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = act(jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"]), ("dp", None, "model"))
+    return act(h @ p["w_down"], ("dp", None, None))
+
+
+def cross_attn_block(p: Params, x: jax.Array, memory: jax.Array, cfg) -> jax.Array:
+    """Non-causal attention from x (B,S,D) into memory (B,M,D)."""
+    b, s, _ = x.shape
+    m = memory.shape[1]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (memory @ p["wk"]).reshape(b, m, kh, hd)
+    v = (memory @ p["wv"]).reshape(b, m, kh, hd)
+    o = attention(q, k, v, causal=False)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initializers for the above
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg, dtype, *, out_scale: float = 1.0) -> Params:
+    ks = jax.random.split(key, 8)
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p: Params = {
+        "wq": init_dense(ks[0], d, h * hd, dtype),
+        "wk": init_dense(ks[1], d, kh * hd, dtype),
+        "wv": init_dense(ks[2], d, kh * hd, dtype),
+        "wo": init_dense(ks[3], h * hd, d, dtype, scale=out_scale / math.sqrt(h * hd)),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kh * hd,), dtype)
+        p["bv"] = jnp.zeros((kh * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_mlp(key, d: int, ff: int, dtype, *, out_scale: float = 1.0) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(ks[0], d, ff, dtype),
+        "w_up": init_dense(ks[1], d, ff, dtype),
+        "w_down": init_dense(ks[2], ff, d, dtype, scale=out_scale / math.sqrt(ff)),
+    }

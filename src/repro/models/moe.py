@@ -1,0 +1,178 @@
+"""Mixture-of-Experts FFN with capacity-bucketed dispatch (EP-shardable).
+
+Dispatch is the compile-friendly scatter form: tokens are assigned a slot
+(expert, position) by a cumulative-count over the top-k assignments and
+scattered into a dense (E, capacity, D) buffer; expert FFNs run as one
+batched einsum over the expert axis (sharded over the ``model`` mesh axis =
+expert parallelism); results gather back with the router weights.  Tokens
+beyond capacity are dropped (standard Switch/GShard semantics, capacity
+factor configurable).
+
+FactorBase tie-in: expert assignment counts are *sufficient statistics* — a
+GROUP BY (expert) over the token stream.  They are computed with the count
+manager's histogram kernel (``repro.kernels.ct_count``) and feed both the
+load-balance auxiliary loss and the routing-telemetry the serving stack
+exports.  This is the paper's count-manager service embedded in the LM stack
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+import math
+
+from ..kernels import ops
+from ..parallel.constraints import act
+from .layers import init_dense
+
+Params = dict[str, Any]
+
+
+def init_moe(key, cfg, dtype) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "w_router": init_dense(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) / math.sqrt(d)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) / math.sqrt(d)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d), jnp.float32) / math.sqrt(ff)).astype(dtype),
+    }
+    if cfg.moe_dense_residual:
+        from .layers import init_mlp
+
+        p["dense"] = init_mlp(ks[4], d, cfg.dense_ff or cfg.d_ff, dtype)
+    return p
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, dict]:
+    """x (B, S, D) -> (out (B, S, D), stats {aux_loss, expert_counts}).
+
+    Shard-local dispatch (§Perf iteration "moe-local-dispatch"): tokens are
+    regrouped as (G, T/G) with G = the mesh's data-parallel way count, slot
+    positions are computed *within* each group (axis-1 cumsum stays local
+    under GSPMD), and the dispatch buffer carries an explicit group axis
+    sharded over dp: (E, G, cap_local, D) with E over 'model'.  Building the
+    buffer then requires no cross-dp communication at all; the only
+    collective left is the expert-shard gather at combine time — measured on
+    phi3.5-moe train_4k this replaced 1.3 TB/device of buffer all-reduces
+    with ~50 GB of gathers (see EXPERIMENTS.md §Perf).
+    """
+    from ..parallel.constraints import dp_size
+
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = bsz * s
+    g = math.gcd(dp_size(), t)  # dp groups (1 on a single device)
+    tl = t // g
+    xt = x.reshape(t, d)
+    xg = act(x.reshape(g, tl, d), ("dp", None, None))
+
+    logits = (xg.astype(jnp.float32) @ p["w_router"])  # (G,Tl,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G,Tl,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- slot assignment: position within (group, expert) -------------------
+    ge_idx = gate_idx.reshape(g, tl * k)  # k-major per token
+    onehot = jax.nn.one_hot(ge_idx, e, dtype=jnp.int32)  # (G, Tl*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot  # exclusive, group-local
+    pos = jnp.take_along_axis(pos_in_e, ge_idx[..., None], axis=2)[..., 0]  # (G,Tl*k)
+
+    cap_l = max(1, int(cfg.capacity_factor * tl * k / e))
+    keep = pos < cap_l
+
+    # --- sufficient statistics: GROUP BY expert (count manager kernel) ------
+    counts = ops.ct_count(ge_idx.reshape(-1), e)   # (E,) pre-drop assignments
+    kept_counts = ops.ct_count(jnp.where(keep, ge_idx, -1).reshape(-1), e)
+
+    # --- dispatch + expert FFN + combine ------------------------------------
+    # Two implementations:
+    #  * shard_map (mesh present, divisible): every (dp=i, model=j) device
+    #    scatters ONLY the assignments that target its local expert shard
+    #    into a purely local (E/16, cap, D) buffer — zero dispatch
+    #    communication — runs its local experts, and the combine is a single
+    #    psum over 'model'.  This replaced 1.3 TB/device of GSPMD dispatch
+    #    all-reduces on phi3.5-moe train_4k (§Perf iteration
+    #    "moe-shardmap-dispatch"; the pure-GSPMD "group-local scatter"
+    #    attempt was REFUTED — dynamic expert ids defeat locality proofs).
+    #  * pure-jit fallback (no mesh / smoke tests): dense scatter as before.
+    from ..parallel.constraints import _mesh
+
+    mesh = _mesh()
+    model_n = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1) if mesh else 1
+    use_sm = (
+        mesh is not None and model_n > 1 and e % model_n == 0 and g > 1
+    )
+    gv_flat = gate_vals.reshape(g, tl * k)
+    safe_pos = jnp.where(keep, pos, 0)
+
+    if use_sm:
+        from jax.sharding import PartitionSpec as P
+
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        e_l = e // model_n
+
+        def local(w_gate, w_up, w_down, x_l, ge_l, pos_l, keep_l, gv_l):
+            j = jax.lax.axis_index("model")
+            x2 = x_l.reshape(-1, d)            # (Tl, D)
+            ge2 = ge_l.reshape(-1)             # (Tl*k,)
+            pos2 = pos_l.reshape(-1)
+            keep2 = keep_l.reshape(-1) & (ge2 // e_l == j)
+            le = jnp.where(keep2, ge2 - j * e_l, 0)
+            sp = jnp.where(keep2, pos2, 0)
+            src = jnp.repeat(x2, k, axis=0)
+            contrib = jnp.where(keep2[:, None], src, 0)
+            buf = jnp.zeros((e_l, cap_l, d), x2.dtype).at[le, sp].add(contrib)
+            hh = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
+                "ecd,edf->ecf", buf, w_up
+            )
+            ob = jnp.einsum("ecf,efd->ecd", hh, w_down)
+            gathered = jnp.where(keep2[:, None], ob[le, sp], 0)
+            wv = gv_l.reshape(-1)[:, None].astype(gathered.dtype)
+            y = jnp.sum((gathered * wv).reshape(-1, k, d), axis=1)  # (Tl, D)
+            y = jax.lax.psum(y, "model")
+            return y[None]
+
+        out = jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(
+                P("model", None, None), P("model", None, None), P("model", None, None),
+                P(dp_axes, None, None), P(dp_axes, None), P(dp_axes, None),
+                P(dp_axes, None), P(dp_axes, None),
+            ),
+            out_specs=P(dp_axes, None, None),
+        )(p["w_gate"], p["w_up"], p["w_down"], xg, ge_idx, safe_pos, keep, gv_flat)
+        out = out.reshape(t, d)
+    else:
+        buf = jnp.zeros((e, g, cap_l, d), x.dtype)
+        src = jnp.repeat(xg, k, axis=1)  # (G, Tl*k, D)
+        gidx = jnp.broadcast_to(jnp.arange(g, dtype=jnp.int32)[:, None], (g, tl * k))
+        contrib = jnp.where(keep[..., None], src, 0)
+        buf = buf.at[ge_idx, gidx, safe_pos].add(contrib)
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", buf, p["w_gate"])) * jnp.einsum(
+            "egcd,edf->egcf", buf, p["w_up"]
+        )
+        out_buf = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+        gathered = out_buf[ge_idx, gidx, safe_pos]  # (G, Tl*k, D)
+        gathered = jnp.where(keep[..., None], gathered, 0)
+        w = gv_flat[..., None].astype(gathered.dtype)
+        out = jnp.sum((gathered * w).reshape(g, tl, k, d), axis=2).reshape(t, d)
+
+    # --- load-balance auxiliary loss (Switch-style) --------------------------
+    frac_tokens = counts.astype(jnp.float32) / jnp.maximum(jnp.sum(counts), 1)
+    frac_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_prob)
+
+    if cfg.moe_dense_residual:
+        from .layers import swiglu_mlp
+
+        out = out + swiglu_mlp(p["dense"], xt).astype(out.dtype)
+
+    stats = {"aux_loss": aux, "expert_counts": counts, "kept_counts": kept_counts}
+    return out.reshape(bsz, s, d).astype(x.dtype), stats

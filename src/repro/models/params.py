@@ -1,0 +1,85 @@
+"""Analytic parameter counts per architecture (MODEL_FLOPS = 6*N*D needs N).
+
+Counts mirror ``init_params`` exactly (tests assert the two agree leaf-for-
+leaf on reduced configs).  ``active_only`` counts the parameters touched per
+token for MoE archs (top-k experts + router + dense residual) — the N that
+enters the 6*N*D "useful compute" convention.
+"""
+
+from __future__ import annotations
+
+
+def _attn_params(cfg, cross: bool = False) -> int:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    n = d * h * hd + 2 * d * kh * hd + h * hd * d  # wq, wk, wv, wo
+    if cfg.attn_bias and not cross:
+        n += h * hd + 2 * kh * hd
+    if cfg.qk_norm and not cross:
+        n += 2 * hd
+    return n
+
+
+def _mlp_params(d: int, ff: int) -> int:
+    return 3 * d * ff
+
+
+def _moe_params(cfg, active_only: bool) -> int:
+    e = cfg.top_k if active_only else cfg.n_experts
+    n = cfg.d_model * cfg.n_experts  # router (always fully touched)
+    n += e * 3 * cfg.d_model * cfg.d_ff
+    if cfg.moe_dense_residual:
+        n += _mlp_params(cfg.d_model, cfg.dense_ff or cfg.d_ff)
+    return n
+
+
+def _ssm_params(cfg) -> int:
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * n
+    total = cfg.d_model * (2 * din + 2 * n + h)   # w_in
+    total += cfg.ssm_conv * conv_ch + conv_ch      # conv
+    total += 3 * h                                  # a_log, d_skip, dt_bias
+    total += din                                    # gate_norm
+    total += din * cfg.d_model                      # w_out
+    return total
+
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    d = cfg.d_model
+    vp = cfg.vocab_padded
+    n = vp * d  # embedding (pad-to-256 so vocab shards; see ModelConfig)
+    if not cfg.tie_embeddings:
+        n += d * vp  # lm_head
+    n += d  # final norm
+
+    if cfg.family == "ssm":
+        n += cfg.n_layers * (_ssm_params(cfg) + d)  # + norm
+        return n
+
+    if cfg.hybrid:
+        # 4 norms: ln1, ln2 and the per-path attn_norm / ssm_norm
+        per = _attn_params(cfg) + _ssm_params(cfg) + _mlp_params(d, cfg.d_ff) + 4 * d
+        n += cfg.n_layers * per
+        return n
+
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // (cfg.cross_attn_every + 1)
+        n_self = cfg.n_layers - n_cross
+        n += n_self * (_attn_params(cfg) + _mlp_params(d, cfg.d_ff) + 2 * d)
+        n += n_cross * (_attn_params(cfg, cross=True) + _mlp_params(d, cfg.d_ff) + 2 * d)
+        return n
+
+    if cfg.is_encdec:
+        enc = cfg.encoder_layers * (_attn_params(cfg) + _mlp_params(d, cfg.d_ff) + 2 * d)
+        dec = cfg.n_layers * (
+            _attn_params(cfg) + _attn_params(cfg, cross=True) + _mlp_params(d, cfg.d_ff) + 3 * d
+        )
+        return n + enc + dec + d  # + enc_norm
+
+    if cfg.family == "moe":
+        per = _attn_params(cfg) + _moe_params(cfg, active_only) + 2 * d
+        n += cfg.n_layers * per
+        return n
+
+    # dense
+    n += cfg.n_layers * (_attn_params(cfg) + _mlp_params(d, cfg.d_ff) + 2 * d)
+    return n

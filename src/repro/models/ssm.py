@@ -1,0 +1,181 @@
+"""Mamba-2 SSD (state-space duality) blocks — chunked train path + O(1) decode.
+
+The SSD algorithm (Dao & Gu 2024) evaluates the selective state-space
+recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t        y_t = C_t h_t + D x_t
+
+as chunked matmuls: within a chunk of Q tokens the output is a masked
+(C B^T)-attention-like product (two MXU matmuls); across chunks the state is
+carried by an associative scan over (decay, state) pairs.  This is the
+MXU-native formulation — the reason mamba2 maps well to TPU — and the decode
+path is a rank-1 state update with no KV cache, which is what makes
+long_500k (524k context) feasible for the ssm/hybrid families.
+
+Shapes: heads H = d_inner / ssm_head_dim (P = head dim), state N = ssm_state,
+single B/C group (G=1, as in mamba2-130m).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, rms_norm
+
+Params = dict[str, Any]
+
+
+def init_ssm(key, cfg, dtype) -> Params:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * n  # conv runs over [x, B, C]
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj emits [z (din), x (din), B (N), C (N), dt (H)]
+        "w_in": init_dense(ks[0], d, 2 * din + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),       # A = -exp(a_log)  (init -1)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ~ 0.12
+        "gate_norm": jnp.ones((din,), dtype),
+        "w_out": init_dense(ks[2], din, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, L, C) with kernel (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b
+
+
+def _split_proj(cfg, proj: jax.Array):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xbc = proj[..., din : 2 * din + 2 * n]
+    dt = proj[..., 2 * din + 2 * n :]
+    return z, xbc, dt
+
+
+def ssm_block(p: Params, x_in: jax.Array, cfg) -> jax.Array:
+    """Train/prefill path: (B, L, D) -> (B, L, D) via chunked SSD."""
+    bsz, l, _ = x_in.shape
+    din, n, h, pdim, q = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_chunk
+    proj = x_in @ p["w_in"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x = xbc[..., :din].reshape(bsz, l, h, pdim)
+    bmat = xbc[..., din : din + n]          # (B, L, N)
+    cmat = xbc[..., din + n :]              # (B, L, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, L, H)
+    a = -jnp.exp(p["a_log"])                # (H,)
+
+    assert l % q == 0, (l, q)
+    nc = l // q
+    xc = x.reshape(bsz, nc, q, h, pdim).astype(jnp.float32)
+    bc = bmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h)
+
+    da = dtc * a  # (B, NC, Q, H)
+    cum = jnp.cumsum(da, axis=2)
+
+    # --- intra-chunk (diagonal blocks): masked CB^T attention ---------------
+    # decay L[q1, q2] = exp(cum[q1] - cum[q2]) for q1 >= q2.  Because cum is
+    # monotonically decreasing (dt > 0, A < 0), the decay FACTORS stably:
+    #   exp(cum_q - cum_k) = exp(cum_q - m) * exp(m - cum_k),  m = cum[-1]
+    # with both factors bounded by exp(|chunk decay range|).  Folding the
+    # factors into C and (dt*B) turns the former (B,NC,Q,Q,H) broadcast
+    # chain into one MXU matmul — §Perf iteration "ssd-factor": memory term
+    # of the ssm/hybrid train cells drops ~2.5x.
+    m = cum[:, :, -1:, :]                                   # (B,NC,1,H)
+    cph = cc[..., None] * jnp.exp(cum - m)[:, :, :, None, :]          # (B,NC,Q,N,H)
+    bph = bc[..., None] * (jnp.exp(m - cum) * dtc)[:, :, :, None, :]  # (B,NC,K,N,H)
+    scores = jnp.einsum("bcqnh,bcknh->bchqk", cph, bph)     # (B,NC,H,Q,Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores, xc)
+
+    # --- chunk states --------------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,NC,Q,H)
+    sstate = jnp.einsum(
+        "bcqh,bcqn,bcqhp->bchnp", dtc * decay_to_end, bc, xc
+    )  # (B,NC,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,NC,H)
+
+    # --- inter-chunk recurrence: associative scan over (decay, state) -------
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s2 + s1 * d2[..., None, None]
+
+    dscan, sscan = jax.lax.associative_scan(
+        combine, (chunk_decay, sstate), axis=1
+    )
+    # state entering chunk c = scanned state of chunk c-1 (zero for c=0)
+    h_in = jnp.concatenate(
+        [jnp.zeros_like(sscan[:, :1]), sscan[:, :-1]], axis=1
+    )  # (B,NC,H,N,P)
+
+    # --- off-diagonal contribution ------------------------------------------
+    y_off = jnp.einsum(
+        "bcqn,bchnp->bcqhp", cc, h_in
+    ) * jnp.exp(cum)[..., None]
+
+    y = (y_diag + y_off).reshape(bsz, l, h, pdim)
+    y = y + xc.reshape(bsz, l, h, pdim) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, din).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) per token
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_state(cfg, batch: int) -> Params:
+    h, n, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * n
+    conv_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "h": jnp.zeros((batch, h, n, pdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), conv_dtype),
+    }
+
+
+def ssm_decode(p: Params, state: Params, x_in: jax.Array, cfg):
+    """x_in (B, 1, D) -> (y (B, 1, D), new_state)."""
+    bsz = x_in.shape[0]
+    din, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x_in @ p["w_in"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    # conv ring: concat history (K-1) + current token, then dot with kernel
+    hist = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :].astype(state["conv"].dtype)
+
+    x = xbc1[..., :din].reshape(bsz, h, pdim).astype(jnp.float32)
+    bvec = xbc1[:, 0, din : din + n].astype(jnp.float32)
+    cvec = xbc1[:, 0, din + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+
+    decay = jnp.exp(dt * a)  # (B,H)
+    hs = state["h"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bvec, x
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cvec, hs) + x * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, din).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"h": hs, "conv": new_conv}

@@ -1,0 +1,63 @@
+"""Activation sharding constraints driven by the ambient (abstract) mesh.
+
+Model code calls ``act(x, ("dp", None, "model", None))`` at layer
+boundaries; under ``jax.sharding.use_mesh`` (the launcher/dry-run wraps
+lowering in it) this pins the activation layout so GSPMD propagation cannot
+fall back to replication — without a mesh it is a no-op, so the same model
+code runs untouched on a single CPU device (smoke tests).
+
+Dim tags: "dp" -> (pod, data) data-parallel axes, "model" -> tensor/expert
+axis.  A tag is silently dropped when the dim is not divisible by the axis
+size (e.g. 25 heads on a 16-way model axis) — the divisible dims still get
+pinned, which is what keeps the not-quite-regular archs (hymba, qwen1.5,
+arctic attention) from replicating *everything*.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if m is None or not m.axis_names:
+        return None
+    return m
+
+
+def dp_size() -> int:
+    """Total data-parallel way count of the ambient mesh (1 without a mesh)."""
+    m = _mesh()
+    if m is None:
+        return 1
+    sizes = dict(zip(m.axis_names, m.axis_sizes))
+    return math.prod(sizes[a] for a in ("pod", "data") if a in sizes)
+
+
+def act(x: jax.Array, dims: tuple) -> jax.Array:
+    """Constrain activation ``x`` along logical dim tags (see module doc)."""
+    m = _mesh()
+    if m is None:
+        return x
+    axis_sizes = dict(zip(m.axis_names, m.axis_sizes))
+    dp = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    dp_size = math.prod(axis_sizes[a] for a in dp) if dp else 1
+    model_size = axis_sizes.get("model", 1)
+
+    spec = []
+    for size, d in zip(x.shape, dims):
+        if d == "dp" and dp and size % dp_size == 0:
+            spec.append(dp)
+        elif d == "model" and "model" in axis_sizes and size % model_size == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

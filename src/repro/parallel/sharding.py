@@ -1,0 +1,165 @@
+"""Sharding rules: parameter/optimizer/activation/cache PartitionSpecs.
+
+Scheme (GSPMD auto-prop from these anchors):
+  * DP/FSDP over the ``pod`` x ``data`` axes: the batch shards over them, and
+    every large parameter also shards one of its *non-model* dims over them
+    (ZeRO-3-style fully-sharded parameters + optimizer state; XLA inserts the
+    per-layer all-gathers inside the scan and overlaps them).
+  * TP over ``model``: attention/MLP inner dims, vocab where divisible.
+  * EP over ``model``: MoE expert axis.
+  * Decode KV caches shard their *sequence* axis over ``model`` (the cache is
+    the dominant decode-time buffer, and kv-head counts like 8 do not divide
+    the 16-way model axis; sequence does) — attention's softmax then reduces
+    over a sharded axis, which XLA turns into the expected all-reduce.
+
+Every rule degrades to replication when a dim is not divisible by the mesh
+axis (recorded by ``explain()``; e.g. 25 q-heads / hymba, 40 kv-heads /
+qwen1.5, odd vocabs).  This module is pure metadata — no device state.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return int(mesh.shape[axes])
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def div(mesh: Mesh, dim: int, axes):
+    """axes if they divide dim, else None (replicate)."""
+    return axes if dim % max(_axsize(mesh, axes), 1) == 0 else None
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def param_spec(mesh: Mesh, path: str, shape: tuple[int, ...]) -> P:
+    """PartitionSpec for one parameter leaf (leading stack axes -> None)."""
+    dp = dp_axes(mesh)
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    def lead(n_mat: int) -> tuple:
+        return (None,) * (nd - n_mat)
+
+    if name in ("embed",):
+        v, d = shape
+        return P(div(mesh, v, "model"), div(mesh, d, dp))
+    if name == "lm_head":
+        d, v = shape
+        return P(div(mesh, d, dp), div(mesh, v, "model"))
+    if nd >= 1 and (name.startswith("ln") or "norm" in name or name in (
+            "a_log", "d_skip", "dt_bias", "conv_b", "bq", "bk", "bv")):
+        return P(*(None,) * nd)
+    if "moe" in path and name in ("w_gate", "w_up"):
+        e, d, f = shape[-3:]
+        return P(*lead(3), div(mesh, e, "model"), div(mesh, d, dp), None)
+    if "moe" in path and name == "w_down":
+        e, f, d = shape[-3:]
+        return P(*lead(3), div(mesh, e, "model"), None, div(mesh, d, dp))
+    if name == "w_router":
+        d, e = shape[-2:]
+        return P(*lead(2), div(mesh, d, dp), None)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in"):
+        a, b = shape[-2:]
+        return P(*lead(2), div(mesh, a, dp), div(mesh, b, "model"))
+    if name in ("wo", "w_down", "w_out"):
+        a, b = shape[-2:]
+        return P(*lead(2), div(mesh, a, "model"), div(mesh, b, dp))
+    if name == "conv_w":
+        return P(*(None,) * nd)
+    # fallback: replicate
+    return P(*(None,) * nd)
+
+
+def param_shardings(mesh: Mesh, params_shapes: Params) -> Params:
+    """NamedSharding pytree for a params(-shaped) pytree of ShapeDtypeStructs."""
+
+    def leaf(path, x):
+        return NamedSharding(mesh, param_spec(mesh, _path_str(path), x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shapes)
+
+
+def explain(mesh: Mesh, params_shapes: Params) -> list[str]:
+    """Human-readable report of replicated-by-indivisibility decisions."""
+    notes = []
+
+    def leaf(path, x):
+        spec = param_spec(mesh, _path_str(path), x.shape)
+        if all(s is None for s in spec) and x.size * 2 > 1 << 20:
+            notes.append(f"replicated: {_path_str(path)} {x.shape}")
+        return None
+
+    jax.tree_util.tree_map_with_path(leaf, params_shapes)
+    return notes
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / optimizer shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(mesh: Mesh, batch_shapes: dict) -> dict:
+    dp = dp_axes(mesh)
+
+    def leaf(path, x):
+        b = x.shape[0]
+        spec = (div(mesh, b, dp),) + (None,) * (len(x.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shapes)
+
+
+def cache_shardings(mesh: Mesh, cache_shapes: dict) -> dict:
+    """Decode caches: batch over dp; KV sequence axis over model.
+
+    KV leaves are identified by shape convention (.., B, W, KH, hd) — axis -3
+    is the ring length.  SSM states shard batch only.
+    """
+    dp = dp_axes(mesh)
+
+    def leaf(path, x):
+        name = _path_str(path)
+        nd = len(x.shape)
+        if name.endswith("pos"):
+            return NamedSharding(mesh, P(div(mesh, x.shape[0], dp)))
+        spec = [None] * nd
+        # find the batch axis: first axis after leading layer-stack axes whose
+        # position matches the known layouts
+        if "ssm" in name or name.endswith(("/h", "/conv")):
+            # (L, B, ...) states
+            spec[1] = div(mesh, x.shape[1], dp)
+        elif nd >= 4:
+            # (L[, k], B, W, KH, hd) KV caches: batch at -4, seq at -3
+            spec[nd - 4] = div(mesh, x.shape[nd - 4], dp)
+            spec[nd - 3] = div(mesh, x.shape[nd - 3], "model")
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,132 @@
+"""Roofline terms from compiled dry-run artifacts (no hardware required).
+
+Per (arch x shape x mesh) cell, from the post-SPMD compiled module:
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 MXU peak, v5e)
+    memory     = HLO_bytes_per_device / 819e9         (HBM BW, v5e)
+    collective = collective_bytes_per_device / 50e9   (~per-link ICI BW)
+
+``cost_analysis()`` is per-partition under SPMD (verified empirically), so
+all three terms are per-device seconds; the bottleneck is the max term.
+Collective bytes are parsed from the optimized HLO text: the result-buffer
+size of every all-gather / reduce-scatter / all-to-all / collective-permute,
+with all-reduce counted twice (its ring cost is RS + AG).  This is a
+schedule-level estimate — it ignores overlap (XLA hides collectives behind
+compute inside scans), so the collective term is an upper bound on exposed
+communication.
+
+MODEL_FLOPS uses the 6*N*D train / 2*N*D inference convention with N =
+active parameters; the ratio MODEL_FLOPS / (chips * HLO_FLOPs) shows how
+much compiled compute is "useful" (remat recompute, attention FLOPs and
+dead padding all push it below 1).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+PEAK_FLOPS = 197e12     # bf16 per chip (v5e)
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link (approx)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device collective bytes by op kind (result-buffer sizes)."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind, _start = m.group(1), m.group(2), m.group(3)
+        b = _type_bytes(type_str)
+        if kind == "all-reduce":
+            b *= 2  # ring AR = reduce-scatter + all-gather
+        out[kind] = out.get(kind, 0.0) + float(b)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float     # MODEL_FLOPS / (chips * HLO_FLOPs)
+    roofline_s: float       # max(term)
+    ideal_s: float          # MODEL_FLOPS / (chips * peak)
+    roofline_fraction: float  # ideal_s / roofline_s  (1.0 == at compute roof)
+
+
+def compute_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    coll_bytes_per_device: float,
+    *,
+    n_chips: int,
+    model_flops: float,
+) -> RooflineTerms:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = coll_bytes_per_device / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    hlo_total = flops_per_device * n_chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    roofline_s = max(terms.values())
+    ideal_s = model_flops / (n_chips * PEAK_FLOPS)
+    return RooflineTerms(
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_bytes_per_device,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        roofline_s=roofline_s,
+        ideal_s=ideal_s,
+        roofline_fraction=(ideal_s / roofline_s) if roofline_s > 0 else 0.0,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D train, 2*N*D prefill, 2*N*B decode (N = active params)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # one decode step
+
+
+def terms_dict(t: RooflineTerms) -> dict:
+    return asdict(t)

@@ -1,0 +1,279 @@
+"""Optimized-HLO text analyzer: trip-count-aware FLOPs / bytes / collectives.
+
+XLA's ``compiled.cost_analysis()`` visits every computation once — a
+``lax.scan`` body (our layer stacks) is counted once instead of
+trip-count times, making the module-level numbers useless for scanned
+models.  This analyzer re-derives the three roofline inputs directly from
+``compiled.as_text()``:
+
+  1. parse the module into computations and ops;
+  2. build the call graph (while body/condition, fusions via calls=/to_apply,
+     conditionals) and a *execution-multiplier* for every computation:
+     mult[entry] = 1, while bodies multiply by their trip count (parsed from
+     the loop-condition constant), nested loops compose;
+  3. FLOPs  = sum over dot/convolution ops of 2 * prod(result) * prod(contracted)
+              * mult[computation]  (MXU work; elementwise is ignored);
+  4. bytes  = sum over *top-level* ops (entry/while/call computations, not
+              fusion internals) of (result + resolvable operand) bytes
+              * mult — fusion-internal traffic stays in registers/VMEM on a
+              real TPU, so only fusion boundaries count as HBM traffic;
+  5. collective bytes by kind, * mult (all-reduce counted x2: RS + AG).
+
+All numbers are per-device (the text is the partitioned module).  Validated
+against analytic 6*N*D in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\("
+)
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALL_ATTR = re.compile(r"(calls|to_apply|condition|body)=([%\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONSTANT_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """(elements, bytes) over all array shapes inside a type string."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line.strip()) if "{" in line else None
+        if m and "->" in line:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_LINE.match(line)
+        if om:
+            cur.ops.append(Op(om.group(1), om.group(2), om.group(3), line))
+    return comps
+
+
+@dataclass
+class HloStats:
+    flops: float
+    bytes: float
+    collective_bytes: dict[str, float]
+    trip_counts: dict[str, int]
+    dot_flops_by_comp: dict[str, float]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def analyze(text: str) -> HloStats:
+    comps = parse_module(text)
+
+    # result-type symbol table (module-wide; optimized HLO names are unique
+    # enough in practice — collisions fall back to result-only accounting)
+    sym: dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            sym[op.name] = op.type_str
+
+    # call edges and fusion-ness
+    called_as_fusion: set[str] = set()
+    edges: dict[str, list[tuple[str, str]]] = {c: [] for c in comps}
+    trip_counts: dict[str, int] = {}
+    for c in comps.values():
+        for op in c.ops:
+            attrs = dict()
+            for kind, target in _CALL_ATTR.findall(op.line):
+                edges[c.name].append((kind, target))
+                if kind in ("calls", "to_apply") and op.opcode == "fusion":
+                    called_as_fusion.add(target)
+                elif kind == "to_apply":
+                    called_as_fusion.add(target)  # reducers: internal
+            bm = _BRANCHES.search(op.line)
+            if bm:
+                for t in bm.group(1).split(","):
+                    t = t.strip()
+                    if t:
+                        edges[c.name].append(("branch", t))
+
+    # trip counts: for each while op, parse its condition computation
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode != "while":
+                continue
+            cond = body = None
+            for kind, target in _CALL_ATTR.findall(op.line):
+                if kind == "condition":
+                    cond = target
+                elif kind == "body":
+                    body = target
+            trip = 1
+            if cond and cond in comps:
+                consts = [int(x) for x in _CONSTANT_S32.findall(
+                    "\n".join(o.line for o in comps[cond].ops)
+                ) if int(x) < 10**9]
+                if consts:
+                    trip = max(consts)
+            if body:
+                trip_counts[body] = max(trip_counts.get(body, 1), trip)
+
+    # execution multipliers (DAG DP from the entry computation)
+    callers: dict[str, list[tuple[str, str]]] = {c: [] for c in comps}
+    for src, es in edges.items():
+        for kind, dst in es:
+            if dst in callers:
+                callers[dst].append((kind, src))
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+(%[\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        all_called = {dst for es in edges.values() for _, dst in es}
+        roots = [c for c in comps if c not in all_called]
+        entry = roots[0] if roots else next(iter(comps))
+
+    mult: dict[str, float] = {}
+
+    def get_mult(name: str, stack=()) -> float:
+        if name == entry:
+            return 1.0
+        if name in mult:
+            return mult[name]
+        if name in stack:  # recursion guard
+            return 0.0
+        total = 0.0
+        for kind, src in callers.get(name, ()):
+            m = get_mult(src, stack + (name,))
+            if kind == "body":
+                m *= trip_counts.get(name, 1)
+            elif kind == "condition":
+                m *= trip_counts.get(name.replace("condition", "body"), 1)
+            total += m
+        mult[name] = total if total > 0 else 1.0
+        return mult[name]
+
+    # flops: dots everywhere (including fusion internals)
+    flops = 0.0
+    dot_by_comp: dict[str, float] = {}
+    for c in comps.values():
+        m = get_mult(c.name)
+        comp_flops = 0.0
+        for op in c.ops:
+            if op.opcode not in ("dot", "convolution"):
+                continue
+            res_elems, _ = _shape_elems_bytes(op.type_str)
+            contract = 1
+            cm = _CONTRACT.search(op.line)
+            if cm is not None:
+                idxs = [int(i) for i in cm.group(1).split(",") if i]
+                # lhs operand shape: first %ref in the parens
+                args = re.search(r"\(([^)]*)\)", op.line.split(op.opcode, 1)[1])
+                if args:
+                    first = args.group(1).split(",")[0].strip()
+                    lhs_type = sym.get(first, "")
+                    st = _SHAPE_TOKEN.search(lhs_type)
+                    if st:
+                        dims = [int(d) for d in st.group(2).split(",") if d]
+                        for i in idxs:
+                            if i < len(dims):
+                                contract *= dims[i]
+            comp_flops += 2.0 * res_elems * contract
+        if comp_flops:
+            dot_by_comp[c.name] = comp_flops * m
+            flops += comp_flops * m
+
+    # bytes: top-level ops of non-fusion computations.  HBM-traffic proxy:
+    # each op's RESULT is written once and read ~once downstream (x2);
+    # operands are NOT added (fusions read slices, not whole buffers, and
+    # every buffer is already counted at its producer).  dynamic-update-slice
+    # writes only its slice in place, so DUS(-fusion) ops inside a loop are
+    # charged the full buffer once per *loop*, not per iteration.
+    skip_opcodes = {"parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast", "after-all", "partition-id", "while",
+                    "conditional", "call"}
+    total_bytes = 0.0
+    for c in comps.values():
+        if c.name in called_as_fusion:
+            continue
+        m = get_mult(c.name)
+        trip = trip_counts.get(c.name, 1)
+        for op in c.ops:
+            if op.opcode in skip_opcodes:
+                continue
+            _, res_b = _shape_elems_bytes(op.type_str)
+            m_eff = m
+            if "dynamic-update-slice" in op.name or op.opcode == "dynamic-update-slice":
+                m_eff = m / max(trip, 1)
+            total_bytes += 2.0 * res_b * m_eff
+
+    # collectives
+    coll: dict[str, float] = {}
+    for c in comps.values():
+        m = get_mult(c.name)
+        for op in c.ops:
+            base = op.opcode.replace("-start", "")
+            if base not in _COLLECTIVES:
+                continue
+            if op.opcode.endswith("-done"):
+                continue
+            _, b = _shape_elems_bytes(op.type_str)
+            if base == "all-reduce":
+                b *= 2
+            coll[base] = coll.get(base, 0.0) + b * m
+
+    return HloStats(
+        flops=flops,
+        bytes=total_bytes,
+        collective_bytes=coll,
+        trip_counts=trip_counts,
+        dot_flops_by_comp=dot_by_comp,
+    )

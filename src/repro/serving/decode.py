@@ -1,0 +1,234 @@
+"""Batched single-token decode with explicit caches — the ``serve_step``.
+
+Cache layouts (leading axis = layer, so the decode loop is a lax.scan that
+consumes cache slices as xs and emits updated slices as ys):
+
+  dense/moe : KV ring buffers  k,v (L, B, W, KH, hd) + per-seq positions (B,)
+  ssm       : SSD states (L, B, H, N, P) + conv rings (L, B, K-1, C)
+  hybrid    : SWA ring buffers (W = sliding_window) for the scanned segments,
+              full-context caches for the 3 global layers, SSM state for all
+  vlm       : self-KV rings per superblock + precomputed cross-KV from the
+              (stub) patch embeddings
+  audio     : decoder self-KV rings + precomputed cross-KV from the (stub)
+              encoder output
+
+Positions are per-sequence (B,), so continuous batching (sequences at
+different offsets) works; ring slots are ``pos % W`` and keys are stored
+post-RoPE, making slot order irrelevant to the softmax.
+
+``decode_32k`` lowers these functions with a full 32k cache; ``long_500k``
+(ssm/hybrid only) carries O(1) state + O(W) window — that is the point.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import attn_project_qkv, decode_attention, rms_norm, swiglu_mlp
+from ..models.moe import moe_ffn
+from ..models.ssm import init_ssm_state, ssm_decode
+from ..models.transformer import _lm_head, hymba_layout
+
+Params = dict[str, Any]
+
+
+def _cache_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _kv_cache(n_layers: int, batch: int, window: int, cfg, dtype=None):
+    dtype = dtype or _cache_dtype(cfg)
+    shape = (n_layers, batch, window, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _ssm_states(n_layers: int, batch: int, cfg):
+    one = init_ssm_state(cfg, batch)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape), one)
+
+
+def init_cache(cfg, batch: int, context: int) -> Params:
+    """Cache pytree for ``context`` max tokens (ShapeDtypeStruct-able)."""
+    cache: Params = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "ssm":
+        cache["ssm"] = _ssm_states(cfg.n_layers, batch, cfg)
+    elif cfg.hybrid:
+        mid, na, nb = hymba_layout(cfg)
+        w = min(cfg.sliding_window, context)
+        cache["seg_a"] = _kv_cache(na, batch, w, cfg)
+        cache["seg_b"] = _kv_cache(nb, batch, w, cfg)
+        cache["glb"] = _kv_cache(3, batch, context, cfg)
+        cache["ssm_a"] = _ssm_states(na, batch, cfg)
+        cache["ssm_b"] = _ssm_states(nb, batch, cfg)
+        cache["ssm_g"] = _ssm_states(3, batch, cfg)
+    elif cfg.family == "vlm":
+        dt = _cache_dtype(cfg)
+        k = cfg.cross_attn_every
+        nsb = cfg.n_layers // (k + 1)
+        shape = (nsb, k, batch, context, cfg.n_kv_heads, cfg.hd)
+        cache["self_k"] = jnp.zeros(shape, dt)
+        cache["self_v"] = jnp.zeros(shape, dt)
+        xshape = (nsb, batch, cfg.vision_tokens, cfg.n_kv_heads, cfg.hd)
+        cache["cross_k"] = jnp.zeros(xshape, dt)
+        cache["cross_v"] = jnp.zeros(xshape, dt)
+    elif cfg.is_encdec:
+        dt = _cache_dtype(cfg)
+        cache.update(_kv_cache(cfg.n_layers, batch, context, cfg))
+        xshape = (cfg.n_layers, batch, cfg.audio_frames, cfg.n_kv_heads, cfg.hd)
+        cache["cross_k"] = jnp.zeros(xshape, dt)
+        cache["cross_v"] = jnp.zeros(xshape, dt)
+    else:
+        cache.update(_kv_cache(cfg.n_layers, batch, context, cfg))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Single-layer decode helpers
+# ---------------------------------------------------------------------------
+
+
+def _attn_decode(lp, x, cfg, k_l, v_l, pos):
+    """x (B,1,D); k_l/v_l (B,W,KH,hd); pos (B,) absolute positions."""
+    b = x.shape[0]
+    w = k_l.shape[1]
+    q, k, v = attn_project_qkv(lp, x, cfg, pos[:, None])
+    slot = pos % w
+    k_l = k_l.at[jnp.arange(b), slot].set(k[:, 0].astype(k_l.dtype))
+    v_l = v_l.at[jnp.arange(b), slot].set(v[:, 0].astype(v_l.dtype))
+    valid = jnp.minimum(pos + 1, w)
+    o = decode_attention(q, k_l, v_l, valid)
+    return o.reshape(b, 1, -1) @ lp["wo"], k_l, v_l
+
+
+def _dense_decode_layer(lp, x, cfg, k_l, v_l, pos, *, moe: bool):
+    a, k_l, v_l = _attn_decode(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, k_l, v_l, pos)
+    h = x + a
+    hin = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if moe:
+        out, _ = moe_ffn(lp["moe"], hin, cfg)
+    else:
+        out = swiglu_mlp(lp["mlp"], hin)
+    return h + out, k_l, v_l
+
+
+def _cross_decode(lp, x, cfg, ck, cv):
+    b = x.shape[0]
+    q = (x @ lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+    o = decode_attention(q, ck, cv, ck.shape[1])
+    return o.reshape(b, 1, -1) @ lp["wo"]
+
+
+def _hybrid_decode_layer(lp, x, cfg, k_l, v_l, sst, pos):
+    xin = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, k_l, v_l = _attn_decode(lp["attn"], xin, cfg, k_l, v_l, pos)
+    s, sst = ssm_decode(lp["ssm"], sst, xin, cfg)
+    mixed = 0.5 * (
+        rms_norm(a, lp["attn_norm"], cfg.norm_eps) + rms_norm(s, lp["ssm_norm"], cfg.norm_eps)
+    )
+    h = x + mixed
+    h = h + swiglu_mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+    return h, k_l, v_l, sst
+
+
+# ---------------------------------------------------------------------------
+# decode_step per family
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: Params, cfg, cache: Params, tokens: jax.Array):
+    """tokens (B,1) int32 -> (logits (B,V) f32, new cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"][tokens]
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            xin = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            y, st2 = ssm_decode(lp["ssm"], st, xin, cfg)
+            return h + y, st2
+        x, new_states = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+        new_cache = {**cache, "ssm": new_states, "pos": pos + 1}
+
+    elif cfg.hybrid:
+        gl = params["global_layers"]
+        g = lambda i: jax.tree.map(lambda a: a[i], gl)
+        gk, gv = cache["glb"]["k"], cache["glb"]["v"]
+        gs = cache["ssm_g"]
+        gsel = lambda t, i: jax.tree.map(lambda a: a[i], t)
+        new_gk, new_gv, new_gs = [], [], []
+
+        def seg(x, layers, kv, states):
+            def body(h, xs):
+                lp, k_l, v_l, st = xs
+                h, k2, v2, st2 = _hybrid_decode_layer(lp, h, cfg, k_l, v_l, st, pos)
+                return h, (k2, v2, st2)
+            x, (k2, v2, st2) = jax.lax.scan(body, x, (layers, kv["k"], kv["v"], states))
+            return x, {"k": k2, "v": v2}, st2
+
+        x, gk0, gv0, gs0 = _hybrid_decode_layer(g(0), x, cfg, gk[0], gv[0], gsel(gs, 0), pos)
+        x, kv_a, st_a = seg(x, params["seg_a"], cache["seg_a"], cache["ssm_a"])
+        x, gk1, gv1, gs1 = _hybrid_decode_layer(g(1), x, cfg, gk[1], gv[1], gsel(gs, 1), pos)
+        x, kv_b, st_b = seg(x, params["seg_b"], cache["seg_b"], cache["ssm_b"])
+        x, gk2, gv2, gs2 = _hybrid_decode_layer(g(2), x, cfg, gk[2], gv[2], gsel(gs, 2), pos)
+        new_cache = {
+            "pos": pos + 1,
+            "seg_a": kv_a, "seg_b": kv_b,
+            "ssm_a": st_a, "ssm_b": st_b,
+            "glb": {"k": jnp.stack([gk0, gk1, gk2]), "v": jnp.stack([gv0, gv1, gv2])},
+            "ssm_g": jax.tree.map(lambda a, b_, c: jnp.stack([a, b_, c]), gs0, gs1, gs2),
+        }
+
+    elif cfg.family == "vlm":
+        k = cfg.cross_attn_every
+
+        def sb_body(h, xs):
+            sb, sk, sv, ck, cv = xs
+            new_k, new_v = [], []
+            for i in range(k):
+                lp = jax.tree.map(lambda a: a[i], sb["self"])
+                h, k2, v2 = _dense_decode_layer(lp, h, cfg, sk[i], sv[i], pos, moe=False)
+                new_k.append(k2)
+                new_v.append(v2)
+            cl = sb["cross"]
+            hin = rms_norm(h, cl["ln1"], cfg.norm_eps)
+            h = h + _cross_decode(cl["attn"], hin, cfg, ck, cv)
+            h = h + swiglu_mlp(cl["mlp"], rms_norm(h, cl["ln2"], cfg.norm_eps))
+            return h, (jnp.stack(new_k), jnp.stack(new_v))
+
+        x, (nsk, nsv) = jax.lax.scan(
+            sb_body, x,
+            (params["superblocks"], cache["self_k"], cache["self_v"],
+             cache["cross_k"], cache["cross_v"]),
+        )
+        new_cache = {**cache, "self_k": nsk, "self_v": nsv, "pos": pos + 1}
+
+    elif cfg.is_encdec:
+        def body(h, xs):
+            lp, k_l, v_l, ck, cv = xs
+            a, k2, v2 = _attn_decode(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg, k_l, v_l, pos)
+            h = h + a
+            h = h + _cross_decode(lp["cross"], rms_norm(h, lp["ln3"], cfg.norm_eps), cfg, ck, cv)
+            h = h + swiglu_mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+            return h, (k2, v2)
+        x, (nk, nv) = jax.lax.scan(
+            body, x,
+            (params["layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+        )
+        new_cache = {**cache, "k": nk, "v": nv, "pos": pos + 1}
+
+    else:  # dense / moe
+        is_moe = cfg.family == "moe"
+
+        def body(h, xs):
+            lp, k_l, v_l = xs
+            h, k2, v2 = _dense_decode_layer(lp, h, cfg, k_l, v_l, pos, moe=is_moe)
+            return h, (k2, v2)
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {**cache, "k": nk, "v": nv, "pos": pos + 1}
+
+    logits = _lm_head(params, cfg, x)[:, 0]
+    return logits, new_cache

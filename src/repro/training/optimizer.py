@@ -1,0 +1,105 @@
+"""AdamW + LR schedules (cosine, WSD) as pure pytree transforms.
+
+Optimizer moments are float32 and shard exactly like their parameters
+(ZeRO-3: the param sharding rules apply verbatim to m/v), which is what the
+dry-run memory analysis accounts.  Weight decay is decoupled (AdamW).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: Params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params: Params,
+    grads: Params,
+    state: dict,
+    cfg: AdamWConfig,
+    lr_scale: jax.Array | float = 1.0,
+) -> tuple[Params, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(step, *, warmup: int, total: int, min_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, warmup: int, total: int, decay_frac: float = 0.1,
+                 min_ratio: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM): flat LR, then a short final decay."""
+    s = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1 - decay_frac)
+    warm = s / max(warmup, 1)
+    stable = jnp.ones_like(s)
+    prog = jnp.clip((s - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+    decay = min_ratio ** prog  # exponential anneal to min_ratio
+    out = jnp.where(s < warmup, warm, jnp.where(s < decay_start, stable, decay))
+    return out

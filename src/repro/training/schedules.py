@@ -1,0 +1,17 @@
+"""Named LR schedules (fraction-of-base multipliers)."""
+
+from __future__ import annotations
+
+import functools
+
+from .optimizer import cosine_schedule, wsd_schedule
+
+
+def make_schedule(name: str, *, warmup: int, total: int):
+    if name == "cosine":
+        return functools.partial(cosine_schedule, warmup=warmup, total=total)
+    if name == "wsd":  # MiniCPM warmup-stable-decay
+        return functools.partial(wsd_schedule, warmup=warmup, total=total)
+    if name == "const":
+        return lambda step: 1.0
+    raise ValueError(f"unknown schedule {name!r}")

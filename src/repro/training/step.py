@@ -1,0 +1,100 @@
+"""Train / prefill / decode step builders (the functions the launcher jits).
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with loss+grad+AdamW fused in one jit (single-program multiple-data under
+pjit; gradient accumulation wraps it at the driver level).  The same builders
+are used by the dry-run, so what is lowered for the 512-chip mesh is exactly
+what the trainer runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import forward, loss_fn
+from ..serving.decode import decode_step as _decode_step
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+Params = Any
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: AdamWConfig | None = None,
+    *,
+    remat: bool = True,
+    accum_steps: int = 1,
+):
+    """loss+grad+AdamW in one jit; ``accum_steps`` microbatches the global
+    batch with f32 gradient accumulation (the activation-memory knob that
+    fits the train_4k shapes into 16 GB v5e HBM — see EXPERIMENTS §Dry-run).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def grad_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            b = jax.tree.leaves(batch)[0].shape[0]
+            assert b % accum_steps == 0, (b, accum_steps)
+            mbs = b // accum_steps
+
+            def micro(carry, i):
+                g_acc, loss_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * mbs, mbs, axis=0),
+                    batch,
+                )
+                (loss, metrics), g = grad_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, loss_sum), metrics = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), jnp.arange(accum_steps)
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            loss = loss_sum / accum_steps
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    """Full-sequence forward; emits last-position logits (cache materialization
+    is measured by the decode workload — see EXPERIMENTS.md §Dry-run notes)."""
+
+    def prefill_step(params, batch):
+        logits, _ = forward(params, cfg, batch["tokens"], memory=batch.get("memory"),
+                            remat=False)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def serve_step(params, cache, tokens):
+        return _decode_step(params, cfg, cache, tokens)
+
+    return serve_step
+
+
+def init_train_state(cfg, key):
+    from ..models.transformer import init_params
+
+    params = init_params(cfg, key)
+    return params, adamw_init(params)

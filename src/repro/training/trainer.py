@@ -1,0 +1,162 @@
+"""Fault-tolerant training driver.
+
+The loop is crash-equivalent to its checkpoint stream: every ``ckpt_every``
+steps an async atomic checkpoint is written; on *any* step failure the
+driver restores the last committed state and replays (the data pipeline is
+a pure function of step, so replay is exact).  ``max_restarts`` bounds the
+retry budget; a ``fault_hook`` lets tests inject failures at chosen steps.
+
+Straggler mitigation: per-step wall time is tracked with an EWMA; steps
+slower than ``straggler_factor`` x EWMA increment a counter and fire
+``on_straggler`` (on a real cluster this is where a hot spare takes over
+the slow host's shard — single-process here, so the hook logs/records; the
+data pipeline's statelessness is what makes the swap cheap).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from ..data.pipeline import DataConfig, batch_at
+from .checkpoint import CheckpointManager
+from .optimizer import AdamWConfig
+from .schedules import make_schedule
+from .step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    accum_steps: int = 1
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    schedule: str = "cosine"          # cosine | wsd | const
+    warmup: int = 10
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+@dataclass
+class TrainResult:
+    final_step: int
+    losses: list[float]
+    restarts: int
+    straggler_steps: list[int]
+    seconds: float
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg,
+        data_cfg: DataConfig,
+        cfg: TrainerConfig,
+        *,
+        fault_hook: Callable[[int], None] | None = None,
+        on_straggler: Callable[[int, float], None] | None = None,
+    ):
+        self.model_cfg = model_cfg
+        self.data_cfg = data_cfg
+        self.cfg = cfg
+        self.fault_hook = fault_hook
+        self.on_straggler = on_straggler
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+        self.schedule = make_schedule(cfg.schedule, warmup=cfg.warmup, total=cfg.steps)
+        self._step_fn = None
+
+    def _build(self):
+        if self._step_fn is None:
+            raw = make_train_step(
+                self.model_cfg, self.cfg.opt, remat=True,
+                accum_steps=self.cfg.accum_steps,
+            )
+            self._step_fn = jax.jit(raw, donate_argnums=(0, 1))
+        return self._step_fn
+
+    def init_state(self, seed: int = 0):
+        from .step import init_train_state
+
+        return init_train_state(self.model_cfg, jax.random.PRNGKey(seed))
+
+    def run(self, *, seed: int = 0, resume: bool = True) -> TrainResult:
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        step_fn = self._build()
+
+        start = 0
+        params = opt_state = None
+        if resume and self.ckpt.latest_step() is not None:
+            like = self.init_state(seed)
+            start, (params, opt_state) = self.ckpt.restore(None, like)
+            start += 1
+        if params is None:
+            params, opt_state = self.init_state(seed)
+
+        losses: list[float] = []
+        stragglers: list[int] = []
+        restarts = 0
+        ewma = None
+        step = start
+        while step < cfg.steps:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                batch = {
+                    k: jax.numpy.asarray(v)
+                    for k, v in batch_at(self.data_cfg, step).items()
+                }
+                t_step = time.perf_counter()
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t_step
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+                losses.append(loss)
+
+                if ewma is None:
+                    ewma = dt
+                elif dt > cfg.straggler_factor * ewma:
+                    stragglers.append(step)
+                    if self.on_straggler:
+                        self.on_straggler(step, dt / ewma)
+                ewma = 0.9 * (ewma or dt) + 0.1 * dt
+
+                if step % cfg.log_every == 0:
+                    print(f"[train] step {step} loss {loss:.4f} ({dt:.2f}s)",
+                          flush=True)
+                if step % cfg.ckpt_every == 0 or step == cfg.steps - 1:
+                    self.ckpt.save(step, (params, opt_state))
+                step += 1
+            except (KeyboardInterrupt,):
+                raise
+            except Exception as e:  # node failure semantics: restore + replay
+                restarts += 1
+                print(f"[train] step {step} FAILED ({e!r}); "
+                      f"restart {restarts}/{cfg.max_restarts}", flush=True)
+                if restarts > cfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+                like = self.init_state(seed)
+                last = self.ckpt.latest_step()
+                if last is None:
+                    params, opt_state = self.init_state(seed)
+                    step = 0
+                else:
+                    last, (params, opt_state) = self.ckpt.restore(None, like)
+                    step = last + 1
+        self.ckpt.wait()
+        return TrainResult(
+            final_step=step - 1,
+            losses=losses,
+            restarts=restarts,
+            straggler_steps=stragglers,
+            seconds=time.perf_counter() - t0,
+        )

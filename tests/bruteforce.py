@@ -1,0 +1,109 @@
+"""Int64 numpy brute-force oracle for contingency tables.
+
+Enumerates the full cross product of the first-order variables' populations
+and counts every joint par-RV assignment — exponential, test-only.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core.schema import KIND_ENTITY_ATTR, KIND_REL, KIND_REL_ATTR
+
+
+def brute_force_ct(db, rvs: tuple[str, ...], *, group_fovar=None,
+                   restrict=None) -> np.ndarray:
+    cat = db.catalog
+    want = [cat[v] for v in rvs]
+    restrict = restrict or {}
+
+    fovars: list[str] = []
+    for rv in want:
+        for f in rv.fovars:
+            if f.fid not in fovars:
+                fovars.append(f.fid)
+    if group_fovar is not None and group_fovar not in fovars:
+        fovars.append(group_fovar)
+    for f in restrict:
+        if f not in fovars:
+            fovars.append(f)
+
+    pops = {f: db.entities[cat.fovar(f).entity].n_rows for f in fovars}
+    rel_index: dict[str, dict[tuple[int, int], int]] = {}
+    for rname, rel in db.relationships.items():
+        fk1 = np.asarray(rel.fk1)
+        fk2 = np.asarray(rel.fk2)
+        rel_index[rname] = {(int(a), int(b)): i for i, (a, b) in enumerate(zip(fk1, fk2))}
+
+    shape = tuple(v.cardinality for v in want)
+    if group_fovar is not None:
+        shape = (pops[group_fovar],) + shape
+    out = np.zeros(shape, np.int64)
+
+    for combo in itertools.product(*(range(pops[f]) for f in fovars)):
+        assign = dict(zip(fovars, combo))
+        if any(assign[f] != e for f, e in restrict.items()):
+            continue
+        idx = []
+        for rv in want:
+            if rv.kind == KIND_ENTITY_ATTR:
+                row = assign[rv.fovars[0].fid]
+                idx.append(int(np.asarray(db.entities[rv.table].attrs[rv.column])[row]))
+            elif rv.kind == KIND_REL:
+                key = (assign[rv.fovars[0].fid], assign[rv.fovars[1].fid])
+                idx.append(1 if key in rel_index[rv.table] else 0)
+            else:  # rel attr
+                key = (assign[rv.fovars[0].fid], assign[rv.fovars[1].fid])
+                r = rel_index[rv.table].get(key)
+                if r is None:
+                    idx.append(0)
+                else:
+                    idx.append(int(np.asarray(db.relationships[rv.table].attrs[rv.column])[r]))
+        if group_fovar is not None:
+            idx = [assign[group_fovar]] + idx
+        out[tuple(idx)] += 1
+    return out
+
+
+def random_db(seed: int, *, n_entities=(3, 4), n_rel_rows=5, self_rel=False):
+    """Small random database for property tests."""
+    from repro.core.database import from_labels
+    from repro.core.schema import make_schema
+
+    rng = np.random.default_rng(seed)
+    n1, n2 = n_entities
+    schema = make_schema(
+        entities={
+            "alpha": {"a1": ("x", "y"), "a2": ("p", "q", "r")},
+            "beta": {"b1": ("u", "v", "w")},
+        },
+        relationships={
+            "R": (("alpha", "alpha") if self_rel else ("alpha", "beta"),
+                  {"ra": ("m", "n")}),
+        },
+    )
+    ents = {
+        "alpha": {
+            "a1": [("x", "y")[i] for i in rng.integers(0, 2, n1)],
+            "a2": [("p", "q", "r")[i] for i in rng.integers(0, 3, n1)],
+        },
+        "beta": {"b1": [("u", "v", "w")[i] for i in rng.integers(0, 3, n2)]},
+    }
+    lim2 = n1 if self_rel else n2
+    pairs = set()
+    while len(pairs) < min(n_rel_rows, n1 * lim2 - (n1 if self_rel else 0)):
+        i, j = int(rng.integers(0, n1)), int(rng.integers(0, lim2))
+        if self_rel and i == j:
+            continue
+        pairs.add((i, j))
+    pairs = sorted(pairs)
+    rels = {
+        "R": {
+            "fk1": [p[0] for p in pairs],
+            "fk2": [p[1] for p in pairs],
+            "attrs": {"ra": [("m", "n")[i] for i in rng.integers(0, 2, len(pairs))]},
+        }
+    }
+    return from_labels(schema, ents, rels)

@@ -1,0 +1,89 @@
+"""Per-kernel validation: Pallas (interpret on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 5000])
+@pytest.mark.parametrize("bins", [1, 3, 128, 300, 1000])
+def test_ct_count_shapes(n, bins):
+    rng = np.random.default_rng(n * 1000 + bins)
+    keys = rng.integers(-1, bins, size=n).astype(np.int32)
+    out_p = ops.ct_count(jnp.asarray(keys), bins, impl="pallas")
+    out_r = ops.ct_count(jnp.asarray(keys), bins, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_r))
+    assert int(out_p.sum()) == int((keys >= 0).sum())
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_ct_count_weighted(dtype):
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 50, size=3000).astype(np.int32)
+    w = rng.random(3000).astype(dtype)
+    out_p = ops.ct_count(jnp.asarray(keys), 50, jnp.asarray(w), impl="pallas")
+    out_r = ops.ct_count(jnp.asarray(keys), 50, jnp.asarray(w), impl="ref")
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(min_value=-2, max_value=40), min_size=1, max_size=500),
+    st.integers(min_value=1, max_value=41),
+)
+def test_ct_count_property(keys, bins):
+    """counts == exact int histogram; out-of-range dropped (property test)."""
+    arr = np.array(keys, np.int32)
+    out = np.asarray(ops.ct_count(jnp.asarray(arr), bins, impl="pallas"))
+    expect = np.zeros(bins, np.int64)
+    for k in keys:
+        if 0 <= k < bins:
+            expect[k] += 1
+    np.testing.assert_array_equal(out, expect)
+
+
+@pytest.mark.parametrize("p,c", [(1, 2), (5, 3), (64, 7), (130, 9), (513, 2)])
+@pytest.mark.parametrize("alpha", [0.0, 0.5])
+def test_mle_cpt(p, c, alpha):
+    rng = np.random.default_rng(p * 10 + c)
+    ct = rng.integers(0, 20, size=(p, c)).astype(np.float32)
+    ct[0] = 0  # unrealized parent config
+    out_p = ops.mle_cpt(jnp.asarray(ct), alpha, impl="pallas")
+    out_r = ops.mle_cpt(jnp.asarray(ct), alpha, impl="ref")
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_p).sum(axis=1), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(10,), (64, 5), (7, 9, 3), (4096,)])
+def test_factor_loglik(shape):
+    rng = np.random.default_rng(42)
+    ct = rng.integers(0, 30, size=shape).astype(np.float32)
+    cpt = np.asarray(ops.mle_cpt(jnp.asarray(ct.reshape(-1, shape[-1])), 0.3, impl="ref")).reshape(shape)
+    out_p = float(ops.factor_loglik(jnp.asarray(ct), jnp.asarray(cpt), impl="pallas"))
+    out_r = float(ops.factor_loglik(jnp.asarray(ct), jnp.asarray(cpt), impl="ref"))
+    np.testing.assert_allclose(out_p, out_r, rtol=1e-5)
+
+
+def test_factor_loglik_zero_convention():
+    """count 0 contributes 0 even where cp == 0 (0*log0 := 0)."""
+    ct = jnp.asarray([0.0, 2.0])
+    cpt = jnp.asarray([0.0, 0.5])
+    v = float(ops.factor_loglik(ct, cpt, impl="pallas"))
+    np.testing.assert_allclose(v, 2.0 * np.log(0.5), rtol=1e-6)
+
+
+@pytest.mark.parametrize("e,c,y", [(1, 1, 1), (23, 190, 7), (256, 512, 3), (65, 33, 130)])
+def test_block_predict(e, c, y):
+    rng = np.random.default_rng(e + c + y)
+    a = rng.random((e, c)).astype(np.float32)
+    l = rng.standard_normal((c, y)).astype(np.float32)
+    out_p = ops.block_predict(jnp.asarray(a), jnp.asarray(l), impl="pallas")
+    out_r = ops.block_predict(jnp.asarray(a), jnp.asarray(l), impl="ref")
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out_r), a @ l, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,55 @@
+"""§VI prediction: block == single-instance loop, proper probabilities,
+CLL/accuracy metrics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cpt import learn_parameters
+from repro.core.database import university_db
+from repro.core.predict import predict_block, predict_single_loop
+from repro.core.structure import CountCache, learn_and_join
+
+from .bruteforce import random_db
+
+
+def _learned(db):
+    cache = CountCache(db, mode="precount", impl="ref")
+    res = learn_and_join(db, cache, score="aic", max_parents=2, max_chain=1, impl="ref")
+    return res.bn, learn_parameters(res.bn, cache, alpha=0.1, impl="ref")
+
+
+def test_block_equals_single_university():
+    db = university_db()
+    bn, factors = _learned(db)
+    for target in ("intelligence(student0)", "popularity(prof0)"):
+        pb = predict_block(db, bn, factors, target, impl="ref")
+        ps = predict_single_loop(db, bn, factors, target, impl="ref")
+        np.testing.assert_allclose(
+            np.asarray(pb.log_scores), np.asarray(ps.log_scores), atol=1e-4
+        )
+        np.testing.assert_allclose(np.asarray(pb.probs).sum(1), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_block_equals_single_random(seed):
+    db = random_db(seed, n_entities=(3, 3), n_rel_rows=4)
+    bn, factors = _learned(db)
+    target = "a1(alpha0)"
+    pb = predict_block(db, bn, factors, target, impl="ref")
+    ps = predict_single_loop(db, bn, factors, target, impl="ref")
+    np.testing.assert_allclose(
+        np.asarray(pb.log_scores), np.asarray(ps.log_scores), atol=1e-3
+    )
+
+
+def test_metrics():
+    db = university_db()
+    bn, factors = _learned(db)
+    pred = predict_block(db, bn, factors, "intelligence(student0)", impl="ref")
+    true = jnp.asarray(np.asarray(db.entities["student"].attrs["intelligence"]))
+    acc = pred.accuracy(true)
+    cll = pred.conditional_loglik(true)
+    assert 0.0 <= acc <= 1.0
+    assert cll <= 0.0

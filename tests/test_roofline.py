@@ -1,0 +1,113 @@
+"""Roofline machinery: HLO analyzer trip-count awareness (flops must scale
+linearly with scan depth), collective parsing, term computation."""
+
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    compute_terms,
+    model_flops_for,
+    parse_collective_bytes,
+)
+from repro.roofline.hlo import analyze, parse_module
+
+
+def _compile_depth(L):
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config
+    from repro.models.transformer import init_params
+    from repro.training.optimizer import adamw_init
+    from repro.training.step import make_train_step
+
+    cfg = dataclasses.replace(get_config("granite_8b", smoke=True), n_layers=L)
+    key = jax.random.PRNGKey(0)
+    ps = jax.eval_shape(lambda: init_params(cfg, key))
+    os_ = jax.eval_shape(lambda: adamw_init(ps))
+    b = {
+        "tokens": jax.ShapeDtypeStruct((2, 64), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((2, 64), jnp.int32),
+    }
+    step = make_train_step(cfg)
+    comp = jax.jit(step).lower(ps, os_, b).compile()
+    return analyze(comp.as_text())
+
+
+def test_flops_scale_with_scan_depth():
+    """The whole point of the analyzer: XLA counts a scan body once; the
+    analyzer must multiply by trip count, so flops(L) is affine in L with a
+    positive per-layer slope dominating the base."""
+    s2, s4, s8 = _compile_depth(2), _compile_depth(4), _compile_depth(8)
+    d1 = s4.flops - s2.flops
+    d2 = s8.flops - s4.flops
+    assert d1 > 0
+    assert d2 == pytest.approx(2 * d1, rel=0.05)
+    assert s2.trip_counts, "while trip counts must be detected"
+    assert max(s2.trip_counts.values()) == 2
+    assert max(s8.trip_counts.values()) == 8
+
+
+def test_bytes_scale_with_scan_depth():
+    s2, s4, s8 = _compile_depth(2), _compile_depth(4), _compile_depth(8)
+    d1 = s4.bytes - s2.bytes
+    d2 = s8.bytes - s4.bytes
+    assert d1 > 0 and d2 == pytest.approx(2 * d1, rel=0.15)
+
+
+def test_parse_collectives_from_text():
+    txt = """
+  %ar = f32[256,2048]{1,0} all-reduce(%dot), channel_id=1
+  %ag.1 = bf16[8,128]{1,0} all-gather(%x), dimensions={0}
+  %rs = (f32[64]{0}, f32[32]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u32[16]{0} collective-permute(%y), source_target_pairs={{0,1}}
+"""
+    out = parse_collective_bytes(txt)
+    assert out["all-reduce"] == 256 * 2048 * 4 * 2  # x2: RS+AG equivalent
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["reduce-scatter"] == 64 * 4 + 32 * 4
+    assert out["collective-permute"] == 16 * 4
+
+
+def test_compute_terms_bottleneck():
+    t = compute_terms(197e12, 819e9, 0.0, n_chips=256, model_flops=197e12 * 256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.bottleneck in ("compute", "memory")
+    assert t.useful_ratio == pytest.approx(1.0)
+    assert t.roofline_fraction == pytest.approx(1.0)
+    t2 = compute_terms(1e12, 819e9 * 10, 50e9 * 100, n_chips=256, model_flops=1e12 * 256)
+    assert t2.bottleneck == "collective"
+
+
+def test_model_flops_conventions():
+    from repro.configs.base import SHAPES, get_config
+
+    cfg = get_config("phi35_moe")
+    train = model_flops_for(cfg, SHAPES["train_4k"])
+    dec = model_flops_for(cfg, SHAPES["decode_32k"])
+    n_act = cfg.n_active_params()
+    assert train == pytest.approx(6.0 * n_act * 4096 * 256)
+    assert dec == pytest.approx(2.0 * n_act * 128)
+    # MoE active < total
+    assert cfg.n_active_params() < cfg.n_params() / 4
+
+
+def test_parse_module_structure():
+    txt = """HloModule test
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %c = s32[] constant(5)
+  ROOT %t = (s32[], f32[4]) tuple(%c, %gte)
+}
+ENTRY %main (x: f32[4]) -> f32[4] {
+  %x = f32[4] parameter(0)
+  %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[4] get-tuple-element(%w), index=1
+}
+"""
+    comps = parse_module(txt)
+    assert "%body" in comps and "%main" in comps
+    assert any(op.opcode == "while" for op in comps["%main"].ops)

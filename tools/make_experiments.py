@@ -1,0 +1,94 @@
+"""Regenerate the dry-run / roofline tables of EXPERIMENTS.md from the JSON
+cache.  Usage: PYTHONPATH=src python tools/make_experiments.py [--print]
+(prints markdown to stdout; EXPERIMENTS.md embeds the output manually with
+commentary around it)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from pathlib import Path
+
+DRYRUN = Path("results/dryrun")
+
+ARCHS = (
+    "mamba2_130m", "llama32_vision_90b", "hymba_1_5b", "qwen3_4b",
+    "granite_8b", "qwen15_32b", "minicpm_2b", "whisper_medium",
+    "phi35_moe", "arctic_480b",
+)
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def recs():
+    out = {}
+    for f in glob.glob(str(DRYRUN / "*.json")):
+        r = json.loads(Path(f).read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def dryrun_table(r):
+    lines = [
+        "| arch | shape | single-pod (256) | multi-pod (512) | HBM GB/dev | collective schedule (single-pod, GB/dev) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            rs = r.get((a, s, "single"))
+            rm = r.get((a, s, "multi"))
+            if rs is None:
+                continue
+            if rs["status"] == "skip":
+                lines.append(f"| {a} | {s} | skip | skip | — | {rs['reason'][:58]} |")
+                continue
+
+            def cell(x):
+                if x is None:
+                    return "—"
+                if x["status"] == "ok":
+                    return f"ok ({x['compile_s']:.0f}s)"
+                return x["status"].upper()
+
+            mem = rs.get("memory_analysis", {}).get("peak_bytes_est", 0) / 1e9 \
+                if rs["status"] == "ok" else 0
+            coll = rs.get("collectives", {}) if rs["status"] == "ok" else {}
+            coll_s = " ".join(f"{k.replace('all-','A').replace('reduce-scatter','RS').replace('collective-permute','CP')}:{v/1e9:.1f}"
+                              for k, v in sorted(coll.items(), key=lambda kv: -kv[1]))
+            lines.append(f"| {a} | {s} | {cell(rs)} | {cell(rm)} | {mem:.1f} | {coll_s} |")
+    return "\n".join(lines)
+
+
+def roofline_table(r):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | MODEL_FLOPS | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            x = r.get((a, s, "single"))
+            if x is None or x["status"] == "skip":
+                continue
+            if x["status"] != "ok":
+                lines.append(f"| {a} | {s} | ERROR | | | | | | |")
+                continue
+            rf = x["roofline"]
+            lines.append(
+                f"| {a} | {s} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+                f"{rf['collective_s']:.3f} | **{rf['bottleneck']}** | "
+                f"{rf['model_flops']:.3g} | {rf['useful_ratio']:.3f} | "
+                f"{rf['roofline_fraction']:.4f} |"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    r = recs()
+    n_ok = sum(1 for x in r.values() if x["status"] == "ok")
+    n_skip = sum(1 for x in r.values() if x["status"] == "skip")
+    n_err = sum(1 for x in r.values() if x["status"] not in ("ok", "skip"))
+    print(f"<!-- cells: ok={n_ok} skip={n_skip} err={n_err} -->\n")
+    print("### Dry-run matrix\n")
+    print(dryrun_table(r))
+    print("\n### Roofline (single-pod, per-device terms)\n")
+    print(roofline_table(r))
