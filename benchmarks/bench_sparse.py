@@ -1,0 +1,111 @@
+"""Dense vs sparse CT backends: build time and peak cells vs domain size.
+
+The paper's Table VI point, measured on this reproduction: the dense backend
+materializes the full domain cross product, so its cell count explodes as
+attribute cardinality and relationship-chain depth grow; the sparse COO
+backend stores only realized sufficient statistics (#SS), bounded by the
+data.  The sweep scales a chain schema until the dense joint would need
+>10^9 cells — configurations only the sparse path can build.
+
+CSV rows:
+    sparse/<config>/dense  — dense build (or `oom` when over budget)
+    sparse/<config>/sparse — sparse build, with #SS and the dense:SS ratio
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.counts import dense_cells_of, joint_contingency_table
+from repro.core.database import from_labels
+from repro.core.schema import make_schema
+
+from .common import emit, timed
+
+# Dense builds above this many cells are skipped (reported as `oom`); the
+# default DENSE_CELL_BUDGET would auto-switch them to sparse anyway.
+DENSE_BENCH_CAP = 1 << 24
+
+
+def chain_db(depth: int, card: int, n_attrs: int, n_rows: int = 40, seed: int = 0):
+    """Entities e0..e<depth> (each with ``n_attrs`` card-``card`` attributes)
+    linked by a chain of ``depth`` relationships — the deep-chain workload."""
+    rng = np.random.default_rng(seed)
+    dom = tuple(str(i) for i in range(card))
+    entities = {
+        f"e{k}": {f"a{k}_{i}": dom for i in range(n_attrs)} for k in range(depth + 1)
+    }
+    relationships = {
+        f"r{k}": ((f"e{k}", f"e{k + 1}"), {}) for k in range(depth)
+    }
+    schema = make_schema(entities=entities, relationships=relationships)
+    ents = {
+        f"e{k}": {
+            f"a{k}_{i}": [dom[j] for j in rng.integers(0, card, n_rows)]
+            for i in range(n_attrs)
+        }
+        for k in range(depth + 1)
+    }
+    rels = {}
+    for k in range(depth):
+        pairs = sorted(
+            {(int(rng.integers(0, n_rows)), int(rng.integers(0, n_rows)))
+             for _ in range(2 * n_rows)}
+        )
+        rels[f"r{k}"] = {"fk1": [p[0] for p in pairs], "fk2": [p[1] for p in pairs],
+                         "attrs": {}}
+    return from_labels(schema, ents, rels)
+
+
+def run(configs=None) -> list[dict]:
+    """Sweep (depth, cardinality, n_attrs); returns the measured rows."""
+    configs = configs or [
+        # scale attribute cardinality at fixed shallow chain
+        (1, 4, 2), (1, 8, 2), (1, 16, 2),
+        # scale chain depth at fixed cardinality
+        (2, 8, 2), (3, 8, 2),
+        # the blow-up regime: dense joint > 10^9 cells, sparse still easy
+        (2, 16, 3), (3, 16, 3),
+    ]
+    rows = []
+    for depth, card, n_attrs in configs:
+        db = chain_db(depth, card, n_attrs)
+        vids = tuple(v.vid for v in db.catalog.par_rvs)
+        cells = dense_cells_of(db, vids)
+        name = f"d{depth}c{card}a{n_attrs}"
+
+        if cells <= DENSE_BENCH_CAP:
+            _, dsecs = timed(joint_contingency_table, db, impl="ref")
+            emit(f"sparse/{name}/dense", dsecs, f"cells={cells:.3g}")
+        else:
+            emit(f"sparse/{name}/dense", 0.0, f"oom;cells={cells:.3g}")
+            dsecs = math.inf
+
+        ct, ssecs = timed(joint_contingency_table, db, impl="sparse")
+        nss = ct.n_nonzero()
+        emit(
+            f"sparse/{name}/sparse",
+            ssecs,
+            f"SS={nss};cells={cells:.3g};ratio={cells / max(nss, 1):.3g}",
+        )
+        rows.append(
+            {"name": name, "cells": cells, "n_ss": nss,
+             "dense_s": dsecs, "sparse_s": ssecs}
+        )
+    biggest = max(r["cells"] for r in rows)
+    assert biggest > 10**9, "sweep must include a >10^9-dense-cell config"
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    argparse.ArgumentParser().parse_args(argv)
+    print("name,us_per_call,derived")
+    run()
+
+
+if __name__ == "__main__":
+    main()

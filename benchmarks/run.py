@@ -24,7 +24,7 @@ def main(argv: list[str] | None = None) -> None:
     p.add_argument("--fast", action="store_true", help="tiny datasets (CI smoke)")
     p.add_argument("--paper-scale", action="store_true", help="full 10^6-tuple runs")
     p.add_argument("--skip", nargs="*", default=[],
-                   help="benches to skip: counts params structure predict kernels roofline")
+                   help="benches to skip: counts sparse params structure predict kernels roofline")
     a = p.parse_args(argv)
 
     scale = 0.02 if a.fast else (1.0 if a.paper_scale else None)
@@ -46,6 +46,14 @@ def main(argv: list[str] | None = None) -> None:
         from . import bench_counts
 
         bench_counts.run(datasets, scale)
+
+    if "sparse" not in a.skip:
+        from . import bench_sparse
+
+        # --fast drops the multi-second deep-chain builds, keeps the >10^9
+        # dense-cell demo (which is fast *because* it is sparse)
+        cfgs = [(1, 8, 2), (2, 8, 2), (2, 16, 3)] if a.fast else None
+        bench_sparse.run(cfgs)
 
     if "params" not in a.skip:
         from . import bench_params

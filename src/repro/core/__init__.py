@@ -12,12 +12,16 @@ Pipeline (paper Figure 4):
 
 from .bn import BayesNet
 from .counts import (
+    CTLike,
     ContingencyTable,
+    DENSE_CELL_BUDGET,
     contingency_table,
     ct_conditional,
     joint_contingency_table,
+    set_dense_cell_budget,
 )
 from .cpt import FactorTable, learn_parameters, mle_factor
+from .sparse_counts import SparseCT
 from .database import (
     EntityTable,
     RelationalDatabase,
@@ -39,7 +43,8 @@ from .scores import ScoreTable, score_family, score_structure
 from .structure import CountCache, LearnAndJoinResult, hill_climb, learn_and_join
 
 __all__ = [
-    "BayesNet", "ContingencyTable", "contingency_table", "ct_conditional",
+    "BayesNet", "CTLike", "ContingencyTable", "DENSE_CELL_BUDGET", "SparseCT",
+    "set_dense_cell_budget", "contingency_table", "ct_conditional",
     "joint_contingency_table", "FactorTable", "learn_parameters", "mle_factor",
     "EntityTable", "RelationalDatabase", "RelationshipTable", "from_labels",
     "university_db", "PredictionResult", "predict_block", "predict_single_loop",

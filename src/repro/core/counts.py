@@ -1,4 +1,4 @@
-"""The Count Manager (paper §IV): contingency tables as dense tensors.
+"""The Count Manager (paper §IV): dense and sparse contingency tables.
 
 The contingency-table problem: given par-RVs **V** and a database instance,
 produce the table of counts of every joint value assignment, where the count
@@ -20,8 +20,25 @@ TPU-native construction (replaces the SQL metaquery pipeline):
     "don't-care" table of an untouched population is just an outer product
     of entity-attribute histograms.
 
-Counts are float32 tensors (exact for cells < 2**24; tests cross-check an
-int64 numpy brute force on small instances).  Every public function is
+Two storage backends implement the same :class:`CTLike` interface:
+
+  * :class:`ContingencyTable` — one dense float32 tensor cell per joint
+    value; the Pallas ``ct_count`` histogram is the fast path.  Cell count
+    is the full domain cross product, so it only fits small bounded domains.
+  * :class:`~repro.core.sparse_counts.SparseCT` — COO over mixed-radix
+    composite codes storing only *realized* sufficient statistics (the
+    paper's #SS, vastly smaller than the cross product; §IV).  Built by
+    sort-then-segment-sum; ``impl="sparse"`` selects it explicitly.
+
+**Auto-switch heuristic:** with ``impl="auto"`` the dense/Pallas path is used
+while the dense cell count (domain cross product, times the group-entity
+population for §VI block queries) stays within :data:`DENSE_CELL_BUDGET`
+(default ``2**26`` cells ≈ 256 MiB of float32); beyond it the query silently
+switches to the sparse backend.  The knob is configurable per call
+(``dense_cell_budget=...``) or globally (:func:`set_dense_cell_budget`).
+
+Counts are float32 (exact for cells < 2**24; tests cross-check an int64
+numpy brute force on small instances).  Every public function is
 metadata-driven via the :class:`VariableCatalog` — the analogue of the
 paper's metaqueries reading the VDB.
 """
@@ -29,8 +46,9 @@ paper's metaqueries reading the VDB.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import reduce
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +63,47 @@ from .schema import (
     ParRV,
     VariableCatalog,
 )
+
+
+# ---------------------------------------------------------------------------
+# Backend selection
+# ---------------------------------------------------------------------------
+
+#: Max dense cells ``impl="auto"`` will materialize before switching to the
+#: sparse COO backend (2**26 float32 cells = 256 MiB).  See module docstring.
+DENSE_CELL_BUDGET: int = 1 << 26
+
+
+def set_dense_cell_budget(n_cells: int) -> int:
+    """Set the global dense/sparse auto-switch budget; returns the old value."""
+    global DENSE_CELL_BUDGET
+    old, DENSE_CELL_BUDGET = DENSE_CELL_BUDGET, int(n_cells)
+    return old
+
+
+@runtime_checkable
+class CTLike(Protocol):
+    """What score/structure/prediction layers require of a contingency table.
+
+    Both the dense :class:`ContingencyTable` and the COO
+    :class:`~repro.core.sparse_counts.SparseCT` satisfy this protocol, so
+    every consumer (``scores.py``, ``structure.py``, ``predict.py``) works
+    with either backend unchanged.
+    """
+
+    @property
+    def rvs(self) -> tuple[str, ...]: ...
+
+    @property
+    def n_cells(self) -> int: ...
+
+    def total(self): ...
+
+    def n_nonzero(self) -> int: ...
+
+    def marginal(self, keep: tuple[str, ...]) -> "CTLike": ...
+
+    def transpose(self, order: tuple[str, ...]) -> "CTLike": ...
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +202,140 @@ def _rel_fk(db: RelationalDatabase, rel_name: str, fovar_id: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Query planning (shared by the dense and sparse backends)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QueryPlan:
+    """Validated join-tree plan for one conditional count query.
+
+    Produced by :func:`plan_conditional` and consumed by both the dense
+    join-tree contraction below and the sparse builder in
+    :mod:`repro.core.sparse_counts` — the two backends share universe
+    resolution, attribute grouping, join-graph construction and all input
+    validation, and differ only in how messages are materialized.
+    """
+
+    universe: tuple[str, ...]                       # first-order variables
+    ent_attrs: dict[str, list[ParRV]]               # fovar id -> its attr rvs
+    rel_attrs: dict[str, list[ParRV]]               # rel name -> its attr rvs
+    adj: dict[str, list[tuple[str, str]]]           # fovar -> [(rel, other)]
+    comps: tuple[tuple[str, ...], ...]              # connected components
+    comp_of: dict[str, int]
+    restrict: dict[str, int] = field(default_factory=dict)
+    group_fovar: str | None = None
+
+
+def plan_conditional(
+    db: RelationalDatabase,
+    attr_rvs: tuple[str, ...],
+    cond_true: tuple[str, ...],
+    fovar_universe: tuple[str, ...] | None = None,
+    *,
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+) -> QueryPlan:
+    """Validate a conditional count query and plan its join-tree contraction."""
+    cat = db.catalog
+    rvs = [cat[v] for v in attr_rvs]
+    for rv in rvs:
+        if rv.kind == KIND_REL:
+            raise ValueError(
+                f"{rv.vid} is a relationship par-RV; use contingency_table() "
+                "for queries with relationship variables"
+            )
+    for rv in rvs:
+        if rv.kind == KIND_REL_ATTR and rv.table not in cond_true:
+            raise ValueError(
+                f"{rv.vid}: relationship attribute requires {rv.table} in cond_true"
+            )
+
+    # First-order variable universe.
+    q_fovars: list[str] = []
+    for rv in rvs:
+        for f in rv.fovars:
+            if f.fid not in q_fovars:
+                q_fovars.append(f.fid)
+    for rname in cond_true:
+        for f in cat.rel_var_of(rname).fovars:
+            if f.fid not in q_fovars:
+                q_fovars.append(f.fid)
+    restrict = dict(restrict or {})
+    if group_fovar is not None and group_fovar not in q_fovars:
+        q_fovars.append(group_fovar)
+    for f in restrict:
+        if f not in q_fovars:
+            q_fovars.append(f)
+    universe = list(fovar_universe) if fovar_universe is not None else q_fovars
+    for f in (group_fovar,) if group_fovar is not None else ():
+        if f not in universe:
+            universe.append(f)
+    for f in restrict:
+        if f not in universe:
+            universe.append(f)
+    for f in q_fovars:
+        if f not in universe:
+            raise ValueError(f"query fovar {f} outside universe {universe}")
+
+    # Group attribute rvs.
+    ent_attrs: dict[str, list[ParRV]] = {f: [] for f in universe}
+    rel_attrs: dict[str, list[ParRV]] = {r: [] for r in cond_true}
+    for rv in rvs:
+        if rv.kind == KIND_ENTITY_ATTR:
+            ent_attrs[rv.fovars[0].fid].append(rv)
+        else:
+            rel_attrs[rv.table].append(rv)
+
+    # Join graph over first-order variables.
+    adj: dict[str, list[tuple[str, str]]] = {f: [] for f in universe}
+    for rname in cond_true:
+        f1, f2 = (f.fid for f in cat.rel_var_of(rname).fovars)
+        if f1 == f2:
+            raise NotImplementedError("degenerate self-loop relationship")
+        adj[f1].append((rname, f2))
+        adj[f2].append((rname, f1))
+
+    # Connected components over the universe.
+    comp_of: dict[str, int] = {}
+    comps: list[tuple[str, ...]] = []
+    for f in universe:
+        if f in comp_of:
+            continue
+        stack, comp = [f], []
+        comp_of[f] = len(comps)
+        while stack:
+            g = stack.pop()
+            comp.append(g)
+            for _, h in adj[g]:
+                if h not in comp_of:
+                    comp_of[h] = len(comps)
+                    stack.append(h)
+        comps.append(tuple(comp))
+
+    n_edges_by_comp = [0] * len(comps)
+    for rname in cond_true:
+        f1 = cat.rel_var_of(rname).fovars[0].fid
+        n_edges_by_comp[comp_of[f1]] += 1
+    for ci, comp in enumerate(comps):
+        if n_edges_by_comp[ci] != len(comp) - 1 and n_edges_by_comp[ci] > 0:
+            raise NotImplementedError(
+                f"cyclic join graph in component {list(comp)}; only trees/chains supported"
+            )
+
+    return QueryPlan(
+        universe=tuple(universe),
+        ent_attrs=ent_attrs,
+        rel_attrs=rel_attrs,
+        adj=adj,
+        comps=tuple(comps),
+        comp_of=comp_of,
+        restrict=restrict,
+        group_fovar=group_fovar,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Join-tree contraction: CT conditioned on relationships = True
 # ---------------------------------------------------------------------------
 
@@ -199,92 +392,26 @@ def ct_conditional(
     maps first-order variables to a single entity row (the single-instance
     ``WHERE S.s_id = jack`` baseline) — counting is restricted to groundings
     using exactly that entity.
+
+    ``impl="sparse"`` delegates to the COO backend and returns a
+    :class:`~repro.core.sparse_counts.SparseCT` (same cells, sparse storage).
     """
+    if impl == "sparse":
+        from .sparse_counts import sparse_ct_conditional
+
+        return sparse_ct_conditional(
+            db, attr_rvs, cond_true, fovar_universe,
+            group_fovar=group_fovar, restrict=restrict,
+        )
+
     cat = db.catalog
-    rvs = [cat[v] for v in attr_rvs]
-    for rv in rvs:
-        if rv.kind == KIND_REL:
-            raise ValueError(
-                f"{rv.vid} is a relationship par-RV; use contingency_table() "
-                "for queries with relationship variables"
-            )
-    for rv in rvs:
-        if rv.kind == KIND_REL_ATTR and rv.table not in cond_true:
-            raise ValueError(
-                f"{rv.vid}: relationship attribute requires {rv.table} in cond_true"
-            )
-
-    # First-order variable universe.
-    q_fovars: list[str] = []
-    for rv in rvs:
-        for f in rv.fovars:
-            if f.fid not in q_fovars:
-                q_fovars.append(f.fid)
-    for rname in cond_true:
-        for f in cat.rel_var_of(rname).fovars:
-            if f.fid not in q_fovars:
-                q_fovars.append(f.fid)
-    restrict = restrict or {}
-    if group_fovar is not None and group_fovar not in q_fovars:
-        q_fovars.append(group_fovar)
-    for f in restrict:
-        if f not in q_fovars:
-            q_fovars.append(f)
-    universe = list(fovar_universe) if fovar_universe is not None else q_fovars
-    for f in (group_fovar,) if group_fovar is not None else ():
-        if f not in universe:
-            universe.append(f)
-    for f in restrict:
-        if f not in universe:
-            universe.append(f)
-    for f in q_fovars:
-        if f not in universe:
-            raise ValueError(f"query fovar {f} outside universe {universe}")
-
-    # Group attribute rvs.
-    ent_attrs: dict[str, list[ParRV]] = {f: [] for f in universe}
-    rel_attrs: dict[str, list[ParRV]] = {r: [] for r in cond_true}
-    for rv in rvs:
-        if rv.kind == KIND_ENTITY_ATTR:
-            ent_attrs[rv.fovars[0].fid].append(rv)
-        else:
-            rel_attrs[rv.table].append(rv)
-
-    # Join graph over first-order variables.
-    adj: dict[str, list[tuple[str, str]]] = {f: [] for f in universe}  # fid -> [(rel, other)]
-    for rname in cond_true:
-        f1, f2 = (f.fid for f in cat.rel_var_of(rname).fovars)
-        if f1 == f2:
-            raise NotImplementedError("degenerate self-loop relationship")
-        adj[f1].append((rname, f2))
-        adj[f2].append((rname, f1))
-
-    # Connected components over the universe.
-    comp_of: dict[str, int] = {}
-    comps: list[list[str]] = []
-    for f in universe:
-        if f in comp_of:
-            continue
-        stack, comp = [f], []
-        comp_of[f] = len(comps)
-        while stack:
-            g = stack.pop()
-            comp.append(g)
-            for _, h in adj[g]:
-                if h not in comp_of:
-                    comp_of[h] = len(comps)
-                    stack.append(h)
-        comps.append(comp)
-
-    n_edges_by_comp = [0] * len(comps)
-    for rname in cond_true:
-        f1 = cat.rel_var_of(rname).fovars[0].fid
-        n_edges_by_comp[comp_of[f1]] += 1
-    for ci, comp in enumerate(comps):
-        if n_edges_by_comp[ci] != len(comp) - 1 and n_edges_by_comp[ci] > 0:
-            raise NotImplementedError(
-                f"cyclic join graph in component {comp}; only trees/chains supported"
-            )
+    plan = plan_conditional(
+        db, attr_rvs, cond_true, fovar_universe,
+        group_fovar=group_fovar, restrict=restrict,
+    )
+    ent_attrs, rel_attrs = plan.ent_attrs, plan.rel_attrs
+    adj, comps, comp_of = plan.adj, plan.comps, plan.comp_of
+    restrict = plan.restrict
 
     def fovar_n_rows(fid: str) -> int:
         return db.entities[cat.fovar(fid).entity].n_rows
@@ -486,25 +613,18 @@ def ct_conditional(
 # ---------------------------------------------------------------------------
 
 
-def contingency_table(
+def mobius_setup(
     db: RelationalDatabase,
     rvs: tuple[str, ...],
-    *,
-    impl: str = "auto",
-    group_fovar: str | None = None,
-    restrict: dict[str, int] | None = None,
-    fovar_universe: tuple[str, ...] | None = None,
-) -> ContingencyTable:
-    """Full contingency table for any par-RV set (paper Fig. 3(c)).
+    fovar_universe: tuple[str, ...] | None,
+) -> tuple[list[ParRV], list[str], list[str], tuple[str, ...], tuple[str, ...]]:
+    """Shared pre-work of the Möbius recursion (dense and sparse backends).
 
-    Relationship par-RVs become F/T axes; their attributes get ``n/a`` rows.
-    Internally, any relationship whose attributes appear without its
-    indicator is temporarily added, and summed out at the end.
-
-    With ``group_fovar``, the result carries a leading ``__group__`` axis
-    indexed by that entity's rows (§VI block access); with ``restrict``,
-    counts cover only groundings through the given entity rows (§VI single
-    access).
+    Returns ``(want, rel_names, added, attr_rvs, universe)``: the resolved
+    par-RVs, the relationships whose indicator must be recursed over (with
+    ``added`` naming the ones injected only to support their attributes), the
+    non-indicator query rvs, and the fixed first-order-variable universe so
+    every branch of the recursion counts over the same grounding space.
     """
     cat = db.catalog
     want = [cat[v] for v in rvs]
@@ -534,7 +654,80 @@ def contingency_table(
         for f in cat.rel_var_of(rname).fovars:
             if f.fid not in universe:
                 universe.append(f.fid)
-    universe_t = tuple(universe)
+    return want, rel_names, added, attr_rvs, tuple(universe)
+
+
+def dense_cells_of(
+    db: RelationalDatabase,
+    rvs: tuple[str, ...],
+    group_fovar: str | None = None,
+) -> int:
+    """Dense cell count a query would materialize (exact Python int)."""
+    cat = db.catalog
+    cells = math.prod(cat[v].cardinality for v in rvs) if rvs else 1
+    if group_fovar is not None:
+        cells *= db.entities[cat.fovar(group_fovar).entity].n_rows
+    return cells
+
+
+_VALID_IMPLS = ("auto", "pallas", "ref", "matmul", "sparse")
+
+
+def _pick_backend(
+    db: RelationalDatabase,
+    rvs: tuple[str, ...],
+    impl: str,
+    group_fovar: str | None,
+    dense_cell_budget: int | None,
+) -> str:
+    """"dense" or "sparse" — the auto-switch heuristic (module docstring)."""
+    if impl not in _VALID_IMPLS:
+        raise ValueError(f"impl must be one of {_VALID_IMPLS}, got {impl!r}")
+    if impl == "sparse":
+        return "sparse"
+    budget = DENSE_CELL_BUDGET if dense_cell_budget is None else dense_cell_budget
+    if impl == "auto" and dense_cells_of(db, rvs, group_fovar) > budget:
+        return "sparse"
+    return "dense"
+
+
+def contingency_table(
+    db: RelationalDatabase,
+    rvs: tuple[str, ...],
+    *,
+    impl: str = "auto",
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+    fovar_universe: tuple[str, ...] | None = None,
+    dense_cell_budget: int | None = None,
+) -> CTLike:
+    """Full contingency table for any par-RV set (paper Fig. 3(c)).
+
+    Relationship par-RVs become F/T axes; their attributes get ``n/a`` rows.
+    Internally, any relationship whose attributes appear without its
+    indicator is temporarily added, and summed out at the end.
+
+    With ``group_fovar``, the result carries a leading ``__group__`` axis
+    indexed by that entity's rows (§VI block access); with ``restrict``,
+    counts cover only groundings through the given entity rows (§VI single
+    access).
+
+    Returns a dense :class:`ContingencyTable` or, when ``impl="sparse"`` is
+    forced or ``impl="auto"`` finds the dense cell count above
+    ``dense_cell_budget`` (default :data:`DENSE_CELL_BUDGET`), a COO
+    :class:`~repro.core.sparse_counts.SparseCT` with identical cells.
+    """
+    if _pick_backend(db, rvs, impl, group_fovar, dense_cell_budget) == "sparse":
+        from .sparse_counts import sparse_contingency_table
+
+        return sparse_contingency_table(
+            db, rvs,
+            group_fovar=group_fovar, restrict=restrict,
+            fovar_universe=fovar_universe,
+        )
+
+    cat = db.catalog
+    want, rel_names, added, attr_rvs, universe_t = mobius_setup(db, rvs, fovar_universe)
 
     g_prefix: tuple[str, ...] = (GROUP_AXIS,) if group_fovar is not None else ()
 
@@ -593,21 +786,29 @@ def contingency_table(
 
 
 def joint_contingency_table(
-    db: RelationalDatabase, *, impl: str = "auto"
-) -> ContingencyTable:
+    db: RelationalDatabase, *, impl: str = "auto", dense_cell_budget: int | None = None
+) -> CTLike:
     """The pre-counting joint CT over *all* par-RVs (paper §VII-B).
 
     This is the maximally-challenging count-manager workload: every entity
     attribute, relationship indicator and relationship attribute of the
     catalog in one table.  Local family CTs are then GROUP BY marginals
-    (:meth:`ContingencyTable.marginal`), which is why pre-counting makes
+    (``.marginal`` on either backend), which is why pre-counting makes
     structure search fast.
+
+    With ``impl="auto"`` the joint switches to the sparse COO backend once
+    its dense cell count exceeds the budget — pre-counting then scales with
+    the *realized* sufficient statistics (#SS) instead of the domain cross
+    product.  A forced dense ``impl`` keeps the historical hard cap.
     """
     vids = tuple(v.vid for v in db.catalog.par_rvs)
-    cells = math.prod(db.catalog[v].cardinality for v in vids)
+    if _pick_backend(db, vids, impl, None, dense_cell_budget) == "sparse":
+        return contingency_table(db, vids, impl="sparse")
+    cells = dense_cells_of(db, vids)
     if cells > 2**28:
         raise MemoryError(
-            f"joint CT would have {cells:.3g} dense cells; use factored/on-demand "
-            "counting (ct_conditional + contingency_table on family subsets)"
+            f"joint CT would have {cells:.3g} dense cells; use impl='sparse' "
+            "(COO sufficient statistics) or factored/on-demand counting "
+            "(ct_conditional + contingency_table on family subsets)"
         )
     return contingency_table(db, vids, impl=impl)

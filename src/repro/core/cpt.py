@@ -16,7 +16,7 @@ import numpy as np
 
 from ..kernels import ops
 from .bn import BayesNet
-from .counts import ContingencyTable
+from .counts import CTLike, ContingencyTable
 from .schema import VariableCatalog
 
 
@@ -47,25 +47,38 @@ class FactorTable:
         return self.n_parent_configs * (self.table.shape[-1] - 1)
 
 
-def family_ct(joint_or_local: ContingencyTable, child: str, parents: tuple[str, ...]) -> ContingencyTable:
+def family_ct(joint_or_local: CTLike, child: str, parents: tuple[str, ...]) -> CTLike:
     """Family CT with axes (*parents, child) from any CT covering the family."""
     return joint_or_local.marginal(tuple(parents) + (child,))
 
 
 def mle_factor(
-    fct: ContingencyTable,
+    fct: CTLike,
     child: str,
     parents: tuple[str, ...],
     alpha: float = 0.0,
     *,
     impl: str = "auto",
 ) -> FactorTable:
-    """Maximum-likelihood CPT from a family contingency table."""
+    """Maximum-likelihood CPT from a family contingency table.
+
+    Factor tables are dense (one ``cp`` per family configuration), so a
+    sparse family CT is densified here — family domains are bounded by
+    ``max_parents``, unlike the joint CTs the sparse backend exists for.
+    Structure-search scoring never calls this on sparse CTs (see
+    ``scores.score_family``); only final parameter learning does.
+    """
+    from .sparse_counts import SparseCT
+
+    if isinstance(fct, SparseCT):
+        from .counts import DENSE_CELL_BUDGET
+
+        fct = fct.to_dense(budget=DENSE_CELL_BUDGET)
     ct = fct.transpose(tuple(parents) + (child,))
     t = ct.table
     child_card = t.shape[-1]
     flat = t.reshape(-1, child_card)
-    cpt = ops.mle_cpt(flat, alpha, impl=impl)
+    cpt = ops.mle_cpt(flat, alpha, impl=ops.kernel_impl(impl))
     return FactorTable(child, tuple(parents), cpt.reshape(t.shape))
 
 

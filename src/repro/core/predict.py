@@ -28,6 +28,7 @@ from .bn import BayesNet
 from .counts import GROUP_AXIS, contingency_table
 from .cpt import FactorTable
 from .database import RelationalDatabase
+from .sparse_counts import SparseCT, sparse_block_scores
 
 _LOG_TINY = 1e-30
 
@@ -84,17 +85,25 @@ def predict_block(
     n_y = target_rv.cardinality
 
     scores = jnp.zeros((n_entities, n_y), jnp.float32)
+    kimpl = ops.kernel_impl(impl)
     for child in _families_with(bn, target):
         factor = factors[child]
         rest, logmat = _log_factor_matrix(factor, target)
         if rest:
             gct = contingency_table(db, rest, impl=impl, group_fovar=fovar)
             gct = gct.transpose((GROUP_AXIS,) + rest)
+            if isinstance(gct, SparseCT):
+                # realized-cells-only scatter instead of the dense matmul
+                contrib = sparse_block_scores(
+                    gct, np.asarray(logmat, np.float32).reshape(-1, n_y), n_entities
+                )
+                scores = scores + jnp.asarray(contrib)
+                continue
             counts = gct.table.reshape(n_entities, -1)
         else:
             # family is {Y} alone: every entity contributes exactly one grounding
             counts = jnp.ones((n_entities, 1), jnp.float32)
-        scores = scores + ops.block_predict(counts, logmat.reshape(-1, n_y), impl=impl)
+        scores = scores + ops.block_predict(counts, logmat.reshape(-1, n_y), impl=kimpl)
 
     logz = jax.scipy.special.logsumexp(scores, axis=1, keepdims=True)
     probs = jnp.exp(scores - logz)
@@ -130,15 +139,23 @@ def predict_single_loop(
         fams.append((rest, logmat.reshape(-1, n_y)))
 
     rows = []
+    kimpl = ops.kernel_impl(impl)
     for e in range(n):
         s = jnp.zeros((n_y,), jnp.float32)
         for rest, logmat in fams:
             if rest:
                 ct = contingency_table(db, rest, impl=impl, restrict={fovar: e})
+                if isinstance(ct, SparseCT):
+                    ct = ct.transpose(rest)
+                    lm = np.asarray(logmat, np.float32)
+                    s = s + jnp.asarray(
+                        (ct.counts[:, None] * lm[ct.codes]).sum(0, dtype=np.float32)
+                    )
+                    continue
                 counts = ct.transpose(rest).table.reshape(1, -1)
             else:
                 counts = jnp.ones((1, 1), jnp.float32)
-            s = s + ops.block_predict(counts, logmat, impl=impl)[0]
+            s = s + ops.block_predict(counts, logmat, impl=kimpl)[0]
         rows.append(s)
     scores = jnp.stack(rows, axis=0)
     logz = jax.scipy.special.logsumexp(scores, axis=1, keepdims=True)

@@ -4,6 +4,12 @@ BN scores are decomposable: the total is a sum of per-family local scores,
 each computed from the family CT and factor table by the
 ``SUM(count * log cp)`` contraction (Pallas ``factor_loglik`` kernel on TPU).
 The ``Scores`` MDB table becomes :class:`ScoreTable`.
+
+Both count backends are accepted (the ``CTLike`` protocol): dense family CTs
+go through the factor-table kernels; sparse family CTs are scored over their
+*realized cells only* (``sparse_family_stats``) without ever materializing
+the dense family tensor — numerically identical by the 0·log0 := 0
+convention.
 """
 
 from __future__ import annotations
@@ -15,8 +21,9 @@ import jax.numpy as jnp
 
 from ..kernels import ops
 from .bn import BayesNet
-from .counts import ContingencyTable
+from .counts import CTLike, ContingencyTable
 from .cpt import FactorTable, mle_factor
+from .sparse_counts import SparseCT, sparse_factor_loglik, sparse_family_stats
 
 
 @dataclass(frozen=True)
@@ -56,11 +63,13 @@ class ScoreTable:
 
 
 def family_loglik(
-    fct: ContingencyTable, factor: FactorTable, *, impl: str = "auto"
+    fct: CTLike, factor: FactorTable, *, impl: str = "auto"
 ) -> float:
     """sum(count * log cp) for one family (the §V-C SQL query)."""
+    if isinstance(fct, SparseCT):
+        return sparse_factor_loglik(fct, factor.rvs, factor.table)
     ct = fct.transpose(factor.rvs)
-    return float(ops.factor_loglik(ct.table, factor.table, impl=impl))
+    return float(ops.factor_loglik(ct.table, factor.table, impl=ops.kernel_impl(impl)))
 
 
 def score_family(
@@ -71,8 +80,16 @@ def score_family(
     *,
     impl: str = "auto",
 ) -> FamilyScore:
-    """MLE-fit one family and return its local score row."""
+    """MLE-fit one family and return its local score row.
+
+    Sparse family CTs are scored over nonzero cells only — no dense factor
+    table is built, so scoring scales with #SS rather than the domain cross
+    product.
+    """
     fct = counts_of(tuple(parents) + (child,))
+    if isinstance(fct, SparseCT):
+        ll, n_params = sparse_family_stats(fct, child, tuple(parents), alpha)
+        return FamilyScore(child, ll, n_params)
     factor = mle_factor(fct, child, parents, alpha, impl=impl)
     ll = family_loglik(fct, factor, impl=impl)
     return FamilyScore(child, ll, factor.n_params)

@@ -1,0 +1,568 @@
+"""Sparse (COO) contingency tables: sufficient statistics as relational tuples.
+
+The paper's count manager observation (§IV, Table VI): the number of
+*realized* sufficient statistics (#SS) is vastly smaller than the cross
+product of the par-RV domains, which is why FACTORBASE stores CTs as
+relational tuples rather than dense arrays.  :class:`SparseCT` is that
+representation on the tensor stack: a COO table of
+
+    ``codes``  — int64 mixed-radix composite keys (row-major over ``rvs``,
+                 the same layout as the dense tensor's flat index), and
+    ``counts`` — float32 realized counts,
+
+kept canonical (codes strictly increasing, no explicit zeros).  All CT
+algebra — ``marginal`` (GROUP BY), ``transpose``, the Möbius virtual join
+``CT[F] = CT[*] − CT[T]`` — runs directly on codes: decode the mixed-radix
+digits, drop/permute axes, re-encode, then re-aggregate by
+**sort-then-segment-sum** (``kernels.ops.sorted_segment_sum`` on device for
+large runs, ``np.add.reduceat`` for small host-side ones).
+
+Construction mirrors the dense join-tree contraction in
+:mod:`repro.core.counts` — the two backends share :func:`~repro.core.counts.
+plan_conditional` — but messages are COO ``(entity_row, code) -> weight``
+tables instead of dense ``(rows, code_space)`` tensors, so intermediate and
+final storage scale with realized tuples, never with the domain cross
+product.  This is what unlocks schemas whose dense joint CT would need
+>10^9 cells (see ``benchmarks/bench_sparse.py``).
+
+Dispatch: ``contingency_table(..., impl="sparse")`` forces this backend;
+``impl="auto"`` switches to it when the dense cell count exceeds
+:data:`~repro.core.counts.DENSE_CELL_BUDGET`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .counts import (
+    GROUP_AXIS,
+    ContingencyTable,
+    QueryPlan,
+    mobius_setup,
+    plan_conditional,
+    radix_strides,
+)
+from .database import RelationalDatabase
+from .schema import KIND_REL_ATTR
+
+# Mixed-radix codes are int64: the composite code space (dense cell count)
+# must stay below 2**62 for exact arithmetic with headroom.
+_MAX_CODE_SPACE = 1 << 62
+
+# Above this many rows the sort-then-segment-sum aggregation runs on device
+# via the kernels layer; below it, host numpy wins on dispatch overhead.
+_DEVICE_AGG_MIN_ROWS = 1 << 17
+
+
+# ---------------------------------------------------------------------------
+# COO aggregation: sort-then-segment-sum
+# ---------------------------------------------------------------------------
+
+
+def _segment_reduce(sorted_codes: np.ndarray, weights: np.ndarray):
+    """Sum ``weights`` over equal runs of pre-sorted ``sorted_codes``."""
+    boundary = np.empty(sorted_codes.size, bool)
+    boundary[0] = True
+    np.not_equal(sorted_codes[1:], sorted_codes[:-1], out=boundary[1:])
+    starts = np.flatnonzero(boundary)
+    uniq = sorted_codes[starts]
+    if weights.size >= _DEVICE_AGG_MIN_ROWS:
+        seg_ids = np.cumsum(boundary) - 1
+        sums = np.asarray(
+            ops.sorted_segment_sum(
+                jnp.asarray(weights), jnp.asarray(seg_ids, np.int32), int(uniq.size)
+            )
+        )
+    else:
+        sums = np.add.reduceat(weights, starts)
+    return uniq, sums.astype(np.float32, copy=False)
+
+
+def aggregate_codes(codes: np.ndarray, weights: np.ndarray):
+    """Canonicalize a COO vector: sort by code, segment-sum, drop zeros."""
+    codes = np.asarray(codes, np.int64)
+    weights = np.asarray(weights, np.float32)
+    if codes.size == 0:
+        return codes, weights
+    order = np.argsort(codes, kind="stable")
+    uniq, sums = _segment_reduce(codes[order], weights[order])
+    keep = sums != 0.0
+    return uniq[keep], sums[keep]
+
+
+def _aggregate_pairs(rows: np.ndarray, codes: np.ndarray, weights: np.ndarray):
+    """Canonicalize a COO message: lexsort by (row, code), segment-sum."""
+    if rows.size == 0:
+        return rows.astype(np.int64), codes.astype(np.int64), weights.astype(np.float32)
+    order = np.lexsort((codes, rows))
+    rows, codes, weights = rows[order], codes[order], weights[order]
+    boundary = np.empty(rows.size, bool)
+    boundary[0] = True
+    np.logical_or(rows[1:] != rows[:-1], codes[1:] != codes[:-1], out=boundary[1:])
+    starts = np.flatnonzero(boundary)
+    sums = np.add.reduceat(weights, starts).astype(np.float32, copy=False)
+    keep = sums != 0.0
+    return rows[starts][keep], codes[starts][keep], sums[keep]
+
+
+# ---------------------------------------------------------------------------
+# SparseCT
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SparseCT:
+    """COO sufficient-statistics table (implements the ``CTLike`` protocol).
+
+    ``codes[i]`` is the row-major mixed-radix flat index (over ``cards``) of
+    the ``i``-th realized cell, ``counts[i]`` its count.  Codes are strictly
+    increasing and no stored count is zero, so ``len(codes)`` is the paper's
+    #SS and ``to_dense()`` is a single scatter.
+    """
+
+    rvs: tuple[str, ...]
+    cards: tuple[int, ...]
+    codes: np.ndarray   # int64, strictly increasing
+    counts: np.ndarray  # float32, no explicit zeros
+
+    def __post_init__(self):
+        assert len(self.rvs) == len(self.cards), (self.rvs, self.cards)
+        assert self.codes.shape == self.counts.shape, (self.codes.shape, self.counts.shape)
+
+    @property
+    def n_cells(self) -> int:
+        """Dense cell count this table *would* have (exact Python int)."""
+        return math.prod(self.cards) if self.cards else 1
+
+    def total(self):
+        return np.float32(self.counts.sum(dtype=np.float64))
+
+    def n_nonzero(self) -> int:
+        """Number of realized sufficient statistics (the paper's #SS)."""
+        return int(self.codes.size)
+
+    def card_of(self, rv: str) -> int:
+        return self.cards[self.rvs.index(rv)]
+
+    def _digits(self, rv: str) -> np.ndarray:
+        """Decode one axis' digit column from the composite codes."""
+        i = self.rvs.index(rv)
+        stride = radix_strides(list(self.cards))[i]
+        return (self.codes // stride) % self.cards[i]
+
+    def _reencode(self, order: tuple[str, ...]):
+        """Codes of the kept axes, re-encoded row-major in ``order``."""
+        new_cards = tuple(self.card_of(v) for v in order)
+        new_strides = radix_strides(list(new_cards))
+        new_codes = np.zeros(self.codes.shape, np.int64)
+        for v, s in zip(order, new_strides):
+            new_codes += self._digits(v) * s
+        return new_cards, new_codes
+
+    def marginal(self, keep: tuple[str, ...]) -> "SparseCT":
+        """GROUP BY a subset of the par-RVs (sum out the rest)."""
+        missing = [v for v in keep if v not in self.rvs]
+        if missing:
+            raise KeyError(f"par-RVs {missing} not in this CT {self.rvs}")
+        new_cards, new_codes = self._reencode(tuple(keep))
+        codes, counts = aggregate_codes(new_codes, self.counts)
+        return SparseCT(tuple(keep), new_cards, codes, counts)
+
+    def transpose(self, order: tuple[str, ...]) -> "SparseCT":
+        if tuple(order) == self.rvs:
+            return self
+        if sorted(order) != sorted(self.rvs):
+            raise ValueError(f"transpose order {order} != axes {self.rvs}")
+        new_cards, new_codes = self._reencode(tuple(order))
+        # Axis permutation is a bijection on codes: sort, no aggregation.
+        perm = np.argsort(new_codes, kind="stable")
+        return SparseCT(tuple(order), new_cards, new_codes[perm], self.counts[perm])
+
+    def to_dense(self, *, budget: int | None = None) -> ContingencyTable:
+        """Scatter into a dense :class:`ContingencyTable` (same layout)."""
+        cells = self.n_cells
+        if budget is not None and cells > budget:
+            raise MemoryError(
+                f"densifying this SparseCT needs {cells:.3g} cells > budget {budget:.3g}"
+            )
+        flat = np.zeros(cells, np.float32)
+        flat[self.codes] = self.counts
+        return ContingencyTable(self.rvs, jnp.asarray(flat.reshape(self.cards)))
+
+
+def sparse_from_dense(ct: ContingencyTable) -> SparseCT:
+    """COO view of a dense CT (test utility and cross-check path)."""
+    flat = np.asarray(ct.table, np.float32).reshape(-1)
+    codes = np.flatnonzero(flat).astype(np.int64)
+    return SparseCT(ct.rvs, tuple(ct.table.shape), codes, flat[codes])
+
+
+# ---------------------------------------------------------------------------
+# Sparse messages: COO (entity_row, code) -> weight
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Msg:
+    """One join-tree message, lexsorted by ``(rows, codes)`` and aggregated."""
+
+    rows: np.ndarray     # int64 entity row ids
+    codes: np.ndarray    # int64 mixed-radix codes over `cards`
+    weights: np.ndarray  # float32
+    cards: list[int]
+    folded: list[str]    # par-RV vids, row-major axis order matching `cards`
+
+    @property
+    def code_space(self) -> int:
+        return math.prod(self.cards) if self.cards else 1
+
+
+def _combine_sparse(a: _Msg, b: _Msg) -> _Msg:
+    """Join two messages of one fovar on entity row; code spaces concatenate.
+
+    The sparse analogue of the dense ``_combine_messages`` outer product:
+    output code = ``a_code * |b| + b_code`` (a-axes major).  A sort-merge
+    join — both inputs are row-sorted, so matches are contiguous slices.
+    """
+    cb = b.code_space
+    lo = np.searchsorted(b.rows, a.rows, side="left")
+    hi = np.searchsorted(b.rows, a.rows, side="right")
+    cnt = hi - lo
+    total = int(cnt.sum())
+    idx_a = np.repeat(np.arange(a.rows.size), cnt)
+    starts = np.cumsum(cnt) - cnt
+    within = np.arange(total) - np.repeat(starts, cnt)
+    idx_b = np.repeat(lo, cnt) + within
+    # (row, a_code, b_code) unique and lexsorted by construction — no re-agg.
+    return _Msg(
+        rows=a.rows[idx_a],
+        codes=a.codes[idx_a] * cb + b.codes[idx_b],
+        weights=a.weights[idx_a] * b.weights[idx_b],
+        cards=a.cards + b.cards,
+        folded=a.folded + b.folded,
+    )
+
+
+def _fold_all(msgs: list[_Msg]) -> _Msg:
+    out = msgs[0]
+    for m in msgs[1:]:
+        out = _combine_sparse(out, m)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sparse join-tree contraction (conditional CT, relationships = True)
+# ---------------------------------------------------------------------------
+
+
+def sparse_ct_conditional(
+    db: RelationalDatabase,
+    attr_rvs: tuple[str, ...],
+    cond_true: tuple[str, ...],
+    fovar_universe: tuple[str, ...] | None = None,
+    *,
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+) -> SparseCT:
+    """Sparse twin of :func:`repro.core.counts.ct_conditional`.
+
+    Same cells (validated against the dense backend and the int64 brute
+    force), but every intermediate is a COO tuple table, so memory scales
+    with realized groundings instead of domain cross products.
+    """
+    cat = db.catalog
+    plan: QueryPlan = plan_conditional(
+        db, attr_rvs, cond_true, fovar_universe,
+        group_fovar=group_fovar, restrict=restrict,
+    )
+    code_space = math.prod((cat[v].cardinality for v in attr_rvs), start=1)
+    if group_fovar is not None:
+        code_space *= db.entities[cat.fovar(group_fovar).entity].n_rows
+    if code_space >= _MAX_CODE_SPACE:
+        raise OverflowError(
+            f"query code space {code_space:.3g} overflows int64 composite codes"
+        )
+
+    def fovar_n_rows(fid: str) -> int:
+        return db.entities[cat.fovar(fid).entity].n_rows
+
+    def initial_message(fid: str) -> _Msg:
+        n = fovar_n_rows(fid)
+        rows = np.arange(n, dtype=np.int64)
+        weights = np.ones(n, np.float32)
+        cards = [rv.cardinality for rv in plan.ent_attrs[fid]]
+        codes = np.zeros(n, np.int64)
+        for rv, stride in zip(plan.ent_attrs[fid], radix_strides(cards)):
+            col = np.asarray(db.entities[rv.table].attrs[rv.column], np.int64)
+            codes += col * stride
+        if fid in plan.restrict:
+            keep = rows == plan.restrict[fid]
+            rows, codes, weights = rows[keep], codes[keep], weights[keep]
+        # rows are sorted; codes unique per row (one tuple per entity)
+        return _Msg(rows, codes, weights, cards, [rv.vid for rv in plan.ent_attrs[fid]])
+
+    def eliminate_leaf(msg: _Msg, rname: str, leaf: str, other: str) -> _Msg:
+        """Push a leaf's message through a relationship (sparse FK join)."""
+        rel = db.relationships[rname]
+        rel_rv = cat.rel_var_of(rname)
+        f1, f2 = (f.fid for f in rel_rv.fovars)
+        fk_leaf = np.asarray(rel.fk1 if leaf == f1 else rel.fk2, np.int64)
+        fk_other = np.asarray(rel.fk2 if leaf == f1 else rel.fk1, np.int64)
+        r_cards = [rv.cardinality for rv in plan.rel_attrs[rname]]
+        r_names = [rv.vid for rv in plan.rel_attrs[rname]]
+        d_r = math.prod(r_cards, start=1)
+        rcode = np.zeros(fk_leaf.size, np.int64)
+        for rv, stride in zip(plan.rel_attrs[rname], radix_strides(r_cards)):
+            rcode += np.asarray(rel.attrs[rv.column], np.int64) * stride
+
+        lo = np.searchsorted(msg.rows, fk_leaf, side="left")
+        hi = np.searchsorted(msg.rows, fk_leaf, side="right")
+        cnt = hi - lo
+        total = int(cnt.sum())
+        idx_r = np.repeat(np.arange(fk_leaf.size), cnt)
+        starts = np.cumsum(cnt) - cnt
+        within = np.arange(total) - np.repeat(starts, cnt)
+        idx_m = np.repeat(lo, cnt) + within
+        rows, codes, weights = _aggregate_pairs(
+            fk_other[idx_r],
+            msg.codes[idx_m] * d_r + rcode[idx_r],
+            msg.weights[idx_m],
+        )
+        return _Msg(rows, codes, weights, msg.cards + r_cards, msg.folded + r_names)
+
+    def finish_root(fid: str, msgs: list[_Msg]):
+        """Contract the root over its entity rows -> flat COO count vector."""
+        msg = _fold_all(msgs)
+        if fid == plan.group_fovar:
+            c = msg.code_space
+            return (
+                msg.rows * c + msg.codes,          # lexsorted => still sorted
+                msg.weights,
+                [fovar_n_rows(fid)] + msg.cards,
+                [GROUP_AXIS] + msg.folded,
+            )
+        codes, counts = aggregate_codes(msg.codes, msg.weights)
+        return codes, counts, msg.cards, msg.folded
+
+    def contract_component(comp: tuple[str, ...]):
+        if len(comp) == 1 and not plan.adj[comp[0]]:
+            return finish_root(comp[0], [initial_message(comp[0])])
+
+        state: dict[str, list[_Msg]] = {f: [initial_message(f)] for f in comp}
+        remaining_edges = {
+            rname: tuple(f.fid for f in cat.rel_var_of(rname).fovars)
+            for rname in cond_true
+            if plan.comp_of[cat.rel_var_of(rname).fovars[0].fid]
+            == plan.comp_of[comp[0]]
+        }
+        degree = {f: len(plan.adj[f]) for f in comp}
+        alive = set(comp)
+        if plan.group_fovar in comp:
+            root = plan.group_fovar
+        else:
+            root = max(comp, key=lambda f: (degree[f], f))
+
+        while len(alive) > 1:
+            leaf = min(f for f in alive if degree[f] <= 1 and f != root)
+            rname, (f1, f2) = next(
+                (rn, fs) for rn, fs in remaining_edges.items() if leaf in fs
+            )
+            other = f2 if leaf == f1 else f1
+            msg = _fold_all(state[leaf])
+            state[other].append(eliminate_leaf(msg, rname, leaf, other))
+            alive.discard(leaf)
+            degree[other] -= 1
+            degree[leaf] -= 1
+            del remaining_edges[rname]
+
+        assert next(iter(alive)) == root
+        return finish_root(root, state[root])
+
+    # Contract each component; cross product of sparse count vectors.
+    vec_codes = np.zeros(1, np.int64)
+    vec_counts = np.ones(1, np.float32)
+    all_cards: list[int] = []
+    all_folded: list[str] = []
+    for comp in plan.comps:
+        c_codes, c_counts, cards, folded = contract_component(comp)
+        if not cards:
+            # Attribute-less component: a scalar multiplier (its population
+            # count), exactly the dense path's squeezed "__scalar__" axis.
+            scalar = float(c_counts.sum(dtype=np.float64))
+            vec_counts = vec_counts * np.float32(scalar)
+            continue
+        c = math.prod(cards)
+        vec_codes = (vec_codes[:, None] * c + c_codes[None, :]).reshape(-1)
+        vec_counts = (vec_counts[:, None] * c_counts[None, :]).reshape(-1)
+        all_cards += cards
+        all_folded += folded
+    keep = vec_counts != 0.0
+    vec_codes, vec_counts = vec_codes[keep], vec_counts[keep]
+
+    ct = SparseCT(tuple(all_folded), tuple(all_cards), vec_codes, vec_counts)
+    out_order = tuple(attr_rvs)
+    if group_fovar is not None:
+        out_order = (GROUP_AXIS,) + out_order
+    return ct.transpose(out_order)
+
+
+# ---------------------------------------------------------------------------
+# Möbius virtual join on COO tables
+# ---------------------------------------------------------------------------
+
+
+def _sparse_sub(star: SparseCT, t_sum: SparseCT) -> SparseCT:
+    """``CT[F] = CT[*] − CT[T]`` cellwise on aligned COO tables."""
+    assert star.rvs == t_sum.rvs, (star.rvs, t_sum.rvs)
+    codes = np.concatenate([star.codes, t_sum.codes])
+    deltas = np.concatenate([star.counts, -t_sum.counts])
+    codes, counts = aggregate_codes(codes, deltas)
+    return SparseCT(star.rvs, star.cards, codes, counts)
+
+
+def sparse_contingency_table(
+    db: RelationalDatabase,
+    rvs: tuple[str, ...],
+    *,
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+    fovar_universe: tuple[str, ...] | None = None,
+) -> SparseCT:
+    """Sparse twin of :func:`repro.core.counts.contingency_table`.
+
+    The Möbius recursion is structurally identical to the dense one; the
+    per-relationship assembly works on codes: the F block is the sparse
+    difference ``star − Σ_rattrs T`` embedded at the ``n/a`` (code-0)
+    relationship-attribute cells, and the indicator becomes the leading
+    mixed-radix digit, so F-cells and T-cells occupy disjoint sorted halves
+    of the code space and concatenate without re-sorting.
+    """
+    cat = db.catalog
+    want, rel_names, added, attr_rvs, universe_t = mobius_setup(db, rvs, fovar_universe)
+
+    # Guard the *assembled* code space: every queried axis, plus an extra
+    # indicator digit (x2) for each relationship injected only to support
+    # its attributes, plus the group axis — the largest space any recursion
+    # level concatenates into.  Without this, huge schemas would wrap int64
+    # silently instead of raising.
+    code_space = math.prod((cat[v].cardinality for v in rvs), start=1)
+    code_space *= 2 ** len(added)
+    if group_fovar is not None:
+        code_space *= db.entities[cat.fovar(group_fovar).entity].n_rows
+    if code_space >= _MAX_CODE_SPACE:
+        raise OverflowError(
+            f"CT code space {code_space:.3g} overflows int64 composite codes; "
+            "split the query into smaller par-RV subsets"
+        )
+
+    g_prefix: tuple[str, ...] = (GROUP_AXIS,) if group_fovar is not None else ()
+
+    def recurse(
+        remaining: tuple[str, ...], fixed_true: tuple[str, ...], attrs: tuple[str, ...]
+    ) -> SparseCT:
+        if not remaining:
+            return sparse_ct_conditional(
+                db, attrs, fixed_true, universe_t,
+                group_fovar=group_fovar, restrict=restrict,
+            )
+        r, rest = remaining[0], remaining[1:]
+        r_attr_vids = tuple(
+            v.vid for v in want if v.kind == KIND_REL_ATTR and v.table == r
+        )
+        t_branch = recurse(rest, fixed_true + (r,), attrs)
+        star_attrs = tuple(v for v in attrs if v not in r_attr_vids)
+        star_branch = recurse(rest, fixed_true, star_attrs)
+
+        shared = tuple(v for v in t_branch.rvs if v not in r_attr_vids)
+        t_ct = t_branch.transpose(shared + r_attr_vids)
+        t_sum = t_ct.marginal(shared) if r_attr_vids else t_ct
+        star = star_branch.transpose(shared)
+        f_count = _sparse_sub(star, t_sum)  # counts with r = False
+
+        r_cards = tuple(cat[v].cardinality for v in r_attr_vids)
+        d_r = math.prod(r_cards, start=1)
+        shared_cards = t_ct.cards[: len(shared)]
+        d_rest = math.prod(shared_cards, start=1) * d_r
+
+        # F block: mass at the n/a (code 0) cells of the r-attribute axes;
+        # T block: shifted past the F half by the indicator digit.
+        f_codes = f_count.codes * d_r
+        t_codes = t_ct.codes + d_rest
+        rel_vid = cat.rel_var_of(r).vid
+        return SparseCT(
+            (rel_vid,) + shared + r_attr_vids,
+            (2,) + shared_cards + r_cards,
+            np.concatenate([f_codes, t_codes]),
+            np.concatenate([f_count.counts, t_ct.counts]),
+        )
+
+    full = recurse(tuple(rel_names), (), attr_rvs)
+    if added:
+        keep = g_prefix + tuple(v.vid for v in want)
+        full = full.marginal(keep)
+    return full.transpose(g_prefix + tuple(rvs))
+
+
+# ---------------------------------------------------------------------------
+# Sparse consumers: scoring and prediction over nonzero cells only
+# ---------------------------------------------------------------------------
+
+_LOG_TINY = 1e-30
+
+
+def sparse_family_stats(
+    fct: SparseCT, child: str, parents: tuple[str, ...], alpha: float = 0.0
+) -> tuple[float, int]:
+    """``(loglik, n_params)`` of one family from its sparse CT.
+
+    Computes ``Σ n · log cp`` over *realized cells only* — the MLE/Dirichlet
+    conditional probability ``cp = (n + α) / (N_parents + α·|child|)`` needs
+    just the parent-marginal count of each realized cell, found by a segment
+    reduction over the parent-prefix codes (child is the minor axis, so the
+    prefix is ``code // |child|`` and stays sorted).  Numerically identical
+    to densify-then-``mle_cpt``-then-``factor_loglik``: unrealized cells
+    contribute exactly 0 under the 0·log0 := 0 convention, and dense rows
+    never realized get probabilities that multiply only zero counts.
+    """
+    ct = fct.transpose(tuple(parents) + (child,))
+    child_card = ct.cards[-1]
+    n_parent_configs = math.prod(ct.cards[:-1], start=1)
+    if ct.codes.size == 0:
+        return 0.0, n_parent_configs * (child_card - 1)
+    parent_codes = ct.codes // child_card
+    uniq, parent_tot = _segment_reduce(parent_codes, ct.counts)
+    seg = np.searchsorted(uniq, parent_codes)
+    denom = parent_tot[seg] + alpha * child_card
+    cp = (ct.counts + alpha) / denom
+    loglik = float(np.sum(ct.counts * np.log(np.maximum(cp, _LOG_TINY)), dtype=np.float64))
+    return loglik, n_parent_configs * (child_card - 1)
+
+
+def sparse_factor_loglik(fct: SparseCT, factor_rvs: tuple[str, ...], factor_table) -> float:
+    """``Σ count · log cp`` against a dense factor, gathering realized cells."""
+    ct = fct.transpose(tuple(factor_rvs))
+    flat = np.asarray(factor_table, np.float32).reshape(-1)
+    logp = np.log(np.maximum(flat[ct.codes], _LOG_TINY))
+    return float(np.sum(ct.counts * logp, dtype=np.float64))
+
+
+def sparse_block_scores(gct: SparseCT, log_cpt: np.ndarray, n_entities: int) -> np.ndarray:
+    """§VI block scoring from a grouped sparse CT.
+
+    ``gct`` must have the ``__group__`` axis leading; ``log_cpt`` is
+    ``(config_space, |Y|)``.  Scatter-accumulates
+    ``scores[e, y] += count · log_cpt[cfg, y]`` over realized cells only —
+    the sparse analogue of the dense ``counts @ log_cpt`` matmul.
+    """
+    assert gct.rvs and gct.rvs[0] == GROUP_AXIS, gct.rvs
+    c_rest = math.prod(gct.cards[1:], start=1)
+    e_idx = gct.codes // c_rest
+    cfg = gct.codes % c_rest
+    out = np.zeros((n_entities, log_cpt.shape[1]), np.float32)
+    np.add.at(out, e_idx, gct.counts[:, None] * log_cpt[cfg])
+    return out

@@ -23,7 +23,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
 from .bn import BayesNet
-from .counts import ContingencyTable, contingency_table, joint_contingency_table
+from .counts import CTLike, ContingencyTable, contingency_table, joint_contingency_table
 from .database import RelationalDatabase
 from .schema import KIND_ENTITY_ATTR, KIND_REL, KIND_REL_ATTR, VariableCatalog
 from .scores import FamilyScore, score_family
@@ -42,6 +42,16 @@ class CountCache:
     GROUP BY marginal.  ``mode="ondemand"`` counts each distinct family once
     (memoized) — the alternative the paper contrasts with.  The
     ``instance-loop`` baseline in the benchmarks disables the memo.
+    ``mode="sparse"`` is pre-counting on the COO backend: the joint is a
+    :class:`~repro.core.sparse_counts.SparseCT` (no dense-cell cap — storage
+    is #SS), and every served family CT is a sparse marginal.  Passing
+    ``impl="sparse"`` to the other modes routes their queries through the
+    sparse backend as well.
+
+    Bookkeeping counters: ``n_queries`` increments on every call;
+    ``n_materializations`` increments each time a CT is actually *built*
+    from the database (the pre-counted joint counts as one; memo hits and
+    joint marginals are not materializations).
     """
 
     def __init__(
@@ -52,20 +62,20 @@ class CountCache:
         impl: str = "auto",
         memoize: bool = True,
     ):
-        assert mode in ("precount", "ondemand")
+        assert mode in ("precount", "ondemand", "sparse")
         self.db = db
         self.mode = mode
-        self.impl = impl
+        self.impl = "sparse" if mode == "sparse" else impl
         self.memoize = memoize
-        self._memo: dict[tuple[str, ...], ContingencyTable] = {}
+        self._memo: dict[tuple[str, ...], CTLike] = {}
         self.n_queries = 0
         self.n_materializations = 0
-        self.joint: ContingencyTable | None = None
-        if mode == "precount":
-            self.joint = joint_contingency_table(db, impl=impl)
+        self.joint: CTLike | None = None
+        if mode in ("precount", "sparse"):
+            self.joint = joint_contingency_table(db, impl=self.impl)
             self.n_materializations += 1
 
-    def __call__(self, rvs: tuple[str, ...]) -> ContingencyTable:
+    def __call__(self, rvs: tuple[str, ...]) -> CTLike:
         self.n_queries += 1
         key = tuple(sorted(rvs))
         if self.memoize and key in self._memo:
@@ -124,7 +134,7 @@ class HillClimbResult:
 
 def hill_climb(
     rvs: tuple[str, ...],
-    counts_of: Callable[[tuple[str, ...]], ContingencyTable],
+    counts_of: Callable[[tuple[str, ...]], CTLike],
     *,
     score: str = "aic",
     alpha: float = 0.0,
@@ -277,7 +287,7 @@ class LearnAndJoinResult:
 
 def learn_and_join(
     db: RelationalDatabase,
-    counts_of: Callable[[tuple[str, ...]], ContingencyTable],
+    counts_of: Callable[[tuple[str, ...]], CTLike],
     *,
     score: str = "aic",
     alpha: float = 0.0,

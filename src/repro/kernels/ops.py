@@ -23,6 +23,16 @@ from .factor_loglik import factor_loglik_pallas
 from .mle_cpt import mle_cpt_pallas
 
 
+def kernel_impl(impl: str) -> str:
+    """Map a count-manager ``impl`` to a kernel dispatch policy.
+
+    ``"sparse"`` selects a CT *storage backend*, not a kernel variant; code
+    paths that still hit dense kernels (e.g. the parents-free family in
+    block prediction) fall back to ``"auto"``.
+    """
+    return "auto" if impl == "sparse" else impl
+
+
 def _use_pallas(impl: str) -> tuple[bool, bool]:
     """-> (use_pallas, interpret)."""
     on_tpu = jax.default_backend() == "tpu"
@@ -32,7 +42,10 @@ def _use_pallas(impl: str) -> tuple[bool, bool]:
         return True, not on_tpu
     if impl == "ref":
         return False, False
-    raise ValueError(f"impl must be auto|pallas|ref, got {impl!r}")
+    raise ValueError(
+        f"impl must be auto|pallas|ref (count-manager calls also accept "
+        f"'sparse', and ct_count accepts 'matmul'), got {impl!r}"
+    )
 
 
 def ct_count(
@@ -56,6 +69,28 @@ def ct_count(
     else:
         out = ref.ct_count_ref(keys, num_bins, weights)
     return out if weights is not None else out.astype(jnp.int32)
+
+
+def sorted_segment_sum(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Segment-sum over pre-sorted ids — the sparse CT backend's aggregator.
+
+    ``impl="auto"`` uses XLA's sorted segment reduction (``jax.ops.
+    segment_sum`` with ``indices_are_sorted=True``); ``"ref"`` forces the
+    scatter-add oracle.  Sortedness is the caller's contract (the sparse
+    builder sorts composite codes first), letting XLA skip the scatter's
+    conflict handling.
+    """
+    if impl == "ref":
+        return ref.sorted_segment_sum_ref(values, segment_ids, num_segments)
+    return jax.ops.segment_sum(
+        values, segment_ids, num_segments, indices_are_sorted=True
+    )
 
 
 def mle_cpt(ct: jax.Array, alpha: float = 0.0, *, impl: str = "auto") -> jax.Array:

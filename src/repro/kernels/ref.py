@@ -67,6 +67,17 @@ def ct_count_matmul(
     return jnp.sum(partials, axis=0)
 
 
+def sorted_segment_sum_ref(
+    values: jax.Array, segment_ids: jax.Array, num_segments: int
+) -> jax.Array:
+    """Segment reduction for pre-sorted segment ids (scatter-add form).
+
+    The aggregation step of the sparse CT backend's sort-then-segment-sum
+    build: ``out[s] = sum over i with segment_ids[i] == s of values[i]``.
+    """
+    return jnp.zeros((num_segments,), values.dtype).at[segment_ids].add(values)
+
+
 def mle_cpt_ref(ct: jax.Array, alpha: float = 0.0) -> jax.Array:
     """Maximum-likelihood CPT from a (parent_configs, child_values) count table.
 

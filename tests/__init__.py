@@ -1,0 +1,2 @@
+# Makes ``tests`` a package so test modules can use relative imports
+# (``from .bruteforce import ...``) under pytest's default import mode.

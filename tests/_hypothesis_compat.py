@@ -1,0 +1,143 @@
+"""Dependency-light fallback for ``hypothesis``.
+
+When the real ``hypothesis`` package is installed, this module is never
+imported and the property tests run as actual hypothesis tests.  When it is
+absent (minimal CI images, the bundled toolchain), :func:`install` registers a
+shim under ``sys.modules['hypothesis']`` *before* test collection (see
+``conftest.py``) so that ``from hypothesis import given, settings, strategies``
+keeps working — each ``@given`` test then runs as a fixed-seed parametrized
+sweep instead of an adaptive search.
+
+Only the small API surface the suite uses is provided: ``given``, ``settings``
+and the ``integers`` / ``booleans`` / ``floats`` / ``lists`` / ``sampled_from``
+strategies.  Draws are deterministic per test (seeded from the test name), so
+failures reproduce exactly.
+"""
+
+from __future__ import annotations
+
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+import pytest
+
+#: examples per @given test in shim mode (hypothesis's max_examples is capped
+#: to this — a fixed sweep does not shrink, so more draws buy little).
+SHIM_MAX_EXAMPLES = 8
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self.label = label
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"Strategy({self.label})"
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 30) -> Strategy:
+    return Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value},{max_value})",
+    )
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans")
+
+
+def floats(
+    min_value: float = -1e9,
+    max_value: float = 1e9,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> Strategy:
+    del allow_nan, allow_infinity  # the shim only draws finite values
+    return Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value},{max_value})",
+    )
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    return Strategy(draw, f"lists({elements.label},{min_size},{max_size})")
+
+
+def sampled_from(seq) -> Strategy:
+    seq = list(seq)
+    return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))], "sampled_from")
+
+
+def given(*pos_strategies: Strategy, **kw_strategies: Strategy):
+    """Expand into ``pytest.mark.parametrize`` over fixed-seed draws.
+
+    Positional strategies bind to the test function's leading parameters, as
+    in real hypothesis.  The number of examples is ``SHIM_MAX_EXAMPLES`` (an
+    outer ``@settings(max_examples=N)`` can only lower it — see ``settings``).
+    """
+
+    def deco(fn):
+        sig_names = [
+            p.name
+            for p in inspect.signature(fn).parameters.values()
+            if p.kind in (p.POSITIONAL_OR_KEYWORD, p.POSITIONAL_ONLY)
+        ]
+        # Real hypothesis fills positional strategies from the RIGHTMOST
+        # parameters (leftmost ones stay free for fixtures/parametrize);
+        # match that so both CI modes bind identically.
+        pos_names = sig_names[len(sig_names) - len(pos_strategies):] if pos_strategies else []
+        names = list(pos_names) + list(kw_strategies)
+        strategies_ = list(pos_strategies) + [kw_strategies[k] for k in kw_strategies]
+        if len(names) != len(strategies_):
+            raise TypeError(f"@given could not bind strategies to {fn.__name__}")
+        rng = np.random.default_rng(zlib.adler32(fn.__name__.encode()))
+        cases = [
+            tuple(s.example(rng) for s in strategies_)
+            for _ in range(SHIM_MAX_EXAMPLES)
+        ]
+        if len(names) == 1:
+            cases = [c[0] for c in cases]
+        wrapped = pytest.mark.parametrize(",".join(names), cases)(fn)
+        wrapped._shim_given = True
+        return wrapped
+
+    return deco
+
+
+def settings(**kwargs):
+    """No-op in shim mode (examples are pre-drawn by ``given``)."""
+    del kwargs
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` (+``hypothesis.strategies``)."""
+    if "hypothesis" in sys.modules:  # real library (or shim) already present
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "floats", "lists", "sampled_from"):
+        setattr(strategies, name, globals()[name])
+    strategies.Strategy = Strategy
+    mod.strategies = strategies
+    mod.__is_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -2,6 +2,10 @@
 
 Enumerates the full cross product of the first-order variables' populations
 and counts every joint par-RV assignment — exponential, test-only.
+
+``as_dense_array`` normalizes either count backend (dense tensor or COO
+``SparseCT``) to a numpy array so every oracle check can run parametrized
+over ``impl in ("ref", "sparse")``.
 """
 
 from __future__ import annotations
@@ -11,6 +15,17 @@ import itertools
 import numpy as np
 
 from repro.core.schema import KIND_ENTITY_ATTR, KIND_REL, KIND_REL_ATTR
+from repro.core.sparse_counts import SparseCT
+
+#: the impl sweep every dense oracle test also runs with (sparse backend)
+CT_IMPLS = ("ref", "sparse")
+
+
+def as_dense_array(ct) -> np.ndarray:
+    """Dense numpy view of a ContingencyTable or SparseCT (same layout)."""
+    if isinstance(ct, SparseCT):
+        ct = ct.to_dense()
+    return np.asarray(ct.table)
 
 
 def brute_force_ct(db, rvs: tuple[str, ...], *, group_fovar=None,

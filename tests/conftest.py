@@ -1,5 +1,17 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
-(the 512-device override belongs to launch/dryrun.py only)."""
+(the 512-device override belongs to launch/dryrun.py only).
+
+If ``hypothesis`` is not installed, a dependency-light shim is registered
+before collection so the property-test modules still import; their ``@given``
+tests then run as fixed-seed parametrized sweeps (see _hypothesis_compat.py).
+"""
+
+try:
+    import hypothesis  # noqa: F401  (use the real library when present)
+except ModuleNotFoundError:
+    from tests import _hypothesis_compat
+
+    _hypothesis_compat.install()
 
 import jax
 import pytest

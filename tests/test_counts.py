@@ -1,6 +1,7 @@
 """Count-manager correctness: Möbius virtual join, grouped/block access,
 restricted (single-instance) queries — all vs the int64 brute-force oracle,
-including hypothesis sweeps over random databases."""
+including hypothesis sweeps over random databases.  Every oracle check runs
+for both CT backends (``impl="ref"`` dense, ``impl="sparse"`` COO)."""
 
 import numpy as np
 import pytest
@@ -9,16 +10,17 @@ from hypothesis import given, settings, strategies as st
 from repro.core import counts
 from repro.core.database import university_db
 
-from .bruteforce import brute_force_ct, random_db
+from .bruteforce import CT_IMPLS, as_dense_array, brute_force_ct, random_db
 
 
-def test_university_fig3c():
+@pytest.mark.parametrize("impl", CT_IMPLS)
+def test_university_fig3c(impl):
     """Paper Fig. 3(c): CT for (RA, Capability, Salary) on the toy instance."""
     db = university_db()
     rvs = ("RA(prof0,student0)", "capability(prof0,student0)", "salary(prof0,student0)")
-    ct = counts.contingency_table(db, rvs, impl="ref")
+    ct = counts.contingency_table(db, rvs, impl=impl)
     bf = brute_force_ct(db, rvs)
-    np.testing.assert_array_equal(np.asarray(ct.table).astype(np.int64), bf)
+    np.testing.assert_array_equal(as_dense_array(ct).astype(np.int64), bf)
     cap = db.catalog["capability(prof0,student0)"]
     sal = db.catalog["salary(prof0,student0)"]
     # count(RA=T, cap=3, salary=high) == 1  (jack, oliver)
@@ -27,60 +29,65 @@ def test_university_fig3c():
     assert bf[0].sum() == bf[0, 0, 0] == 9 - 4
 
 
-def test_joint_ct_university():
+@pytest.mark.parametrize("impl", CT_IMPLS)
+def test_joint_ct_university(impl):
     db = university_db()
-    jt = counts.joint_contingency_table(db, impl="ref")
+    jt = counts.joint_contingency_table(db, impl=impl)
     bf = brute_force_ct(db, jt.rvs)
-    np.testing.assert_array_equal(np.asarray(jt.table).astype(np.int64), bf)
+    np.testing.assert_array_equal(as_dense_array(jt).astype(np.int64), bf)
     assert jt.n_nonzero() == 9  # 3x3 grounding pairs, all distinct rows
 
 
 @settings(max_examples=12, deadline=None)
 @given(seed=st.integers(0, 10_000), self_rel=st.booleans())
-def test_ct_matches_bruteforce_random_dbs(seed, self_rel):
-    """Property: dense CT == int64 brute force on random DBs (incl. self-rel)."""
+@pytest.mark.parametrize("impl", CT_IMPLS)
+def test_ct_matches_bruteforce_random_dbs(impl, seed, self_rel):
+    """Property: CT == int64 brute force on random DBs (incl. self-rel)."""
     db = random_db(seed, self_rel=self_rel)
     cat = db.catalog
     rvs = tuple(v.vid for v in cat.par_rvs)
-    ct = counts.contingency_table(db, rvs, impl="ref")
+    ct = counts.contingency_table(db, rvs, impl=impl)
     bf = brute_force_ct(db, rvs)
-    np.testing.assert_array_equal(np.asarray(ct.table).astype(np.int64), bf)
+    np.testing.assert_array_equal(as_dense_array(ct).astype(np.int64), bf)
 
 
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 10_000))
-def test_marginal_consistency(seed):
+@pytest.mark.parametrize("impl", CT_IMPLS)
+def test_marginal_consistency(impl, seed):
     """GROUP BY marginals of the joint == directly-counted local CTs."""
     db = random_db(seed)
     cat = db.catalog
     all_rvs = tuple(v.vid for v in cat.par_rvs)
-    joint = counts.contingency_table(db, all_rvs, impl="ref")
+    joint = counts.contingency_table(db, all_rvs, impl=impl)
     sub = (all_rvs[0], all_rvs[3], all_rvs[2])
-    local = counts.contingency_table(db, sub, impl="ref")
+    local = counts.contingency_table(db, sub, impl=impl)
     np.testing.assert_allclose(
-        np.asarray(joint.marginal(sub).table), np.asarray(local.table)
+        as_dense_array(joint.marginal(sub)), as_dense_array(local)
     )
 
 
-def test_grouped_and_restricted_vs_bruteforce():
+@pytest.mark.parametrize("impl", CT_IMPLS)
+def test_grouped_and_restricted_vs_bruteforce(impl):
     db = random_db(7)
     rvs = ("b1(beta0)", "R(alpha0,beta0)", "ra(alpha0,beta0)")
-    g = counts.contingency_table(db, rvs, impl="ref", group_fovar="alpha0")
+    g = counts.contingency_table(db, rvs, impl=impl, group_fovar="alpha0")
     bf = brute_force_ct(db, rvs, group_fovar="alpha0")
-    np.testing.assert_array_equal(np.asarray(g.table).astype(np.int64), bf)
+    np.testing.assert_array_equal(as_dense_array(g).astype(np.int64), bf)
     # restricted query == one slice of the grouped CT
     for e in range(db.entities["alpha"].n_rows):
-        r = counts.contingency_table(db, rvs, impl="ref", restrict={"alpha0": e})
-        np.testing.assert_array_equal(np.asarray(r.table).astype(np.int64), bf[e])
+        r = counts.contingency_table(db, rvs, impl=impl, restrict={"alpha0": e})
+        np.testing.assert_array_equal(as_dense_array(r).astype(np.int64), bf[e])
 
 
-def test_total_is_population_cross_product():
+@pytest.mark.parametrize("impl", CT_IMPLS)
+def test_total_is_population_cross_product(impl):
     db = random_db(3)
     rvs = tuple(v.vid for v in db.catalog.par_rvs)
-    ct = counts.contingency_table(db, rvs, impl="ref")
+    ct = counts.contingency_table(db, rvs, impl=impl)
     n = db.entities["alpha"].n_rows * db.entities["beta"].n_rows
     assert float(ct.total()) == n
-    assert float(ct.table.min()) >= 0  # Möbius never goes negative
+    assert float(as_dense_array(ct).min()) >= 0  # Möbius never goes negative
 
 
 def test_mixed_radix_roundtrip():
@@ -97,7 +104,8 @@ def test_mixed_radix_roundtrip():
         np.testing.assert_array_equal((keys // s) % c, np.asarray(cols[i]))
 
 
-def test_rejects_cyclic_join_graph():
+@pytest.mark.parametrize("impl", CT_IMPLS)
+def test_rejects_cyclic_join_graph(impl):
     from repro.core.database import from_labels
     from repro.core.schema import make_schema
 
@@ -115,4 +123,4 @@ def test_rejects_cyclic_join_graph():
          "r2": {"fk1": [1], "fk2": [0], "attrs": {}}},
     )
     with pytest.raises(NotImplementedError):
-        counts.ct_conditional(db, ("x(a0)",), ("r1", "r2"), impl="ref")
+        counts.ct_conditional(db, ("x(a0)",), ("r1", "r2"), impl=impl)

@@ -48,6 +48,18 @@ def test_ct_count_property(keys, bins):
     np.testing.assert_array_equal(out, expect)
 
 
+@pytest.mark.parametrize("n,segs", [(1, 1), (100, 7), (4096, 300)])
+def test_sorted_segment_sum(n, segs):
+    """XLA sorted-segment reduction vs scatter-add oracle (sparse CT agg)."""
+    rng = np.random.default_rng(n + segs)
+    ids = np.sort(rng.integers(0, segs, n)).astype(np.int32)
+    vals = rng.random(n).astype(np.float32)
+    out_a = ops.sorted_segment_sum(jnp.asarray(vals), jnp.asarray(ids), segs)
+    out_r = ops.sorted_segment_sum(jnp.asarray(vals), jnp.asarray(ids), segs, impl="ref")
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_r), rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(float(out_a.sum()), float(vals.sum()), rtol=1e-5)
+
+
 @pytest.mark.parametrize("p,c", [(1, 2), (5, 3), (64, 7), (130, 9), (513, 2)])
 @pytest.mark.parametrize("alpha", [0.0, 0.5])
 def test_mle_cpt(p, c, alpha):

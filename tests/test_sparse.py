@@ -1,0 +1,213 @@
+"""Sparse CT backend: dense↔sparse cell equivalence, COO algebra
+(marginal/transpose/total/#SS on codes), the Möbius join on codes, the
+dense-cell-budget auto-switch, and sparse score/predict consumers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import counts
+from repro.core.counts import CTLike, ContingencyTable
+from repro.core.cpt import learn_parameters, mle_factor
+from repro.core.database import university_db
+from repro.core.predict import predict_block, predict_single_loop
+from repro.core.scores import score_family, score_structure
+from repro.core.sparse_counts import SparseCT, aggregate_codes, sparse_from_dense
+from repro.core.structure import CountCache, learn_and_join
+
+from .bruteforce import as_dense_array, random_db
+
+
+def _dense_sparse_pair(db, rvs, **kw):
+    d = counts.contingency_table(db, rvs, impl="ref", **kw)
+    s = counts.contingency_table(db, rvs, impl="sparse", **kw)
+    assert isinstance(d, ContingencyTable) and isinstance(s, SparseCT)
+    return d, s
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), self_rel=st.booleans())
+def test_dense_sparse_equivalence_random_dbs(seed, self_rel):
+    """Cell-identical CTs from both backends on random databases."""
+    db = random_db(seed, self_rel=self_rel)
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    d, s = _dense_sparse_pair(db, rvs)
+    np.testing.assert_array_equal(np.asarray(d.table), as_dense_array(s))
+    assert s.n_cells == d.n_cells
+    assert s.n_nonzero() == d.n_nonzero()
+    assert float(s.total()) == float(d.total())
+
+
+def test_sparse_canonical_form():
+    """Codes strictly increasing, no explicit zeros, counts match layout."""
+    db = university_db()
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    s = counts.contingency_table(db, rvs, impl="sparse")
+    assert np.all(np.diff(s.codes) > 0)
+    assert np.all(s.counts != 0)
+    assert s.codes.dtype == np.int64 and s.counts.dtype == np.float32
+    # round-trip through the dense backend
+    rt = sparse_from_dense(s.to_dense())
+    np.testing.assert_array_equal(rt.codes, s.codes)
+    np.testing.assert_array_equal(rt.counts, s.counts)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_sparse_marginal_transpose_match_dense(seed):
+    db = random_db(seed)
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    d, s = _dense_sparse_pair(db, rvs)
+    sub = (rvs[2], rvs[0], rvs[3])
+    np.testing.assert_allclose(
+        np.asarray(d.marginal(sub).table), as_dense_array(s.marginal(sub))
+    )
+    order = rvs[::-1]
+    np.testing.assert_array_equal(
+        np.asarray(d.transpose(order).table), as_dense_array(s.transpose(order))
+    )
+
+
+def test_sparse_grouped_and_restricted():
+    db = random_db(11)
+    rvs = ("b1(beta0)", "R(alpha0,beta0)", "ra(alpha0,beta0)")
+    d, s = _dense_sparse_pair(db, rvs, group_fovar="alpha0")
+    np.testing.assert_array_equal(np.asarray(d.table), as_dense_array(s))
+    for e in range(db.entities["alpha"].n_rows):
+        dr, sr = _dense_sparse_pair(db, rvs, restrict={"alpha0": e})
+        np.testing.assert_array_equal(np.asarray(dr.table), as_dense_array(sr))
+
+
+def test_auto_switch_budget():
+    """impl='auto' switches backends exactly at the dense-cell budget."""
+    db = university_db()
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    cells = counts.dense_cells_of(db, rvs)
+    dense = counts.contingency_table(db, rvs, impl="auto", dense_cell_budget=cells)
+    sparse = counts.contingency_table(db, rvs, impl="auto", dense_cell_budget=cells - 1)
+    assert isinstance(dense, ContingencyTable) and isinstance(sparse, SparseCT)
+    np.testing.assert_array_equal(np.asarray(dense.table), as_dense_array(sparse))
+    # the global knob drives the same switch
+    old = counts.set_dense_cell_budget(cells - 1)
+    try:
+        assert isinstance(counts.contingency_table(db, rvs, impl="auto"), SparseCT)
+    finally:
+        counts.set_dense_cell_budget(old)
+    # joint CT obeys the same heuristic instead of raising MemoryError
+    jt = counts.joint_contingency_table(db, dense_cell_budget=cells - 1)
+    assert isinstance(jt, SparseCT)
+
+
+def test_ctlike_protocol():
+    db = university_db()
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    d, s = _dense_sparse_pair(db, rvs)
+    assert isinstance(d, CTLike) and isinstance(s, CTLike)
+
+
+def test_joint_beyond_dense_cap_builds_sparse():
+    """A schema whose joint CT can NEVER be dense still pre-counts sparsely."""
+    from repro.core.database import from_labels
+    from repro.core.schema import make_schema
+
+    n_attrs, card = 12, 8  # 8^12 * 2 > 2**37 dense cells — over the 2**28 cap
+    dom = tuple(str(i) for i in range(card))
+    schema = make_schema(
+        entities={
+            "e": {f"a{i}": dom for i in range(n_attrs)},
+            "f": {"b": ("0", "1")},
+        },
+        relationships={"R": (("e", "f"), {})},
+    )
+    rng = np.random.default_rng(0)
+    ents = {
+        "e": {f"a{i}": [dom[j] for j in rng.integers(0, card, 6)] for i in range(n_attrs)},
+        "f": {"b": [("0", "1")[j] for j in rng.integers(0, 2, 4)]},
+    }
+    rels = {"R": {"fk1": [0, 2, 5], "fk2": [1, 3, 0], "attrs": {}}}
+    db = from_labels(schema, ents, rels)
+
+    vids = tuple(v.vid for v in db.catalog.par_rvs)
+    assert counts.dense_cells_of(db, vids) > 2**28
+    with pytest.raises(MemoryError):
+        counts.joint_contingency_table(db, impl="ref")
+    jt = counts.joint_contingency_table(db)  # auto -> sparse
+    assert isinstance(jt, SparseCT)
+    assert float(jt.total()) == 6 * 4  # full grounding cross product
+    assert jt.n_nonzero() <= 6 * 4    # #SS bounded by realized groundings
+    # marginals of the huge joint agree with direct small dense queries
+    sub = ("a0(e0)", "a5(e0)", "R(e0,f0)")
+    np.testing.assert_allclose(
+        as_dense_array(jt.marginal(sub)),
+        np.asarray(counts.contingency_table(db, sub, impl="ref").table),
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_sparse_family_scores_match_dense(seed):
+    """score_family over nonzero cells == densify + mle_cpt + factor_loglik."""
+    db = random_db(seed)
+    pre = CountCache(db, mode="precount", impl="ref")
+    sp = CountCache(db, mode="sparse")
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    child, parents = rvs[0], (rvs[2], rvs[3])
+    for alpha in (0.0, 0.5):
+        fd = score_family(pre, child, parents, alpha, impl="ref")
+        fs = score_family(sp, child, parents, alpha)
+        assert fd.n_params == fs.n_params
+        np.testing.assert_allclose(fd.loglik, fs.loglik, rtol=1e-5, atol=1e-4)
+
+
+def test_sparse_structure_learning_matches_dense_score():
+    """LAJ on the sparse cache reaches a structure with the same AIC."""
+    db = university_db()
+    res_d = learn_and_join(db, CountCache(db, mode="precount", impl="ref"),
+                           score="aic", max_parents=2, max_chain=1, impl="ref")
+    res_s = learn_and_join(db, CountCache(db, mode="sparse"),
+                           score="aic", max_parents=2, max_chain=1)
+    scorer = CountCache(db, mode="precount", impl="ref")
+    aic_d = score_structure(res_d.bn, scorer, impl="ref").aic
+    aic_s = score_structure(res_s.bn, scorer, impl="ref").aic
+    np.testing.assert_allclose(aic_d, aic_s, rtol=1e-6)
+    # same adjacencies (orientation of score-equivalent edges may differ)
+    adj = lambda bn: {frozenset(e) for e in bn.edges()}
+    assert adj(res_d.bn) == adj(res_s.bn)
+
+
+def test_sparse_predict_matches_dense():
+    db = university_db()
+    cache = CountCache(db, mode="precount", impl="ref")
+    res = learn_and_join(db, cache, score="aic", max_parents=2, max_chain=1, impl="ref")
+    factors = learn_parameters(res.bn, cache, alpha=0.1, impl="ref")
+    for target in ("intelligence(student0)", "popularity(prof0)"):
+        pd = predict_block(db, res.bn, factors, target, impl="ref")
+        ps = predict_block(db, res.bn, factors, target, impl="sparse")
+        pl = predict_single_loop(db, res.bn, factors, target, impl="sparse")
+        np.testing.assert_allclose(
+            np.asarray(pd.log_scores), np.asarray(ps.log_scores), atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(ps.log_scores), np.asarray(pl.log_scores), atol=1e-4
+        )
+
+
+def test_mle_factor_accepts_sparse():
+    db = university_db()
+    sp = CountCache(db, mode="sparse")
+    pre = CountCache(db, mode="precount", impl="ref")
+    fam = ("RA(prof0,student0)", "salary(prof0,student0)")
+    fd = mle_factor(pre(fam), fam[1], fam[:1], 0.2, impl="ref")
+    fs = mle_factor(sp(fam), fam[1], fam[:1], 0.2, impl="ref")
+    np.testing.assert_allclose(np.asarray(fd.table), np.asarray(fs.table), atol=1e-6)
+
+
+def test_aggregate_codes_sort_then_segment_sum():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 50, 3000).astype(np.int64)
+    w = rng.random(3000).astype(np.float32)
+    uniq, sums = aggregate_codes(codes, w)
+    assert np.all(np.diff(uniq) > 0)
+    expect = np.zeros(50, np.float64)
+    np.add.at(expect, codes, w.astype(np.float64))
+    np.testing.assert_allclose(sums, expect[uniq], rtol=1e-5)

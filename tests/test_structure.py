@@ -42,6 +42,57 @@ def test_precount_equals_ondemand():
         )
 
 
+def test_cache_modes_cell_identical():
+    """precount / ondemand / sparse serve cell-identical family CTs."""
+    from .bruteforce import as_dense_array
+
+    db = university_db()
+    caches = {
+        "precount": CountCache(db, mode="precount", impl="ref"),
+        "ondemand": CountCache(db, mode="ondemand", impl="ref"),
+        "sparse": CountCache(db, mode="sparse"),
+        "ondemand-sparse": CountCache(db, mode="ondemand", impl="sparse"),
+    }
+    families = [
+        ("intelligence(student0)", "ranking(student0)"),
+        ("RA(prof0,student0)", "salary(prof0,student0)", "popularity(prof0)"),
+        ("capability(prof0,student0)", "RA(prof0,student0)"),
+    ]
+    for rvs in families:
+        ref = as_dense_array(caches["precount"](rvs))
+        for name, cache in caches.items():
+            got = as_dense_array(cache(rvs))
+            np.testing.assert_allclose(got, ref, err_msg=f"{name} {rvs}")
+
+
+def test_cache_counters():
+    """n_queries counts calls; n_materializations counts actual CT builds."""
+    db = university_db()
+    fam = ("intelligence(student0)", "ranking(student0)")
+
+    pre = CountCache(db, mode="precount", impl="ref")
+    assert (pre.n_queries, pre.n_materializations) == (0, 1)  # the joint
+    pre(fam); pre(fam); pre(tuple(reversed(fam)))
+    # marginals of the pre-counted joint are never new materializations
+    assert (pre.n_queries, pre.n_materializations) == (3, 1)
+
+    ond = CountCache(db, mode="ondemand", impl="ref")
+    assert (ond.n_queries, ond.n_materializations) == (0, 0)  # no joint
+    ond(fam); ond(fam); ond(tuple(reversed(fam)))
+    # memoized by sorted rv-set: one build serves all three queries
+    assert (ond.n_queries, ond.n_materializations) == (3, 1)
+
+    raw = CountCache(db, mode="ondemand", impl="ref", memoize=False)
+    raw(fam); raw(fam)
+    # the instance-loop baseline re-materializes every query
+    assert (raw.n_queries, raw.n_materializations) == (2, 2)
+
+    sp = CountCache(db, mode="sparse")
+    assert (sp.n_queries, sp.n_materializations) == (0, 1)  # sparse joint
+    sp(fam); sp(fam)
+    assert (sp.n_queries, sp.n_materializations) == (2, 1)
+
+
 def test_hill_climb_finds_planted_dependency():
     """Entity attributes are sampled as a chain attr1 -> attr2 in the
     generator; the climber must pick up that edge (either orientation)."""
