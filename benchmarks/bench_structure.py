@@ -11,7 +11,11 @@ normalized per par-RV as in Table IX.
 
 from __future__ import annotations
 
-from repro.core.structure import CountCache, learn_and_join
+import time
+
+from repro.core.scores import score_structure
+from repro.core.structure import CountCache, ScoreManager, learn_and_join
+from repro.kernels import ops
 
 from .common import emit, load, timed
 
@@ -54,6 +58,95 @@ def run(datasets: list[str], scale: float | None = None, max_chain: int = 1) -> 
         else:
             emit(f"table9/{name}/nocache_baseline", float("nan"), "N/T(skipped-by-cost)")
     return out
+
+
+def run_batched(
+    datasets: list[str], scale: float | None = None, max_chain: int = 1
+) -> dict:
+    """Batched (ScoreManager) vs serial (CountCache) learn-and-join.
+
+    The set-oriented §V-C claim, made machine-readable: same datasets, same
+    search, scored per-candidate vs one batch per sweep.  Emits CSV rows and
+    returns a JSON-ready metrics dict per dataset — candidates scored/sec,
+    per-sweep latency, wall-clock speedup, ops-layer launch counts (the
+    device-dispatch proxy) and the sparse joint-build time, plus the
+    equivalence checks (identical edges, matching total score) that gate
+    the numbers.
+    """
+    out: dict[str, dict] = {}
+    for name in datasets:
+        bdb = load(name, scale)
+        db = bdb.db
+
+        _, sparse_build = timed(CountCache, db, mode="sparse")
+
+        ser_cache, _ = timed(CountCache, db, mode="precount", impl="auto")
+        ops.reset_launch_counts()
+        res_ser, ser_secs = timed(
+            learn_and_join, db, ser_cache, score="aic", max_parents=2,
+            max_chain=max_chain, impl="auto",
+        )
+        ser_launches = ops.total_launches()
+
+        mgr, _ = timed(ScoreManager, db, mode="precount", impl="auto")
+        ops.reset_launch_counts()
+        res_bat, bat_secs = timed(
+            learn_and_join, db, mgr, score="aic", max_parents=2,
+            max_chain=max_chain, impl="auto",
+        )
+        bat_launches = ops.total_launches()
+
+        edges_equal = sorted(res_ser.bn.edges()) == sorted(res_bat.bn.edges())
+        aic_ser = score_structure(res_ser.bn, ser_cache, impl="auto").aic
+        aic_bat = score_structure(res_bat.bn, ser_cache, impl="auto").aic
+        scores_equal = abs(aic_ser - aic_bat) <= 1e-4 * max(1.0, abs(aic_ser))
+
+        metrics = {
+            "serial_seconds": ser_secs,
+            "batched_seconds": bat_secs,
+            "speedup": ser_secs / max(bat_secs, 1e-9),
+            "serial_launches": ser_launches,
+            "batched_launches": bat_launches,
+            "launch_ratio": ser_launches / max(bat_launches, 1),
+            "candidates_scored_serial": res_ser.n_candidates_scored,
+            "candidates_scored_batched": res_bat.n_candidates_scored,
+            "cands_per_sec_serial": res_ser.n_candidates_scored / max(ser_secs, 1e-9),
+            "cands_per_sec_batched": res_bat.n_candidates_scored / max(bat_secs, 1e-9),
+            "n_sweeps": res_bat.n_sweeps,
+            "sweep_ms_serial": ser_secs / max(res_ser.n_sweeps, 1) * 1e3,
+            "sweep_ms_batched": bat_secs / max(res_bat.n_sweeps, 1) * 1e3,
+            "sparse_joint_build_ms": sparse_build * 1e3,
+            "n_edges": res_bat.bn.n_edges,
+            "edges_equal": edges_equal,
+            "scores_equal": scores_equal,
+        }
+        out[name] = metrics
+        emit(
+            f"scoremgr/{name}/batched", bat_secs,
+            f"speedup={metrics['speedup']:.2f}x;launches={ser_launches}->{bat_launches};"
+            f"cands_per_s={metrics['cands_per_sec_batched']:.0f};"
+            f"edges_equal={edges_equal};scores_equal={scores_equal}",
+        )
+        emit(f"scoremgr/{name}/serial", ser_secs,
+             f"cands_per_s={metrics['cands_per_sec_serial']:.0f}")
+        emit(f"scoremgr/{name}/sparse_joint_build", sparse_build, "mode=sparse")
+    return out
+
+
+def json_payload(datasets: list[str], scale: float | None, max_chain: int,
+                 smoke: bool) -> dict:
+    """The BENCH_structure.json document future PRs diff for regressions."""
+    import jax
+
+    return {
+        "bench": "structure_batched_vs_serial",
+        "unix_time": time.time(),
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "max_chain": max_chain,
+        "scale": scale,
+        "datasets": run_batched(datasets, scale, max_chain),
+    }
 
 
 def main(argv: list[str] | None = None) -> None:

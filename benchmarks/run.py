@@ -25,7 +25,31 @@ def main(argv: list[str] | None = None) -> None:
     p.add_argument("--paper-scale", action="store_true", help="full 10^6-tuple runs")
     p.add_argument("--skip", nargs="*", default=[],
                    help="benches to skip: counts sparse params structure predict kernels roofline")
+    p.add_argument("--json", nargs="?", const="BENCH_structure.json", default=None,
+                   metavar="PATH",
+                   help="run the batched-vs-serial structure bench only and "
+                        "write its machine-readable metrics to PATH "
+                        "(default BENCH_structure.json)")
+    p.add_argument("--smoke", action="store_true",
+                   help="with --json: one tiny dataset (CI artifact)")
     a = p.parse_args(argv)
+
+    if a.json is not None:
+        import json
+
+        from . import bench_structure
+
+        datasets = ["uw-cse"] if a.smoke else ["uw-cse", "mutagenesis", "movielens"]
+        scale = 0.05 if a.smoke else None
+        print("name,us_per_call,derived")
+        payload = bench_structure.json_payload(
+            datasets, scale, max_chain=1, smoke=a.smoke
+        )
+        with open(a.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {a.json}", file=sys.stderr)
+        return
 
     scale = 0.02 if a.fast else (1.0 if a.paper_scale else None)
     datasets = (

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    CountCache,
+    ScoreManager,
     learn_and_join,
     learn_parameters,
     predict_block,
@@ -30,17 +30,17 @@ def main() -> None:
         print(f"  {v.vid:35s} kind={v.kind:12s} domain={v.domain}")
 
     print("\n== CDB: joint contingency table (pre-counting) ==")
-    cache = CountCache(db, mode="precount")
+    cache = ScoreManager(db, mode="precount")
     jt = cache.joint
     print(f"  par-RVs={len(jt.rvs)} cells={jt.n_cells} "
           f"sufficient statistics (nonzero)={jt.n_nonzero()} total={float(jt.total()):.0f}")
 
-    print("\n== Structure learning (learn-and-join, AIC) ==")
+    print("\n== Structure learning (learn-and-join, AIC, batched scoring) ==")
     res = learn_and_join(db, cache, score="aic", max_parents=2, max_chain=1)
     for p, c in res.bn.edges():
         print(f"  {p}  ->  {c}")
     print(f"  lattice nodes={res.n_lattice_nodes} families scored={res.n_candidates_scored} "
-          f"in {res.seconds:.2f}s")
+          f"in {res.seconds:.2f}s ({cache.n_score_batches} set-oriented score batches)")
 
     print("\n== MDB: parameters + scores ==")
     factors = learn_parameters(res.bn, cache, alpha=0.0)

@@ -39,6 +39,7 @@ from .schema import (
     analyze_schema,
     make_schema,
 )
+from .score_manager import ScoreManager
 from .scores import ScoreTable, score_family, score_structure
 from .structure import CountCache, LearnAndJoinResult, hill_climb, learn_and_join
 
@@ -50,6 +51,6 @@ __all__ = [
     "university_db", "PredictionResult", "predict_block", "predict_single_loop",
     "EntityDecl", "ParRV", "RelationalSchema", "RelationshipDecl",
     "VariableCatalog", "analyze_schema", "make_schema", "ScoreTable",
-    "score_family", "score_structure", "CountCache", "LearnAndJoinResult",
-    "hill_climb", "learn_and_join",
+    "score_family", "score_structure", "CountCache", "ScoreManager",
+    "LearnAndJoinResult", "hill_climb", "learn_and_join",
 ]

@@ -8,7 +8,7 @@ factor/score tables managed by :mod:`repro.core.cpt` / :mod:`repro.core.scores`.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterable, Mapping
 
 

@@ -47,7 +47,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from functools import reduce
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -61,7 +60,6 @@ from .schema import (
     KIND_REL,
     KIND_REL_ATTR,
     ParRV,
-    VariableCatalog,
 )
 
 
@@ -148,6 +146,106 @@ class ContingencyTable:
             return self
         perm = tuple(self.rvs.index(v) for v in order)
         return ContingencyTable(tuple(order), jnp.transpose(self.table, perm))
+
+
+# ---------------------------------------------------------------------------
+# Batched family marginalization (set-oriented §V-C counts)
+# ---------------------------------------------------------------------------
+
+
+def stacked_family_tables(
+    digits: "dict[str, jax.Array | np.ndarray]",
+    cell_counts: "jax.Array | np.ndarray",
+    cards: dict[str, int],
+    families: list[tuple[str, tuple[str, ...]]],
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array, list[tuple[str, int, int]]]:
+    """Marginalize a whole batch of families out of one joint CT in one pass.
+
+    The joint CT is given in realized-cell form: ``digits[rv]`` is the
+    decoded value column of par-RV ``rv`` over the joint's nonzero cells and
+    ``cell_counts`` their counts (either backend produces this — the COO
+    codes of a :class:`~repro.core.sparse_counts.SparseCT` or the
+    ``flatnonzero`` cells of a dense tensor).  For each requested family
+    ``(child, parents)`` the target cell is
+
+        ``bin = family_index * S + parent_code * C_max + child_value``
+
+    so the *entire batch* of family CTs is one weighted GROUP BY — a single
+    ``ops.ct_count`` launch (the stacked take/einsum pass; ``impl="matmul"``
+    lowers it as one-hot MXU contractions) instead of one marginalization
+    per family.  Padding is sized by the batch maxima ``P_max x C_max``;
+    family domains are bounded by ``max_parents``, so the padded stack stays
+    small even for mixed-arity batches.
+
+    Arrays may live on device (jnp) or host (numpy); device-resident digit
+    caches keep the whole remap on device (see ``ScoreManager``).
+
+    All padded dimensions (batch, parent configs, child lanes, scatter rows)
+    are rounded up to powers of two so the jitted launch shapes stabilize
+    across sweeps — otherwise every hill-climb sweep's slightly different
+    batch would recompile.  Padding rows/lanes carry count 0 (scatter keys
+    ``-1`` are dropped by ``ct_count``) and an all-zero child mask, so they
+    score to exactly nothing downstream.
+
+    Returns ``(stacked, child_mask, metas)``: a ``(B_pad, P_max, C_max)``
+    float32 stack of padded family CTs (axes ``(*sorted parents, child)``,
+    rows ``len(families):`` all-zero padding), the ``(B_pad, C_max)``
+    valid-child-lane mask for the batched kernels, and one
+    ``(child, n_parent_configs, child_card)`` meta per *requested* family.
+    """
+    if not families:
+        raise ValueError("empty family batch")
+
+    def bucket(n: int) -> int:
+        return 1 << max(0, n - 1).bit_length()
+
+    metas: list[tuple[str, int, int]] = []
+    p_max = c_max = 1
+    for child, parents in families:
+        p_i = math.prod((cards[p] for p in parents), start=1)
+        c_i = cards[child]
+        metas.append((child, p_i, c_i))
+        p_max, c_max = max(p_max, p_i), max(c_max, c_i)
+    p_max, c_max = bucket(p_max), bucket(c_max)
+    b_pad = bucket(len(families))
+    stride = p_max * c_max
+    n_bins = b_pad * stride
+    if n_bins > 2**31 - 1:
+        raise OverflowError(
+            f"stacked family batch needs {n_bins:.3g} bins; split the batch"
+        )
+
+    host = isinstance(cell_counts, np.ndarray)
+    xp = np if host else jnp
+    nnz = int(cell_counts.shape[0])
+    if nnz == 0:
+        stacked = jnp.zeros((b_pad, p_max, c_max), jnp.float32)
+    else:
+        chunks = []
+        for i, (child, parents) in enumerate(families):
+            p_cards = [cards[p] for p in parents]
+            code = digits[child] + i * stride
+            for p, s in zip(parents, radix_strides(p_cards)):
+                code = code + digits[p] * (s * c_max)
+            chunks.append(code)
+        bins = xp.concatenate(chunks).astype(xp.int32)
+        weights = xp.tile(cell_counts, len(families))
+        row_pad = bucket(int(bins.shape[0])) - int(bins.shape[0])
+        # -1 keys are dropped by ct_count: row padding is free of mass
+        bins = xp.pad(bins, (0, row_pad), constant_values=-1)
+        weights = xp.pad(weights, (0, row_pad))
+        flat = ops.ct_count(
+            jnp.asarray(bins), n_bins, weights=jnp.asarray(weights),
+            impl=ops.kernel_impl(impl),
+        )
+        stacked = flat.reshape(b_pad, p_max, c_max)
+
+    mask = np.zeros((b_pad, c_max), np.float32)
+    for i, (_, _, c_i) in enumerate(metas):
+        mask[i, :c_i] = 1.0
+    return stacked, jnp.asarray(mask), metas
 
 
 # ---------------------------------------------------------------------------

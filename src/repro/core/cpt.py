@@ -11,13 +11,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
 from .bn import BayesNet
-from .counts import CTLike, ContingencyTable
-from .schema import VariableCatalog
+from .counts import CTLike
 
 
 @dataclass(frozen=True)

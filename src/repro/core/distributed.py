@@ -18,13 +18,12 @@ meshes (``launch/mesh.py``) for the multi-pod dry-run.
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels import ops
 from .counts import ContingencyTable, encode_columns

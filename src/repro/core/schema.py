@@ -22,8 +22,7 @@ not hold (paper §III, following Milch et al.'s BLOG convention).
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Mapping, Sequence
 
 N_A = "n/a"  # distinguished "undefined" value for relationship attributes

@@ -1,0 +1,290 @@
+"""Set-oriented ScoreManager: the MDB ``Scores`` service, batched (§V-C).
+
+FactorBase computes the ``Scores`` table with ONE set-oriented SQL query over
+all families at once; the companion position paper (*SQL for SRL*, arXiv
+1507.00646) argues that set-at-a-time relational operations — not per-family
+loops — are what make in-database structure learning fast.  This module is
+that design on the tensor stack:
+
+  * :class:`CountCache` (the CDB service) serves single family CTs, either as
+    marginals of a pre-counted joint CT or on demand — the store side of the
+    paper's store+score design.
+  * :class:`ScoreManager` extends it with :meth:`ScoreManager.score_batch`:
+    a *batch* of candidate families ``(child, parents)`` goes in, all
+    :class:`~repro.core.scores.FamilyScore` rows come out of one
+    set-oriented pass —
+
+      - **dense joint**: the joint's realized cells are decoded once into
+        per-RV digit columns (cached, optionally device-resident), every
+        family of the batch is remapped to a slot of one padded
+        ``(B, P_max, C_max)`` stack by a single ``ops.ct_count`` launch
+        (:func:`~repro.core.counts.stacked_family_tables`), and the whole
+        stack is scored by one ``mle_cpt_batched`` + one
+        ``factor_loglik_batched`` launch
+        (:func:`~repro.core.scores.stacked_family_scores`);
+      - **sparse joint**: all families are concatenated into a single
+        sort-then-segment-sum code remap
+        (:meth:`~repro.core.sparse_counts.SparseCT.marginal_batch`, one
+        ``ops.sorted_segment_sum`` launch) and scored over realized cells
+        only (float64 host math, bit-identical to the serial sparse path);
+      - **on-demand mode** (no joint) degrades gracefully to memoized
+        per-family counting.
+
+    Scores are memoized by ``(child, sorted parents, alpha)`` — family
+    counts always range over the full catalog universe, so a family's score
+    is context-free and the memo is shared across hill-climb sweeps *and*
+    across lattice nodes of a learn-and-join run.
+
+``device_resident=True`` keeps the dense joint's decoded digit columns and
+cell counts on device, so the whole batched remap + scoring pipeline runs as
+a few device launches per sweep with no host round-trip of the joint CT.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .counts import (
+    CTLike,
+    contingency_table,
+    joint_contingency_table,
+    radix_strides,
+    stacked_family_tables,
+)
+from .database import RelationalDatabase
+from .scores import FamilyScore, score_family, stacked_family_scores
+from .sparse_counts import SparseCT, sparse_family_stats
+
+
+class CountCache:
+    """Serves family CTs, either from a pre-counted joint CT or on demand.
+
+    ``mode="precount"`` reproduces the paper's evaluation choice (§VII-B):
+    one maximally-hard joint CT build, then every family CT is a cheap
+    GROUP BY marginal.  ``mode="ondemand"`` counts each distinct family once
+    (memoized) — the alternative the paper contrasts with.  The
+    ``instance-loop`` baseline in the benchmarks disables the memo.
+    ``mode="sparse"`` is pre-counting on the COO backend: the joint is a
+    :class:`~repro.core.sparse_counts.SparseCT` (no dense-cell cap — storage
+    is #SS), and every served family CT is a sparse marginal.  Passing
+    ``impl="sparse"`` to the other modes routes their queries through the
+    sparse backend as well.
+
+    Bookkeeping counters: ``n_queries`` increments on every call;
+    ``n_materializations`` increments each time a CT is actually *built*
+    from the database (the pre-counted joint counts as one; memo hits and
+    joint marginals are not materializations).
+    """
+
+    def __init__(
+        self,
+        db: RelationalDatabase,
+        mode: str = "precount",
+        *,
+        impl: str = "auto",
+        memoize: bool = True,
+    ):
+        assert mode in ("precount", "ondemand", "sparse")
+        self.db = db
+        self.mode = mode
+        self.impl = "sparse" if mode == "sparse" else impl
+        self.memoize = memoize
+        self._memo: dict[tuple[str, ...], CTLike] = {}
+        self.n_queries = 0
+        self.n_materializations = 0
+        self.joint: CTLike | None = None
+        if mode in ("precount", "sparse"):
+            self.joint = joint_contingency_table(db, impl=self.impl)
+            self.n_materializations += 1
+
+    def __call__(self, rvs: tuple[str, ...]) -> CTLike:
+        self.n_queries += 1
+        key = tuple(sorted(rvs))
+        if self.memoize and key in self._memo:
+            return self._memo[key].transpose(tuple(rvs))
+        if self.joint is not None:
+            ct = self.joint.marginal(tuple(rvs))
+        else:
+            # count over the FULL catalog universe so on-demand counts are
+            # cell-identical to pre-counted joint-CT marginals
+            universe = tuple(f.fid for f in self.db.catalog.fovars)
+            ct = contingency_table(
+                self.db, tuple(rvs), impl=self.impl, fovar_universe=universe
+            )
+            self.n_materializations += 1
+        if self.memoize:
+            self._memo[key] = ct
+        return ct
+
+
+class ScoreManager(CountCache):
+    """Batched family-scoring service — see the module docstring.
+
+    Counters (on top of :class:`CountCache`'s): ``n_score_batches`` is the
+    number of set-oriented passes actually executed (memo-complete batches
+    are free); ``n_scored_families`` the number of distinct families scored
+    through them.
+    """
+
+    def __init__(
+        self,
+        db: RelationalDatabase,
+        mode: str = "precount",
+        *,
+        impl: str = "auto",
+        memoize: bool = True,
+        device_resident: bool = False,
+    ):
+        super().__init__(db, mode, impl=impl, memoize=memoize)
+        self.device_resident = bool(device_resident)
+        self._score_memo: dict[tuple, FamilyScore] = {}
+        self._cards: dict[str, int] | None = None
+        self._joint_rvs: tuple[str, ...] | None = None
+        self._cell_codes: np.ndarray | None = None
+        self._cell_counts = None
+        self._digit_cache: dict[str, object] = {}
+        self.n_score_batches = 0
+        self.n_scored_families = 0
+
+    # -- joint-CT cell cache (counts layer plumbing) -------------------------
+
+    def _ensure_cells(self) -> None:
+        """Decode the dense joint's realized cells once (COO view)."""
+        if self._cell_counts is not None:
+            return
+        flat = np.asarray(self.joint.table, np.float32).reshape(-1)
+        codes = np.flatnonzero(flat).astype(np.int64)
+        counts = flat[codes]
+        self._cell_codes = codes
+        self._joint_rvs = self.joint.rvs
+        self._cards = dict(zip(self.joint.rvs, self.joint.table.shape))
+        self._cell_counts = jnp.asarray(counts) if self.device_resident else counts
+
+    def _digit(self, rv: str):
+        """Cached decoded value column of one par-RV over the joint's cells."""
+        if rv not in self._digit_cache:
+            cards = [self._cards[v] for v in self._joint_rvs]
+            stride = radix_strides(cards)[self._joint_rvs.index(rv)]
+            d = ((self._cell_codes // stride) % self._cards[rv]).astype(np.int32)
+            self._digit_cache[rv] = jnp.asarray(d) if self.device_resident else d
+        return self._digit_cache[rv]
+
+    # -- public scoring API --------------------------------------------------
+
+    def score_batch(
+        self,
+        families: "list[tuple[str, tuple[str, ...]]]",
+        alpha: float = 0.0,
+        *,
+        impl: str | None = None,
+    ) -> list[FamilyScore]:
+        """Score a batch of candidate families in one set-oriented pass.
+
+        ``families`` is a list of ``(child, parents)``; parents are
+        canonicalized to sorted order (scores are order-invariant), results
+        come back in request order, and every computed row lands in the
+        score memo, so only memo misses cost anything.  The memo key
+        excludes ``impl`` — use one manager per kernel dispatch policy.
+        """
+        impl = self.impl if impl is None else impl
+        canon = [(child, tuple(sorted(parents))) for child, parents in families]
+        todo: list[tuple[str, tuple[str, ...]]] = []
+        seen: set[tuple] = set()
+        for key in canon:
+            if key in seen or (key + (float(alpha),)) in self._score_memo:
+                continue
+            seen.add(key)
+            todo.append(key)
+
+        if todo:
+            self.n_score_batches += 1
+            self.n_scored_families += len(todo)
+            if self.joint is None:
+                # on-demand mode: no joint to remap; memoized per-family CTs
+                for child, parents in todo:
+                    fs = score_family(self, child, parents, alpha, impl=impl)
+                    self._score_memo[(child, parents, float(alpha))] = fs
+            elif isinstance(self.joint, SparseCT):
+                keeps = [parents + (child,) for child, parents in todo]
+                fcts = self.joint.marginal_batch(keeps)
+                for (child, parents), fct in zip(todo, fcts):
+                    ll, n_params = sparse_family_stats(fct, child, parents, alpha)
+                    self._score_memo[(child, parents, float(alpha))] = FamilyScore(
+                        child, ll, n_params
+                    )
+                    if self.memoize:
+                        self._memo.setdefault(tuple(sorted(fct.rvs)), fct)
+            else:
+                self._ensure_cells()
+                for group in self._shape_groups(todo):
+                    stacked, mask, metas = stacked_family_tables(
+                        {v: self._digit(v) for f in group for v in (f[0],) + f[1]},
+                        self._cell_counts, self._cards, group, impl=impl,
+                    )
+                    scores = stacked_family_scores(
+                        stacked, mask, metas, alpha, impl=impl
+                    )
+                    for (child, parents), fs in zip(group, scores):
+                        self._score_memo[(child, parents, float(alpha))] = fs
+
+        return [self._score_memo[key + (float(alpha),)] for key in canon]
+
+    def _shape_groups(
+        self, todo: "list[tuple[str, tuple[str, ...]]]"
+    ) -> "list[list[tuple[str, tuple[str, ...]]]]":
+        """Chunk a batch so its padded stack stays under the cell budget.
+
+        ``stacked_family_tables`` pads every slot to the batch maxima, so a
+        single high-cardinality family must not inflate hundreds of tiny
+        slots, and a chunk's total padded cells ``B_pad * P_max * C_max``
+        must stay under :data:`~repro.core.counts.DENSE_CELL_BUDGET` — the
+        same cap the serial path's dense family tables respect (beyond it
+        the stacked histogram could also overflow its int32 bin space).
+        Families are greedily packed largest-slot-first, so a typical sweep
+        batch (bounded family domains) stays ONE launch group and a
+        pathological batch degrades to a few, never to one per family.
+        """
+        self._ensure_cells()
+        # read at call time so set_dense_cell_budget() is honored
+        from .counts import DENSE_CELL_BUDGET
+
+        def bucket(n: int) -> int:
+            return 1 << max(0, n - 1).bit_length()
+
+        dims = {
+            fam: (
+                bucket(math.prod((self._cards[p] for p in fam[1]), start=1)),
+                bucket(self._cards[fam[0]]),
+            )
+            for fam in todo
+        }
+        order = sorted(todo, key=lambda f: dims[f][0] * dims[f][1], reverse=True)
+        out: list[list[tuple[str, tuple[str, ...]]]] = []
+        cur: list[tuple[str, tuple[str, ...]]] = []
+        cur_p = cur_c = 1
+        for fam in order:
+            p_b, c_b = dims[fam]
+            cand_p, cand_c = max(cur_p, p_b), max(cur_c, c_b)
+            if not cur or bucket(len(cur) + 1) * cand_p * cand_c <= DENSE_CELL_BUDGET:
+                cur.append(fam)
+                cur_p, cur_c = cand_p, cand_c
+            else:
+                out.append(cur)
+                cur, cur_p, cur_c = [fam], p_b, c_b
+        if cur:
+            out.append(cur)
+        return out
+
+    def score_one(
+        self,
+        child: str,
+        parents: tuple[str, ...],
+        alpha: float = 0.0,
+        *,
+        impl: str | None = None,
+    ) -> FamilyScore:
+        """Memoized single-family score (a batch of one)."""
+        return self.score_batch([(child, parents)], alpha, impl=impl)[0]

@@ -6,6 +6,15 @@ exactly what makes the paper's *store+score* design effective: every local
 score touches only one family CT, served by the count manager from the
 pre-counted joint CT (or on demand).
 
+Scoring is **set-oriented** (§V-C): instead of scoring one candidate family
+per call, each sweep enumerates every legal ADD/REMOVE/REVERSE move up
+front, dedupes the touched families against the score memo, and requests
+them all in one :meth:`~repro.core.score_manager.ScoreManager.score_batch`
+pass — a few large device launches per sweep rather than two per candidate.
+Pass a plain callable (or ``batch=False``) to fall back to serial
+per-family scoring; both paths enumerate moves in the same order and apply
+the same improvement threshold, so they walk the same move sequence.
+
 ``LearnAndJoin`` implements the lattice search of Schulte & Khosravi (2012)
 as used in the paper's case study (§VII-B): an iterative-deepening search
 over longer and longer relationship chains, where edges decided on shorter
@@ -13,86 +22,33 @@ chains are inherited as hard constraints on longer ones.  Unlike the original
 implementation posted with the paper (limited to two relationship par-RVs per
 par-factor), the count manager here joins arbitrary chains/trees, so the
 lattice depth is a config knob — the FACTORBASE claim this reproduces.
+Independent lattice nodes of a level (disjoint par-RV sets) additionally
+have their opening sweeps prefetched through the same batched service.
 """
 
 from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Iterable
+from dataclasses import dataclass
+from typing import Callable
 
 from .bn import BayesNet
-from .counts import CTLike, ContingencyTable, contingency_table, joint_contingency_table
+from .counts import CTLike
 from .database import RelationalDatabase
-from .schema import KIND_ENTITY_ATTR, KIND_REL, KIND_REL_ATTR, VariableCatalog
+from .schema import VariableCatalog
+from .score_manager import CountCache, ScoreManager
 from .scores import FamilyScore, score_family
 
-
-# ---------------------------------------------------------------------------
-# Count cache — the CDB service used by the search
-# ---------------------------------------------------------------------------
-
-
-class CountCache:
-    """Serves family CTs, either from a pre-counted joint CT or on demand.
-
-    ``mode="precount"`` reproduces the paper's evaluation choice (§VII-B):
-    one maximally-hard joint CT build, then every family CT is a cheap
-    GROUP BY marginal.  ``mode="ondemand"`` counts each distinct family once
-    (memoized) — the alternative the paper contrasts with.  The
-    ``instance-loop`` baseline in the benchmarks disables the memo.
-    ``mode="sparse"`` is pre-counting on the COO backend: the joint is a
-    :class:`~repro.core.sparse_counts.SparseCT` (no dense-cell cap — storage
-    is #SS), and every served family CT is a sparse marginal.  Passing
-    ``impl="sparse"`` to the other modes routes their queries through the
-    sparse backend as well.
-
-    Bookkeeping counters: ``n_queries`` increments on every call;
-    ``n_materializations`` increments each time a CT is actually *built*
-    from the database (the pre-counted joint counts as one; memo hits and
-    joint marginals are not materializations).
-    """
-
-    def __init__(
-        self,
-        db: RelationalDatabase,
-        mode: str = "precount",
-        *,
-        impl: str = "auto",
-        memoize: bool = True,
-    ):
-        assert mode in ("precount", "ondemand", "sparse")
-        self.db = db
-        self.mode = mode
-        self.impl = "sparse" if mode == "sparse" else impl
-        self.memoize = memoize
-        self._memo: dict[tuple[str, ...], CTLike] = {}
-        self.n_queries = 0
-        self.n_materializations = 0
-        self.joint: CTLike | None = None
-        if mode in ("precount", "sparse"):
-            self.joint = joint_contingency_table(db, impl=self.impl)
-            self.n_materializations += 1
-
-    def __call__(self, rvs: tuple[str, ...]) -> CTLike:
-        self.n_queries += 1
-        key = tuple(sorted(rvs))
-        if self.memoize and key in self._memo:
-            return self._memo[key].transpose(tuple(rvs))
-        if self.joint is not None:
-            ct = self.joint.marginal(tuple(rvs))
-        else:
-            # count over the FULL catalog universe so on-demand counts are
-            # cell-identical to pre-counted joint-CT marginals
-            universe = tuple(f.fid for f in self.db.catalog.fovars)
-            ct = contingency_table(
-                self.db, tuple(rvs), impl=self.impl, fovar_universe=universe
-            )
-            self.n_materializations += 1
-        if self.memoize:
-            self._memo[key] = ct
-        return ct
+__all__ = [
+    "CountCache",
+    "ScoreManager",
+    "SearchConstraints",
+    "HillClimbResult",
+    "LearnAndJoinResult",
+    "hill_climb",
+    "learn_and_join",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -130,6 +86,80 @@ class HillClimbResult:
     score: float
     n_candidates_scored: int
     seconds: float
+    n_sweeps: int = 0
+
+
+#: A family is ``(child, parents)``; a move is the candidate structure plus
+#: the families whose local scores enter its delta (new minus old).
+Family = tuple[str, tuple[str, ...]]
+
+
+def _enumerate_moves(
+    bn: BayesNet,
+    rvs: tuple[str, ...],
+    cons: SearchConstraints,
+    max_parents: int,
+) -> list[tuple[BayesNet, tuple[Family, ...], tuple[Family, ...]]]:
+    """All legal ADD / REMOVE / REVERSE moves of one sweep, in a fixed order.
+
+    Returns ``(candidate, new_families, old_families)`` triples; the move's
+    score delta is ``sum local(new) - sum local(old)``.  Both the batched
+    and the serial climber iterate this same list, so tie-breaking (first
+    best move wins) is identical across scoring paths.
+    """
+    moves: list[tuple[BayesNet, tuple[Family, ...], tuple[Family, ...]]] = []
+    # ADD
+    for p, c in itertools.permutations(rvs, 2):
+        if bn.has_edge(p, c) or bn.has_edge(c, p):
+            continue
+        if not cons.may_add(p, c):
+            continue
+        if len(bn.parents[c]) >= max_parents:
+            continue
+        cand = bn.with_edge(p, c)
+        if not cand.is_acyclic():
+            continue
+        moves.append(
+            (cand, ((c, tuple(cand.parents[c])),), ((c, tuple(bn.parents[c])),))
+        )
+    # REMOVE
+    for p, c in bn.edges():
+        if not cons.may_remove(p, c):
+            continue
+        cand = bn.without_edge(p, c)
+        moves.append(
+            (cand, ((c, tuple(cand.parents[c])),), ((c, tuple(bn.parents[c])),))
+        )
+    # REVERSE
+    for p, c in bn.edges():
+        if not cons.may_remove(p, c) or not cons.may_add(c, p):
+            continue
+        if len(bn.parents[p]) >= max_parents:
+            continue
+        cand = bn.reversed_edge(p, c)
+        if not cand.is_acyclic():
+            continue
+        moves.append(
+            (
+                cand,
+                ((c, tuple(cand.parents[c])), (p, tuple(cand.parents[p]))),
+                ((c, tuple(bn.parents[c])), (p, tuple(bn.parents[p]))),
+            )
+        )
+    return moves
+
+
+#: Relative score margin a move must win by — against the current structure
+#: to be applied at all, and against the incumbent best move to displace it.
+#: Scaled by the magnitude of the *local* family scores entering the move's
+#: delta (NOT the global structure score, which grows with the number of
+#: par-RVs while per-move deltas do not) and set above float32
+#: kernel-reduction noise, so the greedy walk is invariant to *how* a family
+#: was scored (batched stack vs single-family kernel differ only in
+#: summation order): analytic ties (e.g. the two orientations of a first
+#: edge) fall to the first-enumerated move on every scoring path instead of
+#: to whichever accumulated the luckier rounding.
+_MIN_DELTA_REL = 1e-6
 
 
 def hill_climb(
@@ -143,12 +173,26 @@ def hill_climb(
     n_groundings: float | None = None,
     impl: str = "auto",
     init: BayesNet | None = None,
+    batch: bool = True,
 ) -> HillClimbResult:
     """Greedy add/delete/reverse edge search with decomposable local scores.
 
     Only the one or two families touched by a move are re-scored; local
-    scores are memoized by (child, parents) — the paper's store+score design.
+    scores are memoized by (child, sorted parents) — the paper's store+score
+    design.  When ``counts_of`` is a :class:`ScoreManager` (and ``batch``
+    is left on), every sweep's candidate families are scored in ONE
+    set-oriented :meth:`~ScoreManager.score_batch` pass; otherwise each
+    family is scored on demand through :func:`~repro.core.scores.
+    score_family` (the serial baseline).
     """
+    if score not in ("aic", "bic", "loglik"):
+        raise ValueError(f"score must be one of aic|bic|loglik, got {score!r}")
+    if score == "bic" and n_groundings is None:
+        raise ValueError(
+            "score='bic' requires n_groundings (the grounding count N in the "
+            "-0.5 * #params * ln N penalty); learn_and_join passes "
+            "db.total_tuples automatically"
+        )
     t0 = time.perf_counter()
     cons = constraints or SearchConstraints()
     bn = init if init is not None else BayesNet.empty(rvs)
@@ -157,80 +201,63 @@ def hill_climb(
             bn = bn.with_edge(p, c)
     assert bn.is_acyclic(), "required edges form a cycle"
 
+    mgr = counts_of if (batch and isinstance(counts_of, ScoreManager)) else None
     local_memo: dict[tuple[str, tuple[str, ...]], FamilyScore] = {}
     n_scored = 0
+    mgr_scored0 = mgr.n_scored_families if mgr is not None else 0
 
-    def local(child: str, parents: tuple[str, ...]) -> float:
+    def family_score(child: str, parents: tuple[str, ...]) -> FamilyScore:
         nonlocal n_scored
         key = (child, tuple(sorted(parents)))
+        if mgr is not None:
+            return mgr.score_one(child, key[1], alpha, impl=impl)
         if key not in local_memo:
-            fs = score_family(counts_of, child, parents, alpha, impl=impl)
-            local_memo[key] = fs
+            local_memo[key] = score_family(counts_of, child, key[1], alpha, impl=impl)
             n_scored += 1
-        fs = local_memo[key]
+        return local_memo[key]
+
+    def local(child: str, parents: tuple[str, ...]) -> float:
+        fs = family_score(child, parents)
         if score == "aic":
             return fs.aic()
         if score == "bic":
-            assert n_groundings is not None
             return fs.bic(n_groundings)
-        if score == "loglik":
-            return fs.loglik
-        raise ValueError(score)
+        return fs.loglik
 
-    def total(b: BayesNet) -> float:
-        return sum(local(c, tuple(b.parents[c])) for c in b.rvs)
+    init_fams = [(c, tuple(bn.parents[c])) for c in rvs]
+    if mgr is not None and init_fams:
+        mgr.score_batch(init_fams, alpha, impl=impl)
+    cur_score = sum(local(c, ps) for c, ps in init_fams)
 
-    cur_score = total(bn)
-
+    n_sweeps = 0
     while True:
-        best_delta = 1e-9
-        best_bn = None
-        # ADD
-        for p, c in itertools.permutations(rvs, 2):
-            if bn.has_edge(p, c) or bn.has_edge(c, p):
-                continue
-            if not cons.may_add(p, c):
-                continue
-            if len(bn.parents[c]) >= max_parents:
-                continue
-            cand = bn.with_edge(p, c)
-            if not cand.is_acyclic():
-                continue
-            delta = local(c, tuple(cand.parents[c])) - local(c, tuple(bn.parents[c]))
-            if delta > best_delta:
-                best_delta, best_bn = delta, cand
-        # REMOVE
-        for p, c in bn.edges():
-            if not cons.may_remove(p, c):
-                continue
-            cand = bn.without_edge(p, c)
-            delta = local(c, tuple(cand.parents[c])) - local(c, tuple(bn.parents[c]))
-            if delta > best_delta:
-                best_delta, best_bn = delta, cand
-        # REVERSE
-        for p, c in bn.edges():
-            if not cons.may_remove(p, c) or not cons.may_add(c, p):
-                continue
-            if len(bn.parents[p]) >= max_parents:
-                continue
-            cand = bn.reversed_edge(p, c)
-            if not cand.is_acyclic():
-                continue
-            delta = (
-                local(c, tuple(cand.parents[c]))
-                + local(p, tuple(cand.parents[p]))
-                - local(c, tuple(bn.parents[c]))
-                - local(p, tuple(bn.parents[p]))
+        n_sweeps += 1
+        moves = _enumerate_moves(bn, rvs, cons, max_parents)
+        if mgr is not None and moves:
+            # the set-oriented pass: every family any move of this sweep
+            # touches, deduped against the memo, scored in one batch
+            mgr.score_batch(
+                [f for _, new, old in moves for f in new + old], alpha, impl=impl
             )
-            if delta > best_delta:
-                best_delta, best_bn = delta, cand
-
+        best_delta, best_bn, best_margin = 0.0, None, 1e-9
+        for cand, new_fams, old_fams in moves:
+            vals_new = [local(c, ps) for c, ps in new_fams]
+            vals_old = [local(c, ps) for c, ps in old_fams]
+            delta = sum(vals_new) - sum(vals_old)
+            margin = max(
+                1e-9,
+                _MIN_DELTA_REL * max(abs(v) for v in vals_new + vals_old),
+            )
+            if delta > best_delta + max(margin, best_margin):
+                best_delta, best_bn, best_margin = delta, cand, margin
         if best_bn is None:
             break
         bn = best_bn
         cur_score += best_delta
 
-    return HillClimbResult(bn, cur_score, n_scored, time.perf_counter() - t0)
+    if mgr is not None:
+        n_scored = mgr.n_scored_families - mgr_scored0
+    return HillClimbResult(bn, cur_score, n_scored, time.perf_counter() - t0, n_sweeps)
 
 
 # ---------------------------------------------------------------------------
@@ -283,6 +310,54 @@ class LearnAndJoinResult:
     n_candidates_scored: int
     n_lattice_nodes: int
     seconds: float
+    n_sweeps: int = 0
+
+
+def _prefetch_level(
+    mgr: ScoreManager,
+    nodes: list[tuple[tuple[str, ...], set[tuple[str, str]]]],
+    required: set[tuple[str, str]],
+    decided: set[frozenset[str]],
+    alpha: float,
+    impl: str,
+    max_parents: int,
+) -> None:
+    """Batch the opening sweeps of one lattice level through the service.
+
+    Family scores are context-free (counts range over the full catalog
+    universe), so prefetching is always sound; what varies per node is
+    *which* families its sweeps request.  Initial families are requested
+    for every node.  First-sweep move families are prefetched only for
+    nodes whose par-RV set is disjoint from all earlier nodes of the same
+    level — those are the independent lattice nodes: same-level
+    adjudication cannot constrain their move set, so the prefetch is exact
+    (level 0's per-entity-table nodes always qualify).
+    """
+    fams: list[Family] = []
+    prev_rvs: list[set[str]] = []
+    for rvs, extra_req in nodes:
+        req = {(p, c) for (p, c) in required | extra_req if p in rvs and c in rvs}
+        bn = BayesNet.empty(rvs)
+        for p, c in req:
+            if not bn.has_edge(p, c):
+                bn = bn.with_edge(p, c)
+        if not bn.is_acyclic():
+            prev_rvs.append(set(rvs))
+            continue
+        fams.extend((c, tuple(bn.parents[c])) for c in rvs)
+        if all(not (set(rvs) & s) for s in prev_rvs):
+            cons = SearchConstraints(
+                required=frozenset(req),
+                decided=frozenset(
+                    {pc for pc in decided if all(v in rvs for v in pc)}
+                ),
+            )
+            for _, new, old in _enumerate_moves(bn, rvs, cons, max_parents):
+                fams.extend(new)
+                fams.extend(old)
+        prev_rvs.append(set(rvs))
+    if fams:
+        mgr.score_batch(fams, alpha, impl=impl)
 
 
 def learn_and_join(
@@ -294,6 +369,7 @@ def learn_and_join(
     max_parents: int = 3,
     max_chain: int = 2,
     impl: str = "auto",
+    batch: bool = True,
 ) -> LearnAndJoinResult:
     """The LAJ algorithm (§VII-B): iterative deepening over relationship chains.
 
@@ -304,6 +380,11 @@ def learn_and_join(
     levels are inherited (required if present, forbidden if absent between
     already-seen node pairs).  The final model is the union of the maximal
     chains' BNs.
+
+    With a :class:`ScoreManager` (and ``batch`` on), each level's
+    independent nodes have their opening sweeps scored in one batched pass
+    before any node runs, and the manager's score memo is shared across
+    nodes — families recurring between lattice nodes are never re-scored.
 
     Standard LAJ constraints enforced here:
       * a relationship indicator is a required parent of each of its
@@ -316,12 +397,14 @@ def learn_and_join(
     cat = db.catalog
     per_level: dict[int, float] = {}
     n_scored = 0
+    n_sweeps = 0
 
     required: set[tuple[str, str]] = set()
     decided: set[frozenset[str]] = set()
+    mgr = counts_of if (batch and isinstance(counts_of, ScoreManager)) else None
 
     def run_node(rvs: tuple[str, ...], extra_required: set[tuple[str, str]]) -> BayesNet:
-        nonlocal n_scored
+        nonlocal n_scored, n_sweeps
         cons = SearchConstraints(
             required=frozenset(
                 {(p, c) for (p, c) in required | extra_required if p in rvs and c in rvs}
@@ -340,8 +423,10 @@ def learn_and_join(
             constraints=cons,
             n_groundings=float(db.total_tuples),
             impl=impl,
+            batch=batch,
         )
         n_scored += res.n_candidates_scored
+        n_sweeps += res.n_sweeps
         return res.bn
 
     def adjudicate(bn: BayesNet) -> None:
@@ -354,11 +439,18 @@ def learn_and_join(
     # ---- level 0: entity tables --------------------------------------------
     lvl_t = time.perf_counter()
     level_bns: list[BayesNet] = []
+    nodes0: list[tuple[tuple[str, ...], set[tuple[str, str]]]] = []
     for fovar in cat.fovars:
         rvs = tuple(v.vid for v in cat.attrs_of_fovar(fovar.fid))
         if len(rvs) < 1:
             continue
-        bn = run_node(rvs, set())
+        nodes0.append((rvs, set()))
+    if mgr is not None:
+        before = mgr.n_scored_families
+        _prefetch_level(mgr, nodes0, required, decided, alpha, impl, max_parents)
+        n_scored += mgr.n_scored_families - before
+    for rvs, extra_req in nodes0:
+        bn = run_node(rvs, extra_req)
         adjudicate(bn)
         level_bns.append(bn)
     per_level[0] = time.perf_counter() - lvl_t
@@ -369,6 +461,7 @@ def learn_and_join(
     final_bns: dict[frozenset[str], BayesNet] = {}
     for level in range(1, max_chain + 1):
         lvl_t = time.perf_counter()
+        level_nodes: list[tuple[list[str], tuple[str, ...], set[tuple[str, str]]]] = []
         for chain in [c for c in chains if len(c) == level]:
             rvs: list[str] = []
             extra_req: set[tuple[str, str]] = set()
@@ -384,7 +477,17 @@ def learn_and_join(
                     extra_req.add((rv.vid, a.vid))  # R -> its attributes
             for f in fovars:
                 rvs.extend(v.vid for v in cat.attrs_of_fovar(f))
-            bn = run_node(tuple(dict.fromkeys(rvs)), extra_req)
+            level_nodes.append((chain, tuple(dict.fromkeys(rvs)), extra_req))
+        if mgr is not None:
+            before = mgr.n_scored_families
+            _prefetch_level(
+                mgr,
+                [(rvs_t, extra_req) for _, rvs_t, extra_req in level_nodes],
+                required, decided, alpha, impl, max_parents,
+            )
+            n_scored += mgr.n_scored_families - before
+        for chain, rvs_t, extra_req in level_nodes:
+            bn = run_node(rvs_t, extra_req)
             adjudicate(bn)
             final_bns[frozenset(chain)] = bn
         per_level[level] = time.perf_counter() - lvl_t
@@ -407,4 +510,5 @@ def learn_and_join(
         n_candidates_scored=n_scored,
         n_lattice_nodes=n_nodes,
         seconds=time.perf_counter() - t0,
+        n_sweeps=n_sweeps,
     )

@@ -22,7 +22,7 @@ generator enforces this (see DESIGN.md §2 hardware-adaptation notes).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -7,6 +7,17 @@ grouped scoring matmul).  Each hot spot has a Pallas kernel (<name>.py), a
 pure-jnp oracle (ref.py) and a jitted dispatching wrapper (ops.py).
 """
 
-from .ops import block_predict, ct_count, factor_loglik, mle_cpt
+from .ops import (
+    block_predict,
+    ct_count,
+    factor_loglik,
+    factor_loglik_batched,
+    mle_cpt,
+    mle_cpt_batched,
+    sorted_segment_sum,
+)
 
-__all__ = ["block_predict", "ct_count", "factor_loglik", "mle_cpt"]
+__all__ = [
+    "block_predict", "ct_count", "factor_loglik", "factor_loglik_batched",
+    "mle_cpt", "mle_cpt_batched", "sorted_segment_sum",
+]

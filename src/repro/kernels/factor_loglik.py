@@ -51,7 +51,8 @@ def factor_loglik_pallas(
     ctf = ct.reshape(-1).astype(jnp.float32)
     cpf = cpt.reshape(-1).astype(jnp.float32)
     m = ctf.shape[0]
-    bm = min(bm, max(8 * 128, m))
+    # tile size must stay lane-aligned (multiple of 128) after shrinking
+    bm = min(bm, max(8 * 128, -(-m // 128) * 128))
     pad = -m % bm
     # count padding 0 -> contributes 0 regardless of cp padding value
     ctf = jnp.pad(ctf, (0, pad)).reshape(-1, 128)
@@ -70,3 +71,58 @@ def factor_loglik_pallas(
         interpret=interpret,
     )(ctf, cpf)
     return out[0, 0]
+
+
+def _loglik_batched_kernel(ct_ref, cp_ref, out_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ct = ct_ref[...]
+    cp = cp_ref[...]
+    logp = jnp.log(jnp.maximum(cp, _LOG_TINY))
+    contrib = jnp.where(ct > 0, ct * logp, 0.0)
+    out_ref[...] += jnp.sum(contrib)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bm"))
+def factor_loglik_batched_pallas(
+    ct: jax.Array,
+    cpt: jax.Array,
+    *,
+    interpret: bool = False,
+    bm: int = _BM,
+) -> jax.Array:
+    """Per-row ``sum(count * log(cp))`` over stacked flat families.
+
+    ``ct`` and ``cpt`` are co-indexed ``(B, M)``; returns ``(B,)`` float32.
+    The grid is (family, cell-tile) with the tile dimension innermost, so
+    each family's (1, 1) accumulator block revolves in VMEM across its own
+    cell sweep — B scalar reductions in a single launch instead of B
+    single-family kernel launches (the set-oriented §V-C ``Scores`` build).
+    """
+    b, m = ct.shape
+    ctf = ct.astype(jnp.float32)
+    cpf = cpt.astype(jnp.float32)
+    # tile size must stay lane-aligned (multiple of 128) after shrinking
+    bm = min(bm, max(8 * 128, -(-m // 128) * 128))
+    pad = -m % bm
+    # count padding 0 -> contributes 0 regardless of cp padding value
+    ctf = jnp.pad(ctf, ((0, 0), (0, pad))).reshape(b, -1, 128)
+    cpf = jnp.pad(cpf, ((0, 0), (0, pad)), constant_values=1.0).reshape(b, -1, 128)
+    rows_per_tile = bm // 128
+
+    out = pl.pallas_call(
+        _loglik_batched_kernel,
+        grid=(b, ctf.shape[1] // rows_per_tile),
+        in_specs=[
+            pl.BlockSpec((1, rows_per_tile, 128), lambda bb, i: (bb, i, 0)),
+            pl.BlockSpec((1, rows_per_tile, 128), lambda bb, i: (bb, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda bb, i: (bb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(ctf, cpf)
+    return out[:, 0]

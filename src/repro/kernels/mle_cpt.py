@@ -62,3 +62,57 @@ def mle_cpt_pallas(
         interpret=interpret,
     )(ct2)
     return out[:p, :c]
+
+
+def _mle_cpt_batched_kernel(ct_ref, mask_ref, out_ref, *, alpha: float):
+    ct = ct_ref[0]          # (BP, C_pad) f32
+    mask = mask_ref[0]      # (1, C_pad)  f32, 1.0 on valid child lanes
+    valid = mask > 0
+    ct = jnp.where(valid, ct, 0.0)
+    n_child = jnp.sum(mask)  # this family's true child cardinality
+    row = jnp.sum(ct, axis=1, keepdims=True)
+    denom = row + alpha * n_child
+    safe = jnp.where(denom > 0, denom, 1.0)
+    cpt = (ct + alpha) / safe
+    uniform = 1.0 / jnp.maximum(n_child, 1.0)
+    cpt = jnp.where(denom > 0, cpt, uniform)
+    out_ref[0] = jnp.where(valid, cpt, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "interpret", "bp"))
+def mle_cpt_batched_pallas(
+    ct: jax.Array,
+    child_mask: jax.Array,
+    alpha: float = 0.0,
+    *,
+    interpret: bool = False,
+    bp: int = _BP,
+) -> jax.Array:
+    """Row-normalize a stack of padded family count matrices in one launch.
+
+    ``ct`` is ``(B, P_max, C_max)``; ``child_mask`` ``(B, C_max)`` marks each
+    family's valid child values (per-family cardinality = ``sum(mask)``, so
+    smoothing stays exact under lane padding).  Grid is (family, parent
+    blocks); each tile holds full rows of one family, so row sums never
+    cross tiles — the single-family kernel's invariant, preserved per batch
+    member.
+    """
+    b, p, c = ct.shape
+    bp = min(bp, max(8, p))
+    p_pad = -p % bp
+    c_pad = -c % 128
+    ct2 = jnp.pad(ct.astype(jnp.float32), ((0, 0), (0, p_pad), (0, c_pad)))
+    mask2 = jnp.pad(child_mask.astype(jnp.float32), ((0, 0), (0, c_pad)))[:, None, :]
+
+    out = pl.pallas_call(
+        functools.partial(_mle_cpt_batched_kernel, alpha=float(alpha)),
+        grid=(b, (p + p_pad) // bp),
+        in_specs=[
+            pl.BlockSpec((1, bp, c + c_pad), lambda bb, i: (bb, i, 0)),
+            pl.BlockSpec((1, 1, c + c_pad), lambda bb, i: (bb, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bp, c + c_pad), lambda bb, i: (bb, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p + p_pad, c + c_pad), jnp.float32),
+        interpret=interpret,
+    )(ct2, mask2)
+    return out[:, :p, :c]

@@ -13,14 +13,42 @@ shard_map computations; the count manager's distributed path relies on that.
 
 from __future__ import annotations
 
+from collections import Counter
+
 import jax
 import jax.numpy as jnp
 
 from . import ref
 from .block_predict import block_predict_pallas
 from .ct_count import ct_count_pallas
-from .factor_loglik import factor_loglik_pallas
-from .mle_cpt import mle_cpt_pallas
+from .factor_loglik import factor_loglik_batched_pallas, factor_loglik_pallas
+from .mle_cpt import mle_cpt_batched_pallas, mle_cpt_pallas
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting
+# ---------------------------------------------------------------------------
+
+#: Host-side tally of kernel-wrapper invocations, keyed by op name.  Each
+#: public wrapper below is one device dispatch (one compiled kernel or oracle
+#: computation per call), so this is the proxy the structure-search benchmarks
+#: use for "device launches": the batched ScoreManager path must show an
+#: order-of-magnitude fewer launches than per-candidate serial scoring.
+_LAUNCHES: Counter = Counter()
+
+
+def reset_launch_counts() -> None:
+    """Zero the per-op launch tally (benchmark bracketing)."""
+    _LAUNCHES.clear()
+
+
+def launch_counts() -> dict[str, int]:
+    """Snapshot of wrapper invocations since the last reset, by op name."""
+    return dict(_LAUNCHES)
+
+
+def total_launches() -> int:
+    return sum(_LAUNCHES.values())
 
 
 def kernel_impl(impl: str) -> str:
@@ -60,6 +88,7 @@ def ct_count(
     ``impl="matmul"`` selects the XLA-level MXU formulation (chunked one-hot
     contraction) — the dry-run path whose HLO carries counting's real FLOPs.
     """
+    _LAUNCHES["ct_count"] += 1
     if impl == "matmul":
         out = ref.ct_count_matmul(keys, num_bins, weights)
         return out if weights is not None else out.astype(jnp.int32)
@@ -86,6 +115,7 @@ def sorted_segment_sum(
     builder sorts composite codes first), letting XLA skip the scatter's
     conflict handling.
     """
+    _LAUNCHES["sorted_segment_sum"] += 1
     if impl == "ref":
         return ref.sorted_segment_sum_ref(values, segment_ids, num_segments)
     return jax.ops.segment_sum(
@@ -95,22 +125,62 @@ def sorted_segment_sum(
 
 def mle_cpt(ct: jax.Array, alpha: float = 0.0, *, impl: str = "auto") -> jax.Array:
     """Row-normalized CPT from a (parent_configs, child_values) count matrix."""
+    _LAUNCHES["mle_cpt"] += 1
     use, interp = _use_pallas(impl)
     if use:
         return mle_cpt_pallas(ct, alpha, interpret=interp)
     return ref.mle_cpt_ref(ct, alpha)
 
 
+def mle_cpt_batched(
+    ct: jax.Array,
+    child_mask: jax.Array,
+    alpha: float = 0.0,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Batched CPTs from stacked padded family counts — one launch per batch.
+
+    ``ct`` is ``(B, P_max, C_max)``, ``child_mask`` ``(B, C_max)`` (1.0 on
+    valid child lanes).  Returns ``(B, P_max, C_max)`` CPTs, zero outside
+    each family's valid lanes.  The set-oriented twin of :func:`mle_cpt`:
+    per-family values match the single-family kernel run on the unpadded
+    ``(P_i, C_i)`` slice.
+    """
+    _LAUNCHES["mle_cpt_batched"] += 1
+    use, interp = _use_pallas(impl)
+    if use:
+        return mle_cpt_batched_pallas(ct, child_mask, alpha, interpret=interp)
+    return ref.mle_cpt_batched_ref(ct, child_mask, alpha)
+
+
 def factor_loglik(ct: jax.Array, cpt: jax.Array, *, impl: str = "auto") -> jax.Array:
     """sum(count * log cp) with the 0*log0 := 0 convention.  Scalar float32."""
+    _LAUNCHES["factor_loglik"] += 1
     use, interp = _use_pallas(impl)
     if use:
         return factor_loglik_pallas(ct, cpt, interpret=interp)
     return ref.factor_loglik_ref(ct, cpt)
 
 
+def factor_loglik_batched(ct: jax.Array, cpt: jax.Array, *, impl: str = "auto") -> jax.Array:
+    """Per-family logliks over co-indexed ``(B, M)`` stacks — one launch.
+
+    The §V-C ``Scores`` table computed set-at-a-time: row ``b`` is
+    ``sum(ct[b] * log cp[b])`` under the 0*log0 := 0 convention, so padding
+    cells (count 0) contribute nothing and per-family results match
+    :func:`factor_loglik` on the unpadded slice.
+    """
+    _LAUNCHES["factor_loglik_batched"] += 1
+    use, interp = _use_pallas(impl)
+    if use:
+        return factor_loglik_batched_pallas(ct, cpt, interpret=interp)
+    return ref.factor_loglik_batched_ref(ct, cpt)
+
+
 def block_predict(counts: jax.Array, log_cpt: jax.Array, *, impl: str = "auto") -> jax.Array:
     """scores[e, y] = counts(E, C) @ log_cpt(C, Y) — §VI block access."""
+    _LAUNCHES["block_predict"] += 1
     use, interp = _use_pallas(impl)
     if use:
         return block_predict_pallas(counts, log_cpt, interpret=interp)

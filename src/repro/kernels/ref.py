@@ -78,6 +78,32 @@ def sorted_segment_sum_ref(
     return jnp.zeros((num_segments,), values.dtype).at[segment_ids].add(values)
 
 
+def mle_cpt_batched_ref(
+    ct: jax.Array, child_mask: jax.Array, alpha: float = 0.0
+) -> jax.Array:
+    """Batched MLE CPTs over padded stacked families.
+
+    ``ct`` is ``(B, P_max, C_max)`` — one padded ``(parent_configs,
+    child_values)`` count matrix per family — and ``child_mask`` is
+    ``(B, C_max)`` with 1.0 on each family's valid child values.  Lanes
+    beyond a family's child cardinality are masked out of numerator and
+    row sum (smoothing uses the *true* cardinality ``sum(mask)``), and
+    padded parent rows behave like unrealized configurations: they get the
+    uniform distribution and contribute nothing to any likelihood.
+    """
+    ct = ct.astype(jnp.float32)
+    valid = child_mask[:, None, :] > 0
+    ct = jnp.where(valid, ct, 0.0)
+    n_child = jnp.sum(child_mask.astype(jnp.float32), axis=-1)[:, None, None]
+    row = jnp.sum(ct, axis=-1, keepdims=True)
+    denom = row + alpha * n_child
+    uniform = 1.0 / jnp.maximum(n_child, 1.0)
+    cpt = jnp.where(
+        denom > 0, (ct + alpha) / jnp.where(denom > 0, denom, 1.0), uniform
+    )
+    return jnp.where(valid, cpt, 0.0)
+
+
 def mle_cpt_ref(ct: jax.Array, alpha: float = 0.0) -> jax.Array:
     """Maximum-likelihood CPT from a (parent_configs, child_values) count table.
 
@@ -106,6 +132,19 @@ def factor_loglik_ref(ct: jax.Array, cpt: jax.Array) -> jax.Array:
     ct = ct.astype(jnp.float32)
     logp = jnp.log(jnp.maximum(cpt.astype(jnp.float32), _LOG_TINY))
     return jnp.sum(jnp.where(ct > 0, ct * logp, 0.0))
+
+
+def factor_loglik_batched_ref(ct: jax.Array, cpt: jax.Array) -> jax.Array:
+    """Per-family log-likelihoods over stacked flat families.
+
+    ``ct`` and ``cpt`` are co-indexed ``(B, M)`` arrays (each row one padded
+    family); returns ``(B,)`` float32 logliks.  Padding cells carry count 0
+    and therefore contribute exactly 0 (the 0*log0 := 0 convention), so the
+    result per family is independent of how the batch is padded.
+    """
+    ct = ct.astype(jnp.float32)
+    logp = jnp.log(jnp.maximum(cpt.astype(jnp.float32), _LOG_TINY))
+    return jnp.sum(jnp.where(ct > 0, ct * logp, 0.0), axis=-1)
 
 
 def block_predict_ref(counts: jax.Array, log_cpt: jax.Array) -> jax.Array:

@@ -34,7 +34,6 @@ from .layers import (
     attn_block,
     attn_project_qkv,
     cross_attn_block,
-    decode_attention,
     init_attn,
     init_dense,
     init_mlp,
@@ -42,7 +41,7 @@ from .layers import (
     swiglu_mlp,
 )
 from .moe import init_moe, moe_ffn
-from .ssm import init_ssm, init_ssm_state, ssm_block, ssm_decode
+from .ssm import init_ssm, ssm_block
 
 Params = dict[str, Any]
 

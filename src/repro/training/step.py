@@ -9,8 +9,6 @@ what the trainer runs.
 """
 
 from __future__ import annotations
-
-import functools
 from typing import Any
 
 import jax

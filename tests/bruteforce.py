@@ -14,7 +14,7 @@ import itertools
 
 import numpy as np
 
-from repro.core.schema import KIND_ENTITY_ATTR, KIND_REL, KIND_REL_ATTR
+from repro.core.schema import KIND_ENTITY_ATTR, KIND_REL
 from repro.core.sparse_counts import SparseCT
 
 #: the impl sweep every dense oracle test also runs with (sparse backend)

@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret on CPU) vs pure-jnp oracle,
 swept over shapes and dtypes, plus hypothesis property tests."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -72,7 +71,7 @@ def test_mle_cpt(p, c, alpha):
     np.testing.assert_allclose(np.asarray(out_p).sum(axis=1), 1.0, rtol=1e-5)
 
 
-@pytest.mark.parametrize("shape", [(10,), (64, 5), (7, 9, 3), (4096,)])
+@pytest.mark.parametrize("shape", [(10,), (64, 5), (7, 9, 3), (4096,), (200, 7)])
 def test_factor_loglik(shape):
     rng = np.random.default_rng(42)
     ct = rng.integers(0, 30, size=shape).astype(np.float32)
@@ -80,6 +79,71 @@ def test_factor_loglik(shape):
     out_p = float(ops.factor_loglik(jnp.asarray(ct), jnp.asarray(cpt), impl="pallas"))
     out_r = float(ops.factor_loglik(jnp.asarray(ct), jnp.asarray(cpt), impl="ref"))
     np.testing.assert_allclose(out_p, out_r, rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("alpha", [0.0, 0.5])
+def test_mle_cpt_batched_matches_serial(impl, alpha):
+    """Each padded stack member == the single-family kernel on its slice."""
+    rng = np.random.default_rng(3)
+    metas = [(10, 7), (3, 4), (1, 2), (6, 7), (513, 3)]
+    p_max = max(p for p, _ in metas)
+    c_max = max(c for _, c in metas)
+    stack = np.zeros((len(metas), p_max, c_max), np.float32)
+    mask = np.zeros((len(metas), c_max), np.float32)
+    fams = []
+    for i, (p, c) in enumerate(metas):
+        t = rng.integers(0, 20, (p, c)).astype(np.float32)
+        t[0] = 0  # unrealized parent config
+        stack[i, :p, :c] = t
+        mask[i, :c] = 1.0
+        fams.append(t)
+    out = np.asarray(
+        ops.mle_cpt_batched(jnp.asarray(stack), jnp.asarray(mask), alpha, impl=impl)
+    )
+    for i, (p, c) in enumerate(metas):
+        ser = np.asarray(ops.mle_cpt(jnp.asarray(fams[i]), alpha, impl=impl))
+        np.testing.assert_allclose(out[i, :p, :c], ser, rtol=1e-6, atol=1e-6)
+        # padded child lanes are zeroed, so row sums stay 1 over valid lanes
+        np.testing.assert_array_equal(out[i, :, c:], 0.0)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_factor_loglik_batched_matches_serial(impl):
+    rng = np.random.default_rng(11)
+    metas = [(10, 7), (3, 4), (1, 2), (200, 5)]
+    p_max = max(p for p, _ in metas)
+    c_max = max(c for _, c in metas)
+    stack = np.zeros((len(metas), p_max, c_max), np.float32)
+    mask = np.zeros((len(metas), c_max), np.float32)
+    for i, (p, c) in enumerate(metas):
+        stack[i, :p, :c] = rng.integers(0, 30, (p, c)).astype(np.float32)
+        mask[i, :c] = 1.0
+    cpts = np.asarray(
+        ops.mle_cpt_batched(jnp.asarray(stack), jnp.asarray(mask), 0.3, impl="ref")
+    )
+    b = len(metas)
+    lls = np.asarray(
+        ops.factor_loglik_batched(
+            jnp.asarray(stack.reshape(b, -1)), jnp.asarray(cpts.reshape(b, -1)),
+            impl=impl,
+        )
+    )
+    assert lls.shape == (b,)
+    for i in range(b):
+        ser = float(
+            ops.factor_loglik(jnp.asarray(stack[i]), jnp.asarray(cpts[i]), impl=impl)
+        )
+        np.testing.assert_allclose(lls[i], ser, rtol=1e-5)
+
+
+def test_factor_loglik_batched_zero_convention():
+    """Padding cells (count 0) contribute exactly 0 even where cp == 0."""
+    ct = jnp.asarray([[0.0, 2.0, 0.0, 0.0]])
+    cpt = jnp.asarray([[0.0, 0.5, 0.0, 0.0]])
+    for impl in ("ref", "pallas"):
+        v = np.asarray(ops.factor_loglik_batched(ct, cpt, impl=impl))
+        np.testing.assert_allclose(v, [2.0 * np.log(0.5)], rtol=1e-6)
 
 
 def test_factor_loglik_zero_convention():

@@ -17,7 +17,7 @@ import pytest
 
 from repro.configs.base import ARCH_IDS, get_config
 from repro.models.params import count_params_analytic
-from repro.models.transformer import count_params, forward, init_params, loss_fn
+from repro.models.transformer import count_params, forward, init_params
 from repro.serving.decode import decode_step, init_cache
 from repro.training.optimizer import AdamWConfig
 from repro.training.step import make_train_step, init_train_state

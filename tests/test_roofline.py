@@ -1,7 +1,6 @@
 """Roofline machinery: HLO analyzer trip-count awareness (flops must scale
 linearly with scan depth), collective parsing, term computation."""
 
-import numpy as np
 import pytest
 
 from repro.roofline.analysis import (

@@ -1,0 +1,282 @@
+"""Set-oriented ScoreManager: batched marginalization + batched-vs-serial
+structure-search equivalence over both count backends and kernel impls."""
+
+import numpy as np
+import pytest
+
+from repro.core.counts import joint_contingency_table, radix_strides, stacked_family_tables
+from repro.core.database import university_db
+from repro.core.score_manager import CountCache, ScoreManager
+from repro.core.structure import hill_climb, learn_and_join
+from repro.kernels import ops
+
+from .bruteforce import random_db
+
+UNIV_RVS = (
+    "intelligence(student0)",
+    "ranking(student0)",
+    "popularity(prof0)",
+    "teachingability(prof0)",
+)
+
+
+# ---------------------------------------------------------------------------
+# Counts layer: batched marginalization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_sparse_marginal_batch_matches_serial(seed):
+    db = random_db(seed)
+    joint = joint_contingency_table(db, impl="sparse")
+    rvs = joint.rvs
+    keeps = [
+        (rvs[0],),
+        (rvs[1], rvs[0]),
+        (rvs[2], rvs[3], rvs[1]),
+        (rvs[0],),  # duplicate request is legal
+        rvs,        # full-width marginal
+    ]
+    outs = joint.marginal_batch(list(keeps))
+    assert len(outs) == len(keeps)
+    for keep, got in zip(keeps, outs):
+        ser = joint.marginal(keep)
+        assert got.rvs == ser.rvs and got.cards == ser.cards
+        np.testing.assert_array_equal(got.codes, ser.codes)
+        np.testing.assert_allclose(got.counts, ser.counts)
+
+
+def test_sparse_marginal_batch_validates():
+    db = university_db()
+    joint = joint_contingency_table(db, impl="sparse")
+    assert joint.marginal_batch([]) == []
+    with pytest.raises(KeyError):
+        joint.marginal_batch([("nope",)])
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_stacked_family_tables_match_dense_marginals(impl):
+    db = university_db()
+    joint = joint_contingency_table(db, impl="ref")
+    rvs = joint.rvs
+    cards = dict(zip(rvs, joint.table.shape))
+    flat = np.asarray(joint.table, np.float32).reshape(-1)
+    codes = np.flatnonzero(flat).astype(np.int64)
+    strides = radix_strides([cards[v] for v in rvs])
+    digits = {
+        v: ((codes // s) % cards[v]).astype(np.int32) for v, s in zip(rvs, strides)
+    }
+    fams = [
+        (rvs[0], (rvs[1],)),
+        (rvs[2], ()),
+        (rvs[3], tuple(sorted((rvs[0], rvs[1])))),
+    ]
+    stacked, mask, metas = stacked_family_tables(
+        digits, flat[codes], cards, fams, impl=impl
+    )
+    stacked, mask = np.asarray(stacked), np.asarray(mask)
+    for i, (child, parents) in enumerate(fams):
+        _, p_i, c_i = metas[i]
+        want = np.asarray(
+            joint.marginal(tuple(parents) + (child,)).table
+        ).reshape(p_i, c_i)
+        np.testing.assert_allclose(stacked[i, :p_i, :c_i], want)
+        np.testing.assert_array_equal(mask[i, :c_i], 1.0)
+        np.testing.assert_array_equal(mask[i, c_i:], 0.0)
+        np.testing.assert_array_equal(stacked[i, p_i:, :], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# ScoreManager service
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["precount", "sparse", "ondemand"])
+def test_score_batch_matches_serial_score_family(mode):
+    """Every batched FamilyScore matches the serial scores.score_family row."""
+    from repro.core.scores import score_family
+
+    db = university_db()
+    mgr = ScoreManager(db, mode=mode, impl="ref" if mode != "sparse" else "auto")
+    ser = CountCache(db, mode=mode, impl="ref" if mode != "sparse" else "auto")
+    fams = [
+        (UNIV_RVS[1], (UNIV_RVS[0],)),
+        (UNIV_RVS[0], ()),
+        (UNIV_RVS[3], (UNIV_RVS[2],)),
+        ("salary(prof0,student0)", ("RA(prof0,student0)",)),
+    ]
+    got = mgr.score_batch(fams, alpha=0.0)
+    for (child, parents), fs in zip(fams, got):
+        want = score_family(ser, child, tuple(sorted(parents)), 0.0, impl="ref")
+        assert fs.child == child
+        assert fs.n_params == want.n_params
+        np.testing.assert_allclose(fs.loglik, want.loglik, rtol=1e-5)
+
+
+def test_score_batch_memo_and_order():
+    db = university_db()
+    mgr = ScoreManager(db, mode="precount", impl="ref")
+    f1 = (UNIV_RVS[1], (UNIV_RVS[0],))
+    f2 = (UNIV_RVS[0], ())
+    out = mgr.score_batch([f1, f2, f1], alpha=0.0)
+    assert out[0] is out[2] and out[0].child == f1[0] and out[1].child == f2[0]
+    assert (mgr.n_score_batches, mgr.n_scored_families) == (1, 2)
+    # parents order canonicalized: permuted request is a memo hit
+    mgr.score_batch([(UNIV_RVS[1], (UNIV_RVS[0],))], alpha=0.0)
+    assert (mgr.n_score_batches, mgr.n_scored_families) == (1, 2)
+    # different alpha is a different score row
+    mgr.score_batch([f1], alpha=0.5)
+    assert (mgr.n_score_batches, mgr.n_scored_families) == (2, 3)
+
+
+def test_score_manager_device_resident_matches_host():
+    db = university_db()
+    host = ScoreManager(db, mode="precount", impl="ref")
+    dev = ScoreManager(db, mode="precount", impl="ref", device_resident=True)
+    fams = [(UNIV_RVS[1], (UNIV_RVS[0],)), (UNIV_RVS[2], (UNIV_RVS[3],))]
+    for a, b in zip(host.score_batch(fams), dev.score_batch(fams)):
+        np.testing.assert_allclose(a.loglik, b.loglik, rtol=1e-6)
+        assert a.n_params == b.n_params
+
+
+def test_score_manager_still_serves_cts():
+    """ScoreManager keeps the CountCache contract (learn_parameters path)."""
+    db = university_db()
+    mgr = ScoreManager(db, mode="precount", impl="ref")
+    cache = CountCache(db, mode="precount", impl="ref")
+    fam = (UNIV_RVS[0], UNIV_RVS[1])
+    np.testing.assert_allclose(
+        np.asarray(mgr(fam).table), np.asarray(cache(fam).table)
+    )
+
+
+def test_score_batch_groups_and_chunks_under_cell_budget():
+    """Mixed-shape batches split by bucketed family shape + cell budget.
+
+    One stack must never be padded to a single worst family's shape times
+    the whole batch; with a tiny budget the batch falls back to many small
+    launches and every score still matches the serial row.
+    """
+    from repro.core.counts import set_dense_cell_budget
+    from repro.core.scores import score_family
+
+    db = university_db()
+    mgr = ScoreManager(db, mode="precount", impl="ref")
+    ser = CountCache(db, mode="precount", impl="ref")
+    fams = [
+        (UNIV_RVS[1], (UNIV_RVS[0],)),
+        (UNIV_RVS[0], ()),
+        (UNIV_RVS[2], ()),
+        (UNIV_RVS[3], (UNIV_RVS[2], UNIV_RVS[0])),  # widest family
+    ]
+    old = set_dense_cell_budget(8)  # force one launch per family
+    try:
+        groups = mgr._shape_groups([(c, tuple(sorted(p))) for c, p in fams])
+        assert len(groups) >= 3  # shape groups split, wide family isolated
+        got = mgr.score_batch(fams)
+    finally:
+        set_dense_cell_budget(old)
+    for (child, parents), fs in zip(fams, got):
+        want = score_family(ser, child, tuple(sorted(parents)), 0.0, impl="ref")
+        np.testing.assert_allclose(fs.loglik, want.loglik, rtol=1e-5)
+        assert fs.n_params == want.n_params
+
+
+# ---------------------------------------------------------------------------
+# Search layer: batched-vs-serial equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "mode,impl",
+    [("precount", "ref"), ("precount", "pallas"), ("sparse", "auto")],
+)
+def test_hill_climb_batched_equals_serial(mode, impl):
+    """Identical edge set and total score: batched vs per-candidate scoring."""
+    db = university_db()
+    ser = CountCache(db, mode=mode, impl=impl if mode != "sparse" else "auto")
+    mgr = ScoreManager(db, mode=mode, impl=impl if mode != "sparse" else "auto")
+    kw = dict(score="aic", max_parents=2, impl=impl)
+    r_ser = hill_climb(UNIV_RVS, ser, **kw)
+    r_bat = hill_climb(UNIV_RVS, mgr, **kw)
+    assert sorted(r_ser.bn.edges()) == sorted(r_bat.bn.edges())
+    np.testing.assert_allclose(r_bat.score, r_ser.score, rtol=1e-5)
+    assert r_bat.n_sweeps == r_ser.n_sweeps
+    assert mgr.n_score_batches <= r_bat.n_sweeps + 1  # one pass per sweep + init
+
+
+@pytest.mark.parametrize(
+    "mode,impl",
+    [("precount", "ref"), ("precount", "pallas"), ("sparse", "auto")],
+)
+def test_learn_and_join_batched_equals_serial(mode, impl):
+    db = university_db()
+    ser = CountCache(db, mode=mode, impl=impl if mode != "sparse" else "auto")
+    mgr = ScoreManager(db, mode=mode, impl=impl if mode != "sparse" else "auto")
+    kw = dict(score="aic", max_parents=2, max_chain=1, impl=impl)
+    a = learn_and_join(db, ser, **kw)
+    b = learn_and_join(db, mgr, **kw)
+    assert sorted(a.bn.edges()) == sorted(b.bn.edges())
+    # cross-node score memo: the batched run never re-scores a family
+    assert b.n_candidates_scored <= a.n_candidates_scored
+
+
+def test_batched_path_uses_fewer_kernel_launches():
+    """The acceptance criterion: >= 3x fewer device launches per search."""
+    db = university_db()
+    ser = CountCache(db, mode="precount", impl="ref")
+    mgr = ScoreManager(db, mode="precount", impl="ref")
+    ops.reset_launch_counts()
+    hill_climb(UNIV_RVS, ser, score="aic", impl="ref")
+    serial_launches = ops.total_launches()
+    ops.reset_launch_counts()
+    hill_climb(UNIV_RVS, mgr, score="aic", impl="ref")
+    batched_launches = ops.total_launches()
+    assert batched_launches * 3 <= serial_launches, (
+        serial_launches, batched_launches,
+    )
+
+
+def test_hill_climb_batched_random_db():
+    """Batched == serial per backend on a random schema (incl. rel attrs)."""
+    from repro.core.schema import KIND_ENTITY_ATTR
+
+    db = random_db(7)
+    rvs = tuple(
+        v.vid for v in db.catalog.par_rvs if v.kind == KIND_ENTITY_ATTR
+    )
+    for mode in ("precount", "sparse"):
+        impl = "ref" if mode == "precount" else "auto"
+        ser = hill_climb(
+            rvs, CountCache(db, mode=mode, impl=impl),
+            score="aic", max_parents=2, impl=impl,
+        )
+        bat = hill_climb(
+            rvs, ScoreManager(db, mode=mode, impl=impl),
+            score="aic", max_parents=2, impl=impl,
+        )
+        assert sorted(ser.bn.edges()) == sorted(bat.bn.edges()), mode
+        np.testing.assert_allclose(bat.score, ser.score, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# BIC fail-fast (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_bic_without_groundings_fails_fast():
+    db = university_db()
+    mgr = ScoreManager(db, mode="precount", impl="ref")
+    with pytest.raises(ValueError, match="n_groundings"):
+        hill_climb(UNIV_RVS, mgr, score="bic")
+    with pytest.raises(ValueError, match="score"):
+        hill_climb(UNIV_RVS, mgr, score="bogus")
+
+
+def test_learn_and_join_bic_end_to_end():
+    """learn_and_join supplies n_groundings itself, so BIC just works."""
+    db = university_db()
+    mgr = ScoreManager(db, mode="precount", impl="ref")
+    res = learn_and_join(db, mgr, score="bic", max_parents=2, max_chain=1, impl="ref")
+    assert res.bn.is_acyclic()
+    assert res.bn.has_edge("RA(prof0,student0)", "salary(prof0,student0)")

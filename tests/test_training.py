@@ -2,7 +2,6 @@
 bf16 round-trip, fault-tolerant driver, gradient compression properties,
 grad-accumulation equivalence, data-pipeline determinism."""
 
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import glob
 import json
-import sys
 from pathlib import Path
 
 DRYRUN = Path("results/dryrun")
