@@ -9,7 +9,13 @@ data.  The sweep scales a chain schema until the dense joint would need
 
 CSV rows:
     sparse/<config>/dense  — dense build (or `oom` when over budget)
-    sparse/<config>/sparse — sparse build, with #SS and the dense:SS ratio
+    sparse/<config>/sparse — sparse build, with #SS, the dense:SS ratio, and
+                             the kernel-launch count of the build
+    sparse/<config>/device_marginal_batch — batched GROUP BY of every
+                             single-RV marginal on the device-resident COO
+                             joint: launch count and accounted host<->device
+                             transfer bytes (the device path ships the joint
+                             once and pulls only split bounds back)
 """
 
 from __future__ import annotations
@@ -21,6 +27,7 @@ import numpy as np
 from repro.core.counts import dense_cells_of, joint_contingency_table
 from repro.core.database import from_labels
 from repro.core.schema import make_schema
+from repro.kernels import ops
 
 from .common import emit, timed
 
@@ -83,16 +90,38 @@ def run(configs=None) -> list[dict]:
             emit(f"sparse/{name}/dense", 0.0, f"oom;cells={cells:.3g}")
             dsecs = math.inf
 
+        ops.reset_launch_counts()
         ct, ssecs = timed(joint_contingency_table, db, impl="sparse")
+        build_launches = ops.total_launches()
         nss = ct.n_nonzero()
         emit(
             f"sparse/{name}/sparse",
             ssecs,
-            f"SS={nss};cells={cells:.3g};ratio={cells / max(nss, 1):.3g}",
+            f"SS={nss};cells={cells:.3g};ratio={cells / max(nss, 1):.3g};"
+            f"launches={build_launches}",
+        )
+
+        # device-resident COO: ship the joint once, batch every single-RV
+        # marginal through ONE fused device sort (no host round-trip)
+        ops.reset_launch_counts()
+        ops.reset_transfer_counts()
+        dev = ct.to_device()
+        keeps = [(v,) for v in ct.rvs]
+        _, msecs = timed(dev.marginal_batch, keeps)
+        mb_launches = ops.total_launches()
+        transfers = ops.transfer_bytes()
+        emit(
+            f"sparse/{name}/device_marginal_batch", msecs,
+            f"keeps={len(keeps)};launches={mb_launches};"
+            f"h2d={transfers['h2d']};d2h={transfers['d2h']}",
         )
         rows.append(
             {"name": name, "cells": cells, "n_ss": nss,
-             "dense_s": dsecs, "sparse_s": ssecs}
+             "dense_s": dsecs, "sparse_s": ssecs,
+             "build_launches": build_launches,
+             "device_marginal_batch_s": msecs,
+             "device_marginal_batch_launches": mb_launches,
+             "h2d_bytes": transfers["h2d"], "d2h_bytes": transfers["d2h"]}
         )
     biggest = max(r["cells"] for r in rows)
     assert biggest > 10**9, "sweep must include a >10^9-dense-cell config"

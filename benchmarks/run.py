@@ -49,6 +49,18 @@ def main(argv: list[str] | None = None) -> None:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {a.json}", file=sys.stderr)
+        # Equivalence gate: batched-vs-serial (dense and device-sparse)
+        # walks must produce the same model.  CI's bench-smoke step fails on
+        # any False flag so a scoring regression cannot land silently.
+        failed = [
+            f"{name}:{key}"
+            for name, metrics in payload["datasets"].items()
+            for key, val in sorted(metrics.items())
+            if key.endswith("_equal") and val is False
+        ]
+        if failed:
+            print(f"# EQUIVALENCE FAILED: {', '.join(failed)}", file=sys.stderr)
+            sys.exit(1)
         return
 
     scale = 0.02 if a.fast else (1.0 if a.paper_scale else None)

@@ -21,7 +21,7 @@ from .counts import (
     set_dense_cell_budget,
 )
 from .cpt import FactorTable, learn_parameters, mle_factor
-from .sparse_counts import SparseCT
+from .sparse_counts import DeviceSparseCT, SparseCT, as_host
 from .database import (
     EntityTable,
     RelationalDatabase,
@@ -44,7 +44,8 @@ from .scores import ScoreTable, score_family, score_structure
 from .structure import CountCache, LearnAndJoinResult, hill_climb, learn_and_join
 
 __all__ = [
-    "BayesNet", "CTLike", "ContingencyTable", "DENSE_CELL_BUDGET", "SparseCT",
+    "BayesNet", "CTLike", "ContingencyTable", "DENSE_CELL_BUDGET",
+    "DeviceSparseCT", "SparseCT", "as_host",
     "set_dense_cell_budget", "contingency_table", "ct_conditional",
     "joint_contingency_table", "FactorTable", "learn_parameters", "mle_factor",
     "EntityTable", "RelationalDatabase", "RelationshipTable", "from_labels",

@@ -79,6 +79,18 @@ def set_dense_cell_budget(n_cells: int) -> int:
     return old
 
 
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n.
+
+    Shared by every batched code path that pads a data-dependent dimension
+    (batch size, scatter rows, stacked parent/child extents, sparse code
+    spaces) so jitted launch shapes stabilize across hill-climb sweeps —
+    and so the chunking guards and the padding they protect can never
+    disagree about a bucket boundary.
+    """
+    return 1 << max(0, n - 1).bit_length()
+
+
 @runtime_checkable
 class CTLike(Protocol):
     """What score/structure/prediction layers require of a contingency table.
@@ -197,9 +209,7 @@ def stacked_family_tables(
     """
     if not families:
         raise ValueError("empty family batch")
-
-    def bucket(n: int) -> int:
-        return 1 << max(0, n - 1).bit_length()
+    bucket = pow2_bucket
 
     metas: list[tuple[str, int, int]] = []
     p_max = c_max = 1
@@ -798,6 +808,7 @@ def contingency_table(
     restrict: dict[str, int] | None = None,
     fovar_universe: tuple[str, ...] | None = None,
     dense_cell_budget: int | None = None,
+    device_resident: bool = False,
 ) -> CTLike:
     """Full contingency table for any par-RV set (paper Fig. 3(c)).
 
@@ -814,15 +825,20 @@ def contingency_table(
     forced or ``impl="auto"`` finds the dense cell count above
     ``dense_cell_budget`` (default :data:`DENSE_CELL_BUDGET`), a COO
     :class:`~repro.core.sparse_counts.SparseCT` with identical cells.
+    ``device_resident=True`` moves a sparse result onto the device
+    (:class:`~repro.core.sparse_counts.DeviceSparseCT` — all subsequent CT
+    algebra runs through ``jax.lax.sort``-based device aggregation); dense
+    tables are jax arrays already, so the flag is a no-op for them.
     """
     if _pick_backend(db, rvs, impl, group_fovar, dense_cell_budget) == "sparse":
         from .sparse_counts import sparse_contingency_table
 
-        return sparse_contingency_table(
+        ct = sparse_contingency_table(
             db, rvs,
             group_fovar=group_fovar, restrict=restrict,
             fovar_universe=fovar_universe,
         )
+        return ct.to_device() if device_resident else ct
 
     cat = db.catalog
     want, rel_names, added, attr_rvs, universe_t = mobius_setup(db, rvs, fovar_universe)
@@ -884,7 +900,11 @@ def contingency_table(
 
 
 def joint_contingency_table(
-    db: RelationalDatabase, *, impl: str = "auto", dense_cell_budget: int | None = None
+    db: RelationalDatabase,
+    *,
+    impl: str = "auto",
+    dense_cell_budget: int | None = None,
+    device_resident: bool = False,
 ) -> CTLike:
     """The pre-counting joint CT over *all* par-RVs (paper §VII-B).
 
@@ -898,10 +918,17 @@ def joint_contingency_table(
     its dense cell count exceeds the budget — pre-counting then scales with
     the *realized* sufficient statistics (#SS) instead of the domain cross
     product.  A forced dense ``impl`` keeps the historical hard cap.
+
+    ``device_resident=True`` parks a sparse joint on the device
+    (one h2d copy of the COO columns), after which structure search can
+    marginalize and score it without any host round-trip — the
+    ROADMAP's "device-resident COO" item.
     """
     vids = tuple(v.vid for v in db.catalog.par_rvs)
     if _pick_backend(db, vids, impl, None, dense_cell_budget) == "sparse":
-        return contingency_table(db, vids, impl="sparse")
+        return contingency_table(
+            db, vids, impl="sparse", device_resident=device_resident
+        )
     cells = dense_cells_of(db, vids)
     if cells > 2**28:
         raise MemoryError(

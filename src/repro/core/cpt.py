@@ -66,8 +66,9 @@ def mle_factor(
     Structure-search scoring never calls this on sparse CTs (see
     ``scores.score_family``); only final parameter learning does.
     """
-    from .sparse_counts import SparseCT
+    from .sparse_counts import SparseCT, as_host
 
+    fct = as_host(fct)
     if isinstance(fct, SparseCT):
         from .counts import DENSE_CELL_BUDGET
 

@@ -22,11 +22,21 @@ that design on the tensor stack:
         stack is scored by one ``mle_cpt_batched`` + one
         ``factor_loglik_batched`` launch
         (:func:`~repro.core.scores.stacked_family_scores`);
-      - **sparse joint**: all families are concatenated into a single
-        sort-then-segment-sum code remap
-        (:meth:`~repro.core.sparse_counts.SparseCT.marginal_batch`, one
-        ``ops.sorted_segment_sum`` launch) and scored over realized cells
-        only (float64 host math, bit-identical to the serial sparse path);
+      - **sparse joint, host** (:class:`~repro.core.sparse_counts.SparseCT`):
+        all families are concatenated into a single sort-then-segment-sum
+        code remap (:meth:`~repro.core.sparse_counts.SparseCT.
+        marginal_batch`) and scored over realized cells only (float64 host
+        math, bit-identical to the serial sparse path) — the small-N fast
+        path and the oracle for the device path;
+      - **sparse joint, device** (:class:`~repro.core.sparse_counts.
+        DeviceSparseCT`, via ``device_resident=True``): the joint's decoded
+        digit columns live on device, every family of the batch is
+        re-encoded into a disjoint slot of one concatenated int32 code
+        space, and a single fused ``ops.sparse_family_score`` launch sorts
+        the stream, derives cell/parent-run totals, and contracts each
+        family's ``SUM(count * log cp)`` — replacing the old
+        marginalize -> ``mle_cpt_batched`` -> ``factor_loglik_batched``
+        three-hop with ~1 launch per sweep and no host sort;
       - **on-demand mode** (no joint) degrades gracefully to memoized
         per-family counting.
 
@@ -35,28 +45,34 @@ that design on the tensor stack:
     is context-free and the memo is shared across hill-climb sweeps *and*
     across lattice nodes of a learn-and-join run.
 
-``device_resident=True`` keeps the dense joint's decoded digit columns and
-cell counts on device, so the whole batched remap + scoring pipeline runs as
-a few device launches per sweep with no host round-trip of the joint CT.
+``device_resident=True`` keeps the joint's decoded digit columns and cell
+counts on device — for dense joints the batched remap + scoring pipeline,
+and for sparse joints the fused COO scorer, both run as a couple of device
+launches per sweep with no host round-trip of the joint CT.
 """
 
 from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
+from ..kernels import ops
+from ..kernels.sparse_score import MAX_FAMILIES
 from .counts import (
     CTLike,
     contingency_table,
     joint_contingency_table,
+    pow2_bucket,
     radix_strides,
     stacked_family_tables,
 )
 from .database import RelationalDatabase
 from .scores import FamilyScore, score_family, stacked_family_scores
-from .sparse_counts import SparseCT, sparse_family_stats
+from .sparse_counts import DeviceSparseCT, SparseCT, sparse_family_stats
 
 
 class CountCache:
@@ -77,6 +93,12 @@ class CountCache:
     ``n_materializations`` increments each time a CT is actually *built*
     from the database (the pre-counted joint counts as one; memo hits and
     joint marginals are not materializations).
+
+    ``device_resident=True`` parks a sparse pre-counted joint on the device
+    (:class:`~repro.core.sparse_counts.DeviceSparseCT`): served marginals
+    are then computed by device sort+segment-sum and returned as device
+    tables (host consumers coerce via
+    :func:`~repro.core.sparse_counts.as_host`).
     """
 
     def __init__(
@@ -86,18 +108,22 @@ class CountCache:
         *,
         impl: str = "auto",
         memoize: bool = True,
+        device_resident: bool = False,
     ):
         assert mode in ("precount", "ondemand", "sparse")
         self.db = db
         self.mode = mode
         self.impl = "sparse" if mode == "sparse" else impl
         self.memoize = memoize
+        self.device_resident = bool(device_resident)
         self._memo: dict[tuple[str, ...], CTLike] = {}
         self.n_queries = 0
         self.n_materializations = 0
         self.joint: CTLike | None = None
         if mode in ("precount", "sparse"):
-            self.joint = joint_contingency_table(db, impl=self.impl)
+            self.joint = joint_contingency_table(
+                db, impl=self.impl, device_resident=device_resident
+            )
             self.n_materializations += 1
 
     def __call__(self, rvs: tuple[str, ...]) -> CTLike:
@@ -138,39 +164,77 @@ class ScoreManager(CountCache):
         memoize: bool = True,
         device_resident: bool = False,
     ):
-        super().__init__(db, mode, impl=impl, memoize=memoize)
-        self.device_resident = bool(device_resident)
+        super().__init__(
+            db, mode, impl=impl, memoize=memoize, device_resident=device_resident
+        )
         self._score_memo: dict[tuple, FamilyScore] = {}
         self._cards: dict[str, int] | None = None
         self._joint_rvs: tuple[str, ...] | None = None
-        self._cell_codes: np.ndarray | None = None
+        self._cell_codes = None
         self._cell_counts = None
         self._digit_cache: dict[str, object] = {}
+        self._digit_mat = None
         self.n_score_batches = 0
         self.n_scored_families = 0
 
     # -- joint-CT cell cache (counts layer plumbing) -------------------------
 
     def _ensure_cells(self) -> None:
-        """Decode the dense joint's realized cells once (COO view)."""
+        """Expose the joint's realized cells as (codes, counts) columns.
+
+        Dense joints are decoded once (``flatnonzero``); sparse joints — on
+        either side of the PCIe — already *are* this COO view.  With
+        ``device_resident`` the counts column lives on device.
+        """
         if self._cell_counts is not None:
             return
-        flat = np.asarray(self.joint.table, np.float32).reshape(-1)
-        codes = np.flatnonzero(flat).astype(np.int64)
-        counts = flat[codes]
-        self._cell_codes = codes
-        self._joint_rvs = self.joint.rvs
-        self._cards = dict(zip(self.joint.rvs, self.joint.table.shape))
-        self._cell_counts = jnp.asarray(counts) if self.device_resident else counts
+        joint = self.joint
+        if isinstance(joint, (SparseCT, DeviceSparseCT)):
+            self._cell_codes = joint.codes
+            self._cards = dict(zip(joint.rvs, joint.cards))
+            counts = joint.counts
+        else:
+            flat = np.asarray(joint.table, np.float32).reshape(-1)
+            self._cell_codes = np.flatnonzero(flat).astype(np.int64)
+            self._cards = dict(zip(joint.rvs, joint.table.shape))
+            counts = flat[self._cell_codes]
+        self._joint_rvs = joint.rvs
+        if self.device_resident and isinstance(counts, np.ndarray):
+            counts = ops.to_device(counts)
+        self._cell_counts = counts
 
     def _digit(self, rv: str):
         """Cached decoded value column of one par-RV over the joint's cells."""
         if rv not in self._digit_cache:
             cards = [self._cards[v] for v in self._joint_rvs]
             stride = radix_strides(cards)[self._joint_rvs.index(rv)]
-            d = ((self._cell_codes // stride) % self._cards[rv]).astype(np.int32)
-            self._digit_cache[rv] = jnp.asarray(d) if self.device_resident else d
+            codes = self._cell_codes
+            if isinstance(codes, jax.Array):
+                # int64 composite codes decode under a local x64 scope; the
+                # digit column itself always fits int32
+                with enable_x64():
+                    d = ((codes // stride) % self._cards[rv]).astype(jnp.int32)
+            else:
+                d = ((codes // stride) % self._cards[rv]).astype(np.int32)
+                if self.device_resident:
+                    d = ops.to_device(d)
+            self._digit_cache[rv] = d
         return self._digit_cache[rv]
+
+    def _digit_matrix(self):
+        """All joint par-RVs' digit columns as one cached (R, nnz) matrix.
+
+        Stacked once for the joint's lifetime (the columns are immutable),
+        so the per-chunk family re-encode is pure row gathers — no O(R x
+        nnz) restack per sweep.  Row ``i`` is ``self._joint_rvs[i]``.
+        """
+        if self._digit_mat is None:
+            self._digit_mat = jnp.stack([self._digit(v) for v in self._joint_rvs])
+            if isinstance(self._cell_codes, jax.Array):
+                # device-sparse scoring reads only the matrix; don't keep a
+                # second full copy of every column alive in the cache
+                self._digit_cache.clear()
+        return self._digit_mat
 
     # -- public scoring API --------------------------------------------------
 
@@ -207,6 +271,10 @@ class ScoreManager(CountCache):
                 for child, parents in todo:
                     fs = score_family(self, child, parents, alpha, impl=impl)
                     self._score_memo[(child, parents, float(alpha))] = fs
+            elif isinstance(self.joint, DeviceSparseCT):
+                # the fused device path: no marginal CTs are materialized —
+                # one sparse_family_score launch per (chunked) batch
+                self._score_sparse_device(todo, alpha, impl)
             elif isinstance(self.joint, SparseCT):
                 keeps = [parents + (child,) for child, parents in todo]
                 fcts = self.joint.marginal_batch(keeps)
@@ -232,6 +300,136 @@ class ScoreManager(CountCache):
 
         return [self._score_memo[key + (float(alpha),)] for key in canon]
 
+    # -- fused device-resident sparse scoring --------------------------------
+
+    #: Row cap per fused sparse launch: the concatenated stream holds
+    #: B_pad x nnz int32 codes + float32 weights, so bound its footprint
+    #: (2**25 rows = 256 MiB for both columns) and chunk batches beyond it.
+    SPARSE_BATCH_ROW_BUDGET: int = 1 << 25
+
+    def _sparse_groups(
+        self, todo: "list[tuple[str, tuple[str, ...]]]"
+    ) -> "list[list[tuple[tuple[str, tuple[str, ...]], int]]]":
+        """Chunk a sparse batch under the int32 code-space and row budgets.
+
+        Family code spaces concatenate into one int32 stream, so a chunk's
+        cumulative ``prod(cards)`` (plus one padding slot per padded family)
+        must stay under 2**31, its family count under the kernel's
+        ``MAX_FAMILIES`` lane cap, and its ``B_pad * nnz`` rows under
+        :data:`SPARSE_BATCH_ROW_BUDGET`.  Typical sweep batches (bounded
+        family domains) stay ONE launch group.  Returns chunks of
+        ``(family, code_space)`` pairs so the scorer never recomputes the
+        spaces this guard was sized with.
+        """
+        self._ensure_cells()
+        nnz = int(self._cell_counts.shape[0])
+        max_rows_fams = max(1, self.SPARSE_BATCH_ROW_BUDGET // max(nnz, 1))
+        space_guard = 2**31 - 2 * MAX_FAMILIES
+
+        out: list[list[tuple[tuple[str, tuple[str, ...]], int]]] = []
+        cur: list[tuple[tuple[str, tuple[str, ...]], int]] = []
+        cur_space = 0
+        for fam in todo:
+            child, parents = fam
+            space = self._cards[child] * math.prod(
+                (self._cards[p] for p in parents), start=1
+            )
+            if space >= space_guard:
+                raise OverflowError(
+                    f"family {fam} needs a {space:.3g}-cell code space; too "
+                    "large for the int32 fused sparse scorer"
+                )
+            full = cur and (
+                len(cur) >= MAX_FAMILIES
+                or pow2_bucket(len(cur) + 1) > max_rows_fams
+                or cur_space + space + pow2_bucket(len(cur) + 1) > space_guard
+            )
+            if full:
+                out.append(cur)
+                cur, cur_space = [], 0
+            cur.append((fam, space))
+            cur_space += space
+        if cur:
+            out.append(cur)
+        return out
+
+    def _score_sparse_device(
+        self, todo: "list[tuple[str, tuple[str, ...]]]", alpha: float, impl: str
+    ) -> None:
+        """Score a batch against a device-resident sparse joint, fused.
+
+        Every family is re-encoded (from the cached device digit columns)
+        into a disjoint slot of one concatenated int32 code space — child as
+        the minor radix digit — and the whole stream goes through ONE
+        ``ops.sparse_family_score`` launch per chunk: device sort, cell and
+        parent-run totals, and the masked ``n * log cp`` contraction, with
+        nothing but the ``(B,)`` log-likelihood row returning to host.
+        The re-encode itself is a handful of stacked gather/multiply-add
+        dispatches over an ``(R, nnz)`` digit matrix — O(max arity), not
+        O(batch x arity).  Free-parameter counts are static family metadata
+        (full parent config space x (child cardinality - 1)), host-side.
+        """
+        self._ensure_cells()
+        nnz = int(self._cell_counts.shape[0])
+        kimpl = ops.kernel_impl(impl)
+
+        for group in self._sparse_groups(todo):
+            fams = [fam for fam, _ in group]
+            b = len(fams)
+            b_pad = pow2_bucket(b)
+            # padding families: 1 empty cell each
+            spaces = [space for _, space in group] + [1] * (b_pad - b)
+            ccards = [self._cards[c] for c, _ in fams] + [1] * (b_pad - b)
+            bounds = np.zeros(b_pad + 1, np.int64)
+            bounds[1:] = np.cumsum(spaces)
+
+            if nnz == 0:
+                lls = np.zeros(b_pad, np.float32)
+            else:
+                # slot tables: family i's radix digit s comes from digit row
+                # sel[i, s] with stride strides[i, s] (0-stride no-op slots
+                # pad short families and the empty padding families)
+                row_of = {v: r for r, v in enumerate(self._joint_rvs)}
+                n_slots = max(len(ps) + 1 for _, ps in fams)
+                sel = np.zeros((b_pad, n_slots), np.int64)
+                strides = np.zeros((b_pad, n_slots), np.int32)
+                for i, (child, parents) in enumerate(fams):
+                    cards = [self._cards[p] for p in parents] + [self._cards[child]]
+                    for s, (v, stride) in enumerate(
+                        zip(parents + (child,), radix_strides(cards))
+                    ):
+                        sel[i, s] = row_of[v]
+                        strides[i, s] = stride
+                digit_mat = self._digit_matrix()
+                codes = jnp.broadcast_to(
+                    ops.to_device(bounds[:-1].astype(np.int32))[:, None],
+                    (b_pad, nnz),
+                )
+                for s in range(n_slots):
+                    codes = codes + (
+                        digit_mat[ops.to_device(sel[:, s])]
+                        * ops.to_device(strides[:, s])[:, None]
+                    )
+                weights = jnp.tile(self._cell_counts, b)
+                if b_pad > b:
+                    weights = jnp.concatenate(
+                        [weights, jnp.zeros(nnz * (b_pad - b), jnp.float32)]
+                    )
+                lls = ops.to_host(
+                    ops.sparse_family_score_batched(
+                        codes.reshape(-1), weights,
+                        ops.to_device(bounds.astype(np.int32)),
+                        ops.to_device(np.asarray(ccards, np.int32)),
+                        alpha, impl=kimpl,
+                    )
+                )
+            for i, (child, parents) in enumerate(fams):
+                c_card = self._cards[child]
+                n_params = (spaces[i] // c_card) * (c_card - 1)
+                self._score_memo[(child, parents, float(alpha))] = FamilyScore(
+                    child, float(lls[i]), n_params
+                )
+
     def _shape_groups(
         self, todo: "list[tuple[str, tuple[str, ...]]]"
     ) -> "list[list[tuple[str, tuple[str, ...]]]]":
@@ -250,9 +448,7 @@ class ScoreManager(CountCache):
         self._ensure_cells()
         # read at call time so set_dense_cell_budget() is honored
         from .counts import DENSE_CELL_BUDGET
-
-        def bucket(n: int) -> int:
-            return 1 << max(0, n - 1).bit_length()
+        bucket = pow2_bucket
 
         dims = {
             fam: (

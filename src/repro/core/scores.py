@@ -24,7 +24,7 @@ from ..kernels import ops
 from .bn import BayesNet
 from .counts import CTLike
 from .cpt import FactorTable, mle_factor
-from .sparse_counts import SparseCT, sparse_factor_loglik, sparse_family_stats
+from .sparse_counts import SparseCT, as_host, sparse_factor_loglik, sparse_family_stats
 
 
 @dataclass(frozen=True)
@@ -67,6 +67,7 @@ def family_loglik(
     fct: CTLike, factor: FactorTable, *, impl: str = "auto"
 ) -> float:
     """sum(count * log cp) for one family (the §V-C SQL query)."""
+    fct = as_host(fct)
     if isinstance(fct, SparseCT):
         return sparse_factor_loglik(fct, factor.rvs, factor.table)
     ct = fct.transpose(factor.rvs)
@@ -87,7 +88,7 @@ def score_family(
     table is built, so scoring scales with #SS rather than the domain cross
     product.
     """
-    fct = counts_of(tuple(parents) + (child,))
+    fct = as_host(counts_of(tuple(parents) + (child,)))
     if isinstance(fct, SparseCT):
         ll, n_params = sparse_family_stats(fct, child, tuple(parents), alpha)
         return FamilyScore(child, ll, n_params)

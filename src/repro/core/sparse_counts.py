@@ -28,6 +28,23 @@ product.  This is what unlocks schemas whose dense joint CT would need
 Dispatch: ``contingency_table(..., impl="sparse")`` forces this backend;
 ``impl="auto"`` switches to it when the dense cell count exceeds
 :data:`~repro.core.counts.DENSE_CELL_BUDGET`.
+
+Two residency twins implement the representation:
+
+  * :class:`SparseCT` — host numpy arrays.  The small-N fast path (no
+    dispatch overhead) and the semantic oracle every device result is
+    validated against.
+  * :class:`DeviceSparseCT` — the same COO columns as ``jax.Array``s.  All
+    CT algebra (re-encode, marginal, batched marginal, transpose) runs on
+    device through ``jax.lax.sort``-based aggregation
+    (``kernels.ops.coo_aggregate``), and batched family scoring feeds the
+    fused ``kernels.ops.sparse_family_score`` kernel — the structure-search
+    hot loop never round-trips the COO stream to host.  int64 composite
+    codes run under a local ``jax.experimental.enable_x64`` scope (the
+    global default stays 32-bit).
+
+``contingency_table(..., device_resident=True)`` / ``SparseCT.to_device()``
+move a built table across; :func:`as_host` coerces back.
 """
 
 from __future__ import annotations
@@ -35,8 +52,10 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from ..kernels import ops
 from .counts import (
@@ -58,28 +77,60 @@ _MAX_CODE_SPACE = 1 << 62
 # via the kernels layer; below it, host numpy wins on dispatch overhead.
 _DEVICE_AGG_MIN_ROWS = 1 << 17
 
+# Above this many concatenated rows a host marginal_batch ships the whole
+# re-encoded stream to the device for ONE fused sort+segment-sum
+# (ops.coo_aggregate) instead of sorting on host with np.argsort.
+_DEVICE_SORT_MIN_ROWS = 1 << 18
+
+#: Accumulation dtype for COO count totals, shared by the host and device
+#: backends.  Counts are integer-valued float32, so float64 accumulation is
+#: exact (any total below 2**53) and therefore independent of both the
+#: reduction order and the backend — host and device ``total()`` are
+#: bit-identical after the final float32 cast.
+TOTAL_ACC_DTYPE = np.float64
+
 
 # ---------------------------------------------------------------------------
 # COO aggregation: sort-then-segment-sum
 # ---------------------------------------------------------------------------
 
 
-def _segment_reduce(sorted_codes: np.ndarray, weights: np.ndarray):
-    """Sum ``weights`` over equal runs of pre-sorted ``sorted_codes``."""
+def _run_boundaries(sorted_codes: np.ndarray):
+    """``(boundary_mask, run_starts)`` of equal-value runs in a sorted vector.
+
+    The shared first step of every host segment reduction below (and of
+    :func:`sparse_family_stats`'s parent-total pass): ``boundary[i]`` marks
+    the first element of each run, ``run_starts`` its positions.
+    """
     boundary = np.empty(sorted_codes.size, bool)
     boundary[0] = True
     np.not_equal(sorted_codes[1:], sorted_codes[:-1], out=boundary[1:])
-    starts = np.flatnonzero(boundary)
+    return boundary, np.flatnonzero(boundary)
+
+
+def _segment_reduce(sorted_codes: np.ndarray, weights: np.ndarray):
+    """Sum ``weights`` over equal runs of pre-sorted ``sorted_codes``.
+
+    Accumulates in :data:`TOTAL_ACC_DTYPE` (float64 — exact for
+    integer-valued counts) and stores the correctly-rounded float32, so
+    aggregated cells are bit-identical however the reduction is ordered —
+    the contract that keeps host and device aggregation interchangeable.
+    (On a TPU backend, where float64 cannot lower, the device branch keeps
+    float32 accumulation — ``ops.count_acc_dtype`` makes that call.)
+    """
+    boundary, starts = _run_boundaries(sorted_codes)
     uniq = sorted_codes[starts]
     if weights.size >= _DEVICE_AGG_MIN_ROWS:
         seg_ids = np.cumsum(boundary) - 1
-        sums = np.asarray(
-            ops.sorted_segment_sum(
-                jnp.asarray(weights), jnp.asarray(seg_ids, np.int32), int(uniq.size)
+        with enable_x64():
+            sums = np.asarray(
+                ops.sorted_segment_sum(
+                    jnp.asarray(weights, ops.count_acc_dtype()),
+                    jnp.asarray(seg_ids, np.int32), int(uniq.size),
+                )
             )
-        )
     else:
-        sums = np.add.reduceat(weights, starts)
+        sums = np.add.reduceat(weights.astype(TOTAL_ACC_DTYPE), starts)
     return uniq, sums.astype(np.float32, copy=False)
 
 
@@ -105,7 +156,9 @@ def _aggregate_pairs(rows: np.ndarray, codes: np.ndarray, weights: np.ndarray):
     boundary[0] = True
     np.logical_or(rows[1:] != rows[:-1], codes[1:] != codes[:-1], out=boundary[1:])
     starts = np.flatnonzero(boundary)
-    sums = np.add.reduceat(weights, starts).astype(np.float32, copy=False)
+    sums = np.add.reduceat(weights.astype(TOTAL_ACC_DTYPE), starts).astype(
+        np.float32, copy=False
+    )
     keep = sums != 0.0
     return rows[starts][keep], codes[starts][keep], sums[keep]
 
@@ -140,7 +193,8 @@ class SparseCT:
         return math.prod(self.cards) if self.cards else 1
 
     def total(self):
-        return np.float32(self.counts.sum(dtype=np.float64))
+        """Grand total, accumulated in :data:`TOTAL_ACC_DTYPE` -> float32."""
+        return np.float32(self.counts.sum(dtype=TOTAL_ACC_DTYPE))
 
     def n_nonzero(self) -> int:
         """Number of realized sufficient statistics (the paper's #SS)."""
@@ -188,16 +242,19 @@ class SparseCT:
 
         The serial path re-encodes and sorts once *per family*; here all
         requested marginals are concatenated into a single composite code
-        space — family ``i``'s re-encoded codes are offset by the cumulative
-        code-space size of families ``0..i-1`` — so the whole batch is
-        canonicalized by ONE sort and ONE segment reduction (one
-        ``ops.sorted_segment_sum`` launch on device for large runs) instead
-        of one per family.  Per-family results are cell-identical to
-        ``self.marginal(keep)``: disjoint offset ranges make the shared sort
-        equivalent to B independent sorts.
+        space (:func:`plan_marginal_batch`) — family ``i``'s re-encoded
+        codes are offset by the cumulative code-space size of families
+        ``0..i-1`` — so the whole batch is canonicalized by ONE sort and ONE
+        segment reduction instead of one per family.  Small batches sort on
+        host (numpy, no dispatch overhead); past
+        :data:`_DEVICE_SORT_MIN_ROWS` concatenated rows the stream ships to
+        the device for one fused ``ops.coo_aggregate`` launch.  Per-family
+        results are cell-identical either way: disjoint offset ranges make
+        the shared sort equivalent to B independent sorts.
         """
         if not keeps:
             return []
+        offsets, all_cards, total_space = plan_marginal_batch(self, keeps)
         digit_cache: dict[str, np.ndarray] = {}
 
         def digit(rv: str) -> np.ndarray:
@@ -205,34 +262,26 @@ class SparseCT:
                 digit_cache[rv] = self._digits(rv)
             return digit_cache[rv]
 
-        offsets: list[int] = []
-        all_cards: list[tuple[int, ...]] = []
         chunks: list[np.ndarray] = []
-        offset = 0
-        for keep in keeps:
-            missing = [v for v in keep if v not in self.rvs]
-            if missing:
-                raise KeyError(f"par-RVs {missing} not in this CT {self.rvs}")
-            cards = tuple(self.card_of(v) for v in keep)
+        for keep, cards, off in zip(keeps, all_cards, offsets):
             strides = radix_strides(list(cards))
-            codes = np.full(self.codes.shape, offset, np.int64)
+            codes = np.full(self.codes.shape, off, np.int64)
             for v, s in zip(keep, strides):
                 codes += digit(v) * s
             chunks.append(codes)
-            offsets.append(offset)
-            all_cards.append(cards)
-            offset += math.prod(cards, start=1)
-            if offset >= _MAX_CODE_SPACE:
-                raise OverflowError(
-                    f"batched marginal code space {offset:.3g} overflows int64"
-                )
 
         big_codes = np.concatenate(chunks)
         big_counts = np.tile(self.counts, len(keeps))
-        codes, counts = aggregate_codes(big_codes, big_counts)
+        if big_codes.size >= _DEVICE_SORT_MIN_ROWS:
+            u, s = ops.coo_aggregate(big_codes, big_counts)
+            u, s = ops.to_host(u), ops.to_host(s)
+            keep_mask = s != 0.0
+            codes, counts = u[keep_mask], s[keep_mask]
+        else:
+            codes, counts = aggregate_codes(big_codes, big_counts)
 
         out: list[SparseCT] = []
-        bounds = offsets + [offset]
+        bounds = list(offsets) + [total_space]
         for i, keep in enumerate(keeps):
             lo, hi = np.searchsorted(codes, [bounds[i], bounds[i + 1]])
             out.append(
@@ -254,12 +303,231 @@ class SparseCT:
         flat[self.codes] = self.counts
         return ContingencyTable(self.rvs, jnp.asarray(flat.reshape(self.cards)))
 
+    def to_device(self) -> "DeviceSparseCT":
+        """Move this table's COO columns onto the device (one h2d copy)."""
+        return DeviceSparseCT.from_host(self)
+
 
 def sparse_from_dense(ct: ContingencyTable) -> SparseCT:
     """COO view of a dense CT (test utility and cross-check path)."""
     flat = np.asarray(ct.table, np.float32).reshape(-1)
     codes = np.flatnonzero(flat).astype(np.int64)
     return SparseCT(ct.rvs, tuple(ct.table.shape), codes, flat[codes])
+
+
+def plan_marginal_batch(ct, keeps: list[tuple[str, ...]]):
+    """Validate a batched-marginal request and lay out its code space.
+
+    Shared by the host and device backends: returns ``(offsets, all_cards,
+    total_space)`` where family ``i``'s re-encoded codes occupy
+    ``[offsets[i], offsets[i] + prod(all_cards[i]))`` of one concatenated
+    int64 code space, so a single shared sort is equivalent to per-family
+    sorts.  Raises ``KeyError`` for unknown par-RVs and ``OverflowError``
+    past the int64 composite-code headroom.
+    """
+    offsets: list[int] = []
+    all_cards: list[tuple[int, ...]] = []
+    offset = 0
+    for keep in keeps:
+        missing = [v for v in keep if v not in ct.rvs]
+        if missing:
+            raise KeyError(f"par-RVs {missing} not in this CT {ct.rvs}")
+        cards = tuple(ct.card_of(v) for v in keep)
+        offsets.append(offset)
+        all_cards.append(cards)
+        offset += math.prod(cards, start=1)
+        if offset >= _MAX_CODE_SPACE:
+            raise OverflowError(
+                f"batched marginal code space {offset:.3g} overflows int64"
+            )
+    return offsets, all_cards, offset
+
+
+# ---------------------------------------------------------------------------
+# DeviceSparseCT: the COO table as device arrays (ROADMAP "device-resident COO")
+# ---------------------------------------------------------------------------
+
+#: Padding code for fixed-shape device aggregation results: sorts after
+#: every valid composite code (< _MAX_CODE_SPACE) and matches the
+#: ``segment_min`` fill value of ``ops.coo_aggregate``.
+_PAD_CODE = np.iinfo(np.int64).max
+
+
+@dataclass(frozen=True)
+class DeviceSparseCT:
+    """Device-resident COO sufficient-statistics table (``CTLike``).
+
+    The ``jax.Array`` twin of :class:`SparseCT`: ``codes`` are int64
+    mixed-radix composite keys (held on device under a local
+    ``enable_x64`` scope), ``counts`` float32 realized counts.  Because jit
+    needs static shapes, device aggregation cannot compact dynamically:
+    ``codes`` are *non-decreasing* with the unique valid cells as an
+    ascending prefix, optionally followed by :data:`_PAD_CODE` entries
+    carrying count 0, and individual cells may hold count 0 after exact
+    cancellation — every consumer treats ``counts == 0`` as absent.
+    ``to_host()`` restores the strict host canonical form.
+
+    All CT algebra runs on device: re-encode is digit arithmetic on the
+    code column, and canonicalization is one fused
+    ``jax.lax.sort``+segment-sum launch (``ops.coo_aggregate``).  The
+    structure-search hot loop additionally bypasses materialized marginals
+    entirely via the fused ``ops.sparse_family_score`` kernel (see
+    ``ScoreManager``).
+    """
+
+    rvs: tuple[str, ...]
+    cards: tuple[int, ...]
+    codes: jax.Array   # int64, non-decreasing, _PAD_CODE tail allowed
+    counts: jax.Array  # float32, zeros allowed (treated as absent)
+
+    def __post_init__(self):
+        assert len(self.rvs) == len(self.cards), (self.rvs, self.cards)
+        assert self.codes.shape == self.counts.shape, (self.codes.shape, self.counts.shape)
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_host(cls, ct: SparseCT) -> "DeviceSparseCT":
+        """One h2d copy of an already-canonical host table."""
+        with enable_x64():
+            return cls(
+                ct.rvs, ct.cards, ops.to_device(ct.codes), ops.to_device(ct.counts)
+            )
+
+    @classmethod
+    def build(cls, rvs, cards, codes, counts) -> "DeviceSparseCT":
+        """Canonicalize raw COO data (unsorted, duplicates legal) on device."""
+        u, s = ops.coo_aggregate(codes, counts)
+        return cls(tuple(rvs), tuple(cards), u, s)
+
+    # -- CTLike protocol -----------------------------------------------------
+
+    @property
+    def n_cells(self) -> int:
+        """Dense cell count this table *would* have (exact Python int)."""
+        return math.prod(self.cards) if self.cards else 1
+
+    def total(self):
+        """Grand total, accumulated in :data:`TOTAL_ACC_DTYPE` -> float32.
+
+        Counts are integer-valued, so the float64 accumulation is exact and
+        the result is bit-identical to the host twin's ``total()`` (on a
+        TPU backend, ``ops.count_acc_dtype`` falls back to float32 — exact
+        up to 2**24-count totals — because float64 cannot lower there).
+        """
+        with enable_x64():
+            t = jnp.sum(self.counts, dtype=ops.count_acc_dtype())
+        return np.float32(float(t))
+
+    def n_nonzero(self) -> int:
+        """Number of realized sufficient statistics (the paper's #SS)."""
+        return int(jnp.sum(self.counts != 0.0))
+
+    def card_of(self, rv: str) -> int:
+        return self.cards[self.rvs.index(rv)]
+
+    def _reencode(self, order: tuple[str, ...]):
+        """Device codes of the kept axes, re-encoded row-major in ``order``.
+
+        Padding / zero-count entries are pinned to :data:`_PAD_CODE` so
+        their (meaningless) digit arithmetic never lands on a real cell.
+        """
+        new_cards = tuple(self.card_of(v) for v in order)
+        strides = radix_strides(list(self.cards))
+        with enable_x64():
+            valid = self.counts != 0.0
+            code = jnp.zeros(self.codes.shape, jnp.int64)
+            for v, s in zip(order, radix_strides(list(new_cards))):
+                i = self.rvs.index(v)
+                digit = (self.codes // strides[i]) % self.cards[i]
+                code = code + digit * jnp.int64(s)
+            code = jnp.where(valid, code, _PAD_CODE)
+        return new_cards, code
+
+    def marginal(self, keep: tuple[str, ...]) -> "DeviceSparseCT":
+        """GROUP BY a subset of the par-RVs — one device sort+segment-sum."""
+        missing = [v for v in keep if v not in self.rvs]
+        if missing:
+            raise KeyError(f"par-RVs {missing} not in this CT {self.rvs}")
+        new_cards, new_codes = self._reencode(tuple(keep))
+        return DeviceSparseCT.build(tuple(keep), new_cards, new_codes, self.counts)
+
+    def transpose(self, order: tuple[str, ...]) -> "DeviceSparseCT":
+        if tuple(order) == self.rvs:
+            return self
+        if sorted(order) != sorted(self.rvs):
+            raise ValueError(f"transpose order {order} != axes {self.rvs}")
+        new_cards, new_codes = self._reencode(tuple(order))
+        # permutation is a bijection on valid codes: the aggregation step of
+        # build() only merges the zero-count padding entries
+        return DeviceSparseCT.build(tuple(order), new_cards, new_codes, self.counts)
+
+    def marginal_batch(self, keeps: list[tuple[str, ...]]) -> list["DeviceSparseCT"]:
+        """Batched GROUP BY, device end-to-end (no host sort).
+
+        Same concatenated-code-space construction as the host twin
+        (:func:`plan_marginal_batch`), canonicalized by ONE
+        ``ops.coo_aggregate`` launch; the only host round-trip is the B+1
+        split bounds (a few dozen bytes).
+        """
+        if not keeps:
+            return []
+        offsets, all_cards, total_space = plan_marginal_batch(self, keeps)
+        strides_self = radix_strides(list(self.cards))
+        with enable_x64():
+            valid = self.counts != 0.0
+            digit_cache: dict[str, jax.Array] = {}
+
+            def digit(rv: str) -> jax.Array:
+                if rv not in digit_cache:
+                    i = self.rvs.index(rv)
+                    digit_cache[rv] = (self.codes // strides_self[i]) % self.cards[i]
+                return digit_cache[rv]
+
+            chunks = []
+            for keep, cards, off in zip(keeps, all_cards, offsets):
+                code = jnp.full(self.codes.shape, off, jnp.int64)
+                for v, s in zip(keep, radix_strides(list(cards))):
+                    code = code + digit(v) * jnp.int64(s)
+                chunks.append(jnp.where(valid, code, _PAD_CODE))
+            big_codes = jnp.concatenate(chunks)
+            big_counts = jnp.tile(self.counts, len(keeps))
+        codes, counts = ops.coo_aggregate(big_codes, big_counts)
+        with enable_x64():
+            bounds_dev = jnp.searchsorted(
+                codes, jnp.asarray(list(offsets) + [total_space], dtype=jnp.int64)
+            )
+        bounds = [int(b) for b in ops.to_host(bounds_dev)]
+        out: list[DeviceSparseCT] = []
+        for i, keep in enumerate(keeps):
+            lo, hi = bounds[i], bounds[i + 1]
+            with enable_x64():
+                fam_codes = codes[lo:hi] - jnp.int64(offsets[i])
+            out.append(
+                DeviceSparseCT(tuple(keep), all_cards[i], fam_codes, counts[lo:hi])
+            )
+        return out
+
+    # -- residency -----------------------------------------------------------
+
+    def to_host(self) -> SparseCT:
+        """One d2h copy, compacted back to the strict host canonical form."""
+        codes = ops.to_host(self.codes).astype(np.int64, copy=False)
+        counts = ops.to_host(self.counts).astype(np.float32, copy=False)
+        keep = counts != 0.0
+        return SparseCT(self.rvs, self.cards, codes[keep], counts[keep])
+
+    def to_dense(self, *, budget: int | None = None) -> ContingencyTable:
+        return self.to_host().to_dense(budget=budget)
+
+
+def as_host(ct):
+    """Coerce a :class:`DeviceSparseCT` to its host twin (else pass through).
+
+    The seam for host-side consumers (dense factor tables, per-cell numpy
+    scoring): exactly one d2h copy, already compacted.
+    """
+    return ct.to_host() if isinstance(ct, DeviceSparseCT) else ct
 
 
 # ---------------------------------------------------------------------------
@@ -588,6 +856,12 @@ def sparse_family_stats(
     to densify-then-``mle_cpt``-then-``factor_loglik``: unrealized cells
     contribute exactly 0 under the 0·log0 := 0 convention, and dense rows
     never realized get probabilities that multiply only zero counts.
+
+    Precision contract (shared with the device oracle path of
+    ``kernels.ops.sparse_family_score``): parent totals, conditional
+    probabilities and the accumulation all run in float64 over the stored
+    float32 cell counts, so host and device-oracle scores agree to float64
+    rounding even for billion-grounding log-likelihoods.
     """
     ct = fct.transpose(tuple(parents) + (child,))
     child_card = ct.cards[-1]
@@ -595,11 +869,13 @@ def sparse_family_stats(
     if ct.codes.size == 0:
         return 0.0, n_parent_configs * (child_card - 1)
     parent_codes = ct.codes // child_card
-    uniq, parent_tot = _segment_reduce(parent_codes, ct.counts)
-    seg = np.searchsorted(uniq, parent_codes)
+    boundary, starts = _run_boundaries(parent_codes)
+    counts64 = ct.counts.astype(TOTAL_ACC_DTYPE)
+    parent_tot = np.add.reduceat(counts64, starts)
+    seg = np.cumsum(boundary) - 1
     denom = parent_tot[seg] + alpha * child_card
-    cp = (ct.counts + alpha) / denom
-    loglik = float(np.sum(ct.counts * np.log(np.maximum(cp, _LOG_TINY)), dtype=np.float64))
+    cp = (counts64 + alpha) / denom
+    loglik = float(np.sum(ct.counts * np.log(np.maximum(cp, _LOG_TINY))))
     return loglik, n_parent_configs * (child_card - 1)
 
 

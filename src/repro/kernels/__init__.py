@@ -9,15 +9,19 @@ pure-jnp oracle (ref.py) and a jitted dispatching wrapper (ops.py).
 
 from .ops import (
     block_predict,
+    coo_aggregate,
     ct_count,
     factor_loglik,
     factor_loglik_batched,
     mle_cpt,
     mle_cpt_batched,
     sorted_segment_sum,
+    sparse_family_score,
+    sparse_family_score_batched,
 )
 
 __all__ = [
-    "block_predict", "ct_count", "factor_loglik", "factor_loglik_batched",
-    "mle_cpt", "mle_cpt_batched", "sorted_segment_sum",
+    "block_predict", "coo_aggregate", "ct_count", "factor_loglik",
+    "factor_loglik_batched", "mle_cpt", "mle_cpt_batched",
+    "sorted_segment_sum", "sparse_family_score", "sparse_family_score_batched",
 ]

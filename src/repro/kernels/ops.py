@@ -7,22 +7,57 @@ Dispatch policy (``impl``):
   * ``"pallas"`` — force the kernel (interpret=True off-TPU).  Used by tests.
   * ``"ref"``    — force the oracle.
 
+The ``REPRO_KERNEL_IMPL`` environment variable overrides what ``"auto"``
+resolves to (CI's kernel-dispatch leg sets ``pallas`` on CPU runners);
+explicit per-call ``impl=`` always wins.
+
 All wrappers take/return plain arrays so they can be called inside pjit /
 shard_map computations; the count manager's distributed path relies on that.
 """
 
 from __future__ import annotations
 
+import functools
+import os
 from collections import Counter
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
 
 from . import ref
 from .block_predict import block_predict_pallas
 from .ct_count import ct_count_pallas
 from .factor_loglik import factor_loglik_batched_pallas, factor_loglik_pallas
 from .mle_cpt import mle_cpt_batched_pallas, mle_cpt_pallas
+from .sparse_score import sparse_family_score_pallas
+
+#: Environment override for the ``impl="auto"`` dispatch policy.  CI sets
+#: ``REPRO_KERNEL_IMPL=pallas`` on a CPU-only leg so every auto call runs the
+#: interpret-mode kernels (dispatch-path coverage without a TPU); ``ref``
+#: forces the oracles.  Explicit per-call ``impl=`` always wins.
+_ENV_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "").strip().lower()
+if _ENV_IMPL not in ("", "pallas", "ref"):
+    # fail loudly: a typo'd value would silently fall back to the oracles
+    # and defeat the CI leg whose whole purpose is kernel-dispatch coverage
+    raise ValueError(
+        f"REPRO_KERNEL_IMPL must be 'pallas' or 'ref' (or unset), "
+        f"got {_ENV_IMPL!r}"
+    )
+
+
+def count_acc_dtype():
+    """Accumulation dtype for exact integer-count reductions.
+
+    float64 whenever 64-bit types are enabled AND the backend can lower
+    them (XLA:TPU cannot — there the paths below keep the float32
+    accumulation they had before the precision contract, which is exact up
+    to 2**24-count totals).  Read at trace time inside jitted programs.
+    """
+    if jax.config.jax_enable_x64 and jax.default_backend() != "tpu":
+        return jnp.float64
+    return jnp.float32
 
 
 # ---------------------------------------------------------------------------
@@ -51,6 +86,42 @@ def total_launches() -> int:
     return sum(_LAUNCHES.values())
 
 
+# ---------------------------------------------------------------------------
+# Host<->device transfer accounting
+# ---------------------------------------------------------------------------
+
+#: Byte tally of host<->device transfers at the count-stack seams (joint CT
+#: residency, digit caches, sparse batch results).  Not every JAX-internal
+#: transfer is visible from Python; this counts the explicit ones the count
+#: manager issues through :func:`to_device` / :func:`to_host`, which is the
+#: number the benchmarks use to show the device-resident sparse path stops
+#: round-tripping the COO stream every sweep.
+_TRANSFERS: Counter = Counter()
+
+
+def reset_transfer_counts() -> None:
+    _TRANSFERS.clear()
+
+
+def transfer_bytes() -> dict[str, int]:
+    """``{"h2d": bytes, "d2h": bytes}`` since the last reset."""
+    return {"h2d": _TRANSFERS["h2d"], "d2h": _TRANSFERS["d2h"]}
+
+
+def to_device(x) -> jax.Array:
+    """``jnp.asarray`` with h2d byte accounting (no-op for device arrays)."""
+    if isinstance(x, np.ndarray):
+        _TRANSFERS["h2d"] += x.nbytes
+    return jnp.asarray(x)
+
+
+def to_host(x) -> np.ndarray:
+    """``np.asarray`` with d2h byte accounting (no-op for host arrays)."""
+    if isinstance(x, jax.Array):
+        _TRANSFERS["d2h"] += x.size * x.dtype.itemsize
+    return np.asarray(x)
+
+
 def kernel_impl(impl: str) -> str:
     """Map a count-manager ``impl`` to a kernel dispatch policy.
 
@@ -64,6 +135,8 @@ def kernel_impl(impl: str) -> str:
 def _use_pallas(impl: str) -> tuple[bool, bool]:
     """-> (use_pallas, interpret)."""
     on_tpu = jax.default_backend() == "tpu"
+    if impl == "auto" and _ENV_IMPL in ("pallas", "ref"):
+        impl = _ENV_IMPL
     if impl == "auto":
         return on_tpu, False
     if impl == "pallas":
@@ -185,3 +258,183 @@ def block_predict(counts: jax.Array, log_cpt: jax.Array, *, impl: str = "auto") 
     if use:
         return block_predict_pallas(counts, log_cpt, interpret=interp)
     return ref.block_predict_ref(counts, log_cpt)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident COO: aggregation + fused family scoring
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _coo_aggregate_jit(codes: jax.Array, weights: jax.Array):
+    """Canonicalize a COO vector on device: sort, unique, segment-sum.
+
+    Fixed-shape twin of the host ``aggregate_codes``: the output keeps the
+    input length, with the unique codes compacted to an ascending prefix and
+    the tail padded by ``segment_min``'s int-max fill (count 0) — dynamic
+    compaction would break jit.  Zero-sum cells are retained (harmless: all
+    COO consumers ignore zero counts).  Accumulates in float64 (exact for
+    integer-valued counts) and stores the correctly-rounded float32 —
+    bit-identical to the host aggregation.
+    """
+    codes, weights = jax.lax.sort_key_val(codes, weights)
+    n = codes.shape[0]
+    boundary = jnp.concatenate(
+        [jnp.ones((1,), bool), codes[1:] != codes[:-1]]
+    )
+    seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1
+    sums = jax.ops.segment_sum(
+        weights.astype(count_acc_dtype()), seg, n, indices_are_sorted=True
+    )
+    uniq = jax.ops.segment_min(codes, seg, n, indices_are_sorted=True)
+    return uniq, sums.astype(jnp.float32)
+
+
+def coo_aggregate(codes: jax.Array, weights: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sort-then-segment-sum COO canonicalization, entirely on device.
+
+    The device-resident analogue of the sparse backend's host
+    ``aggregate_codes``: ONE fused sort + segment reduction instead of a
+    host ``np.argsort`` round-trip.  ``codes`` may be int64 (mixed-radix
+    composite keys run under a local ``enable_x64`` scope) or int32.
+    Returns ``(uniq_codes, sums)`` of the *input length*: ascending unique
+    codes first, int-max / zero-count padding after (see
+    :func:`_coo_aggregate_jit`).
+    """
+    _LAUNCHES["coo_aggregate"] += 1
+    with enable_x64():
+        codes, weights = to_device(codes), to_device(weights)
+        if int(codes.shape[0]) == 0:
+            # empty stream: nothing to canonicalize (the fixed-shape
+            # program below needs n >= 1), mirror the host guard
+            return codes, weights.astype(jnp.float32)
+        return _coo_aggregate_jit(codes, weights)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_fams", "alpha", "use_pallas", "interpret")
+)
+def _fused_sparse_score_jit(
+    codes: jax.Array,
+    weights: jax.Array,
+    bounds: jax.Array,
+    child_cards: jax.Array,
+    num_fams: int,
+    alpha: float,
+    use_pallas: bool,
+    interpret: bool,
+) -> jax.Array:
+    """One fused device program: sort -> run totals -> score kernel/oracle.
+
+    Precision mirrors the host path exactly: cell totals accumulate in
+    float64 and are rounded to float32 (== the host-aggregated family CT
+    cells, bitwise), parent totals are float64 sums over those rounded
+    float32 cells (one per unique cell, == the host's ``reduceat``), and
+    the oracle scores in float64.  The Pallas kernel path receives the
+    same float32 cell/parent totals and is the compensated-float32
+    best-effort (see ``sparse_score``).
+    """
+    codes, weights = jax.lax.sort_key_val(codes, weights)
+    n = codes.shape[0]
+    fam = jnp.clip(
+        jnp.searchsorted(bounds, codes, side="right") - 1, 0, num_fams - 1
+    ).astype(jnp.int32)
+    off = bounds[fam]
+    cc = jnp.maximum(child_cards[fam], 1)
+    # Parent-configuration code: child is the minor radix digit, so the
+    # parent prefix is the family-local code // child_card.  Offsetting by
+    # the family base keeps the stream globally non-decreasing.
+    pcode = off + (codes - off) // cc
+    first = jnp.ones((1,), bool)
+    rep = jnp.concatenate([first, codes[1:] != codes[:-1]])
+    prep = jnp.concatenate([first, pcode[1:] != pcode[:-1]])
+    cseg = jnp.cumsum(rep.astype(jnp.int32)) - 1
+    pseg = jnp.cumsum(prep.astype(jnp.int32)) - 1
+    acc = count_acc_dtype()
+    cell_tot = jax.ops.segment_sum(
+        weights.astype(acc), cseg, n, indices_are_sorted=True
+    )[cseg].astype(jnp.float32)
+    # each unique cell contributes its rounded float32 total exactly once
+    cell_once = jnp.where(rep, cell_tot.astype(acc), 0.0)
+    parent_tot = jax.ops.segment_sum(
+        cell_once, pseg, n, indices_are_sorted=True
+    )[pseg]
+    repf = rep.astype(jnp.float32)
+    if use_pallas:
+        return sparse_family_score_pallas(
+            cell_tot, parent_tot.astype(jnp.float32), cc.astype(jnp.float32),
+            repf, fam, num_fams, alpha, interpret=interpret,
+        )
+    return ref.sparse_family_score_ref(
+        cell_tot, parent_tot, cc.astype(acc), repf, fam, num_fams, alpha
+    )
+
+
+def sparse_family_score_batched(
+    codes: jax.Array,
+    weights: jax.Array,
+    bounds: jax.Array,
+    child_cards: jax.Array,
+    alpha: float = 0.0,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused marginalize+score over a concatenated COO family batch.
+
+    The device-resident sparse twin of the ``ct_count`` ->
+    ``mle_cpt_batched`` -> ``factor_loglik_batched`` three-hop: ``codes``
+    holds every joint cell re-encoded into each family's code space (family
+    ``f``'s codes living in ``[bounds[f], bounds[f+1])``, child minor digit)
+    and ``weights`` the matching cell counts.  One launch sorts the stream,
+    derives cell/parent-run totals by sorted segment sums, and contracts the
+    masked ``n * log cp`` terms per family (Pallas kernel or jnp oracle per
+    ``impl``).  Returns ``(B,)`` float32 log-likelihoods, ``B =
+    len(child_cards)``; free-parameter counts are static family metadata
+    and stay with the caller.
+
+    Duplicate codes are legal (pre-aggregation is NOT required); elements
+    with zero weight contribute nothing, so batch padding is free.
+    ``bounds[-1]`` must stay below 2**31 (int32 code space) — callers chunk.
+
+    Runs under a local ``enable_x64`` scope so the jnp-oracle path can
+    accumulate per-family sums in float64 (returning float64 scores, like
+    the host path's ``np.sum(..., dtype=float64)``); the Pallas kernel path
+    returns Kahan-compensated float32.  Structure search's walk-alignment
+    margin covers both.
+    """
+    _LAUNCHES["sparse_family_score"] += 1
+    use, interp = _use_pallas(impl)
+    num_fams = int(child_cards.shape[0])
+    if int(codes.shape[0]) == 0:
+        # an empty COO stream scores every family to exactly 0.0 (no
+        # realized cells); the fixed-shape program below needs n >= 1
+        return jnp.zeros((num_fams,), jnp.float32)
+    with enable_x64():
+        return _fused_sparse_score_jit(
+            jnp.asarray(codes), jnp.asarray(weights),
+            jnp.asarray(bounds), jnp.asarray(child_cards),
+            num_fams, float(alpha), use, interp,
+        )
+
+
+def sparse_family_score(
+    codes: jax.Array,
+    counts: jax.Array,
+    child_card: int,
+    code_space: int,
+    alpha: float = 0.0,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Single-family fused sparse score (a batch of one).
+
+    ``codes``/``counts`` are one family CT's COO cells (child minor digit,
+    any order, duplicates legal); returns the scalar float32 log-likelihood
+    — the device twin of :func:`repro.core.sparse_counts.
+    sparse_family_stats`'s log-likelihood term.
+    """
+    bounds = jnp.asarray([0, int(code_space)], jnp.int32)
+    cc = jnp.asarray([int(child_card)], jnp.int32)
+    return sparse_family_score_batched(
+        codes, counts, bounds, cc, alpha, impl=impl
+    )[0]

@@ -147,6 +147,45 @@ def factor_loglik_batched_ref(ct: jax.Array, cpt: jax.Array) -> jax.Array:
     return jnp.sum(jnp.where(ct > 0, ct * logp, 0.0), axis=-1)
 
 
+def sparse_family_score_ref(
+    cell_tot: jax.Array,
+    parent_tot: jax.Array,
+    child_card: jax.Array,
+    rep: jax.Array,
+    fam: jax.Array,
+    num_fams: int,
+    alpha: float = 0.0,
+) -> jax.Array:
+    """Fused sparse family scoring over a prepared COO stream (oracle).
+
+    Co-indexed flat arrays, one entry per COO element of a sorted
+    concatenated family batch: ``cell_tot``/``parent_tot`` are the
+    segment-summed totals of the element's cell and parent-configuration
+    run, ``child_card`` its family's child cardinality, ``rep`` 1.0 on the
+    first element of each cell run, ``fam`` the (non-decreasing) family id.
+    Returns per-family ``sum(n * log cp)`` with
+    ``cp = (n + alpha) / (N_parent + alpha * C)`` over realized cells only —
+    the semantic ground truth of the Pallas kernel in
+    :mod:`repro.kernels.sparse_score`.
+
+    The arithmetic dtype follows ``parent_tot``: the ops wrapper passes
+    float64 totals (under its local ``enable_x64`` scope), making the whole
+    ``cp``/log/accumulate chain float64 — the same precision contract as the
+    host path (``sparse_family_stats``), so scores agree to float64 rounding
+    even for billion-grounding log-likelihoods.  float32 inputs degrade
+    gracefully to float32 math (kernel-comparison tests).
+    """
+    acc = parent_tot.dtype
+    ctot = cell_tot.astype(acc)
+    den = parent_tot + alpha * child_card.astype(acc)
+    cp = (ctot + alpha) / jnp.where(den > 0, den, 1.0)
+    term = ctot * jnp.log(jnp.maximum(cp, _LOG_TINY))
+    contrib = jnp.where((rep > 0) & (ctot > 0), term, 0.0)
+    return jax.ops.segment_sum(
+        contrib, fam.astype(jnp.int32), num_fams, indices_are_sorted=True
+    )
+
+
 def block_predict_ref(counts: jax.Array, log_cpt: jax.Array) -> jax.Array:
     """Block test-set scoring: scores[e, y] = sum_c counts[e, c] * log_cpt[c, y].
 

@@ -1,0 +1,148 @@
+"""Pallas TPU kernel for fused sparse family scoring (COO marginalize+score).
+
+The sparse structure-search hot loop used to be a three-hop per sweep:
+``SparseCT.marginal_batch`` (sort + segment-sum), then ``mle_cpt_batched``,
+then ``factor_loglik_batched`` — with the per-family log-likelihood math
+executed on host.  This kernel collapses the scoring side into ONE launch
+over the *sorted concatenated COO stream* of a whole family batch:
+
+    loglik[f] = sum over realized cells of family f of
+                    n_cell * ( log(n_cell + alpha)
+                             - log(N_parent + alpha * C_f) )
+
+which is exactly ``SUM(count * log cp)`` with the MLE/Dirichlet conditional
+probability ``cp = (n + alpha) / (N_parent + alpha * C)`` — the §V-C
+``Scores`` query — evaluated over realized cells only (the 0*log0 := 0
+convention makes unrealized cells contribute exactly nothing).
+
+The kernel consumes the per-element form the ops wrapper prepares inside
+the same jit (sort by composite code, run-boundary flags, cell and
+parent-run totals via sorted segment sums):
+
+    cell_tot   — total count of the element's cell (duplicates pre-summed)
+    parent_tot — total count of the element's parent configuration run
+    child_card — the element's family's child cardinality (float32)
+    rep        — 1.0 on the FIRST element of each cell run (the cell's
+                 designated representative; all duplicates contribute 0)
+    fam        — the element's family index (int32, non-decreasing)
+
+Each grid step loads one ``(1, BM)`` lane-tile of the stream, evaluates the
+masked log term on the VPU, and scatters per-family partial sums through a
+one-hot ``(BM, B_pad)`` MXU contraction into a revolving ``(1, B_pad)``
+accumulator — B scalar reductions per launch, like ``factor_loglik_batched``
+but over ragged COO families instead of padded dense stacks.
+
+Precision: per-cell terms are float32 (the same ``n * log(cp)`` expression
+the host path rounds), and the cross-tile accumulation is
+Kahan-compensated — a second revolving buffer carries the running
+compensation — so the returned float32 scores lose only the final-cast
+ulp, not one ulp per tile.  (The jnp oracle instead accumulates in float64
+under the ops wrapper's ``enable_x64`` scope; both stay inside the
+structure-search walk-alignment margin.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: COO elements per tile.  Kept moderate because each tile materializes a
+#: (BM, B_pad) one-hot family-selector in VMEM for the MXU contraction.
+_BM = 1024
+
+#: Family-lane cap per launch: the one-hot selector is (BM, B_pad) f32, so
+#: B_pad x BM x 4 bytes must stay well under VMEM.  Callers chunk batches.
+MAX_FAMILIES = 1024
+
+_LOG_TINY = 1e-30
+
+
+def _sparse_score_kernel(
+    ctot_ref, ptot_ref, cc_ref, rep_ref, fam_ref, acc_ref, comp_ref, *, alpha: float
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        comp_ref[...] = jnp.zeros_like(comp_ref)
+
+    ctot = ctot_ref[...]  # (1, BM) f32 cell totals
+    ptot = ptot_ref[...]  # (1, BM) f32 parent-run totals
+    cc = cc_ref[...]      # (1, BM) f32 child cardinalities
+    rep = rep_ref[...]    # (1, BM) f32 cell-representative mask
+    fam = fam_ref[...]    # (1, BM) i32 family ids
+
+    den = ptot + alpha * cc
+    cp = (ctot + alpha) / jnp.where(den > 0, den, 1.0)
+    term = ctot * jnp.log(jnp.maximum(cp, _LOG_TINY))
+    contrib = jnp.where((rep > 0) & (ctot > 0), term, 0.0)
+
+    b_pad = acc_ref.shape[1]
+    bm = contrib.shape[1]
+    fam_col = jnp.swapaxes(fam, 0, 1)  # (BM, 1)
+    onehot = (
+        fam_col == jax.lax.broadcasted_iota(jnp.int32, (bm, b_pad), 1)
+    ).astype(jnp.float32)
+    partial = jnp.dot(contrib, onehot, preferred_element_type=jnp.float32)
+
+    # Kahan step: fold this tile's partial into the running (acc, comp) pair
+    acc = acc_ref[...]
+    y = partial - comp_ref[...]
+    t = acc + y
+    comp_ref[...] = (t - acc) - y
+    acc_ref[...] = t
+
+
+@functools.partial(jax.jit, static_argnames=("num_fams", "alpha", "interpret", "bm"))
+def sparse_family_score_pallas(
+    cell_tot: jax.Array,
+    parent_tot: jax.Array,
+    child_card: jax.Array,
+    rep: jax.Array,
+    fam: jax.Array,
+    num_fams: int,
+    alpha: float = 0.0,
+    *,
+    interpret: bool = False,
+    bm: int = _BM,
+) -> jax.Array:
+    """Per-family ``sum(count * log cp)`` over a prepared COO stream.
+
+    All five arrays are flat ``(N,)`` and co-indexed (see module docstring);
+    returns ``(num_fams,)`` float32 log-likelihoods.  Padding elements must
+    carry ``rep == 0`` (or ``cell_tot == 0``) so they contribute nothing;
+    ``fam`` values of padding elements may be any in-range id.
+    """
+    if num_fams > MAX_FAMILIES:
+        raise ValueError(
+            f"sparse_family_score: {num_fams} families > {MAX_FAMILIES}; "
+            "chunk the batch"
+        )
+    n = cell_tot.shape[0]
+    b_pad = -(-num_fams // 128) * 128
+    bm = min(bm, max(128, -(-n // 128) * 128))
+    pad = -n % bm
+
+    def prep(x, dtype):
+        return jnp.pad(x.astype(dtype), (0, pad)).reshape(-1, bm)
+
+    ctot = prep(cell_tot, jnp.float32)
+    ptot = prep(parent_tot, jnp.float32)
+    cc = prep(child_card, jnp.float32)
+    repm = prep(rep, jnp.float32)
+    famm = prep(fam, jnp.int32)
+
+    acc, comp = pl.pallas_call(
+        functools.partial(_sparse_score_kernel, alpha=float(alpha)),
+        grid=(ctot.shape[0],),
+        in_specs=[pl.BlockSpec((1, bm), lambda i: (i, 0))] * 5,
+        out_specs=[pl.BlockSpec((1, b_pad), lambda i: (0, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((1, b_pad), jnp.float32)] * 2,
+        interpret=interpret,
+    )(ctot, ptot, cc, repm, famm)
+    # Neumaier finish: the compensation buffer holds -(lost low-order bits)
+    return (acc - comp)[0, :num_fams]

@@ -1,0 +1,427 @@
+"""Device-resident COO backend (DeviceSparseCT) + the fused
+sparse_family_score kernel: host/device cell equivalence, marginal_batch
+edge cases over both backends, bit-comparable totals, kernel-vs-oracle, and
+structure-search equivalence of the fused device scoring path."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import counts
+from repro.core.counts import joint_contingency_table
+from repro.core.database import university_db
+from repro.core.score_manager import CountCache, ScoreManager
+from repro.core.scores import score_family
+from repro.core.sparse_counts import (
+    DeviceSparseCT,
+    SparseCT,
+    TOTAL_ACC_DTYPE,
+    aggregate_codes,
+    as_host,
+    sparse_family_stats,
+)
+from repro.core.structure import hill_climb, learn_and_join
+from repro.kernels import ops
+
+from .bruteforce import random_db
+
+UNIV_RVS = (
+    "intelligence(student0)",
+    "ranking(student0)",
+    "popularity(prof0)",
+    "teachingability(prof0)",
+)
+
+
+def _univ_joint(device: bool):
+    db = university_db()
+    jt = joint_contingency_table(db, impl="sparse", device_resident=device)
+    assert isinstance(jt, DeviceSparseCT if device else SparseCT)
+    return jt
+
+
+def _assert_same_cells(host_ct: SparseCT, other) -> None:
+    got = as_host(other)
+    assert got.rvs == host_ct.rvs and got.cards == host_ct.cards
+    np.testing.assert_array_equal(got.codes, host_ct.codes)
+    np.testing.assert_allclose(got.counts, host_ct.counts)
+
+
+# ---------------------------------------------------------------------------
+# Residency round-trip + totals
+# ---------------------------------------------------------------------------
+
+
+def test_device_roundtrip_canonical():
+    host = _univ_joint(device=False)
+    dev = host.to_device()
+    back = dev.to_host()
+    np.testing.assert_array_equal(back.codes, host.codes)
+    np.testing.assert_array_equal(back.counts, host.counts)
+    assert back.codes.dtype == np.int64 and back.counts.dtype == np.float32
+    assert dev.n_cells == host.n_cells
+    assert dev.n_nonzero() == host.n_nonzero()
+
+
+def test_total_accumulation_dtype_bit_comparable():
+    """host/device totals are BIT-identical: one shared accumulation dtype.
+
+    Counts are integer-valued float32, so float64 accumulation
+    (TOTAL_ACC_DTYPE) is exact on both backends regardless of reduction
+    order — the documented contract behind the shared dtype.
+    """
+    assert TOTAL_ACC_DTYPE == np.float64
+    for seed in (0, 7):
+        host = joint_contingency_table(random_db(seed), impl="sparse")
+        dev = host.to_device()
+        th, td = host.total(), dev.total()
+        assert th.dtype == np.float32 and td.dtype == np.float32
+        assert th.tobytes() == td.tobytes(), (th, td)
+
+
+# ---------------------------------------------------------------------------
+# Device CT algebra == host CT algebra
+# ---------------------------------------------------------------------------
+
+
+def test_device_marginal_transpose_match_host():
+    host = _univ_joint(device=False)
+    dev = host.to_device()
+    rvs = host.rvs
+    for keep in [(rvs[2],), (rvs[3], rvs[1]), (rvs[4], rvs[0], rvs[2])]:
+        _assert_same_cells(host.marginal(keep), dev.marginal(keep))
+    _assert_same_cells(host.transpose(rvs[::-1]), dev.transpose(rvs[::-1]))
+
+
+def test_device_contingency_table_flag():
+    db = university_db()
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    ct = counts.contingency_table(db, rvs, impl="sparse", device_resident=True)
+    assert isinstance(ct, DeviceSparseCT)
+    # dense backends are jax arrays already: the flag must be a no-op
+    dense = counts.contingency_table(db, rvs[:2], impl="ref", device_resident=True)
+    assert isinstance(dense, counts.ContingencyTable)
+
+
+def test_device_marginal_batch_stays_on_device():
+    dev = _univ_joint(device=True)
+    ops.reset_launch_counts()
+    outs = dev.marginal_batch([(dev.rvs[0],), (dev.rvs[1], dev.rvs[2])])
+    assert all(isinstance(o, DeviceSparseCT) for o in outs)
+    assert ops.launch_counts().get("coo_aggregate") == 1  # ONE fused sort
+    assert ops.launch_counts().get("sorted_segment_sum") is None  # no host agg
+
+
+# ---------------------------------------------------------------------------
+# marginal_batch edge cases, parametrized over host and device backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("device", [False, True], ids=["host", "device"])
+def test_marginal_batch_empty_keeps_list(device):
+    assert _univ_joint(device).marginal_batch([]) == []
+
+
+@pytest.mark.parametrize("device", [False, True], ids=["host", "device"])
+def test_marginal_batch_empty_keep_tuple(device):
+    """keep == () is the grand total: a single scalar cell."""
+    jt = _univ_joint(device)
+    (out,) = jt.marginal_batch([()])
+    got = as_host(out)
+    assert got.rvs == () and got.cards == ()
+    np.testing.assert_array_equal(got.codes, [0])
+    np.testing.assert_allclose(got.counts, [float(jt.total())])
+
+
+@pytest.mark.parametrize("device", [False, True], ids=["host", "device"])
+def test_marginal_batch_keep_all_rvs(device):
+    """The full-width marginal reproduces the joint cell-for-cell."""
+    jt = _univ_joint(device)
+    host = as_host(jt)
+    (out,) = jt.marginal_batch([jt.rvs])
+    _assert_same_cells(host, out)
+
+
+@pytest.mark.parametrize("device", [False, True], ids=["host", "device"])
+def test_marginal_batch_duplicate_keeps_shared_prefix(device):
+    """Duplicate keeps and prefix-sharing keeps stay independent slots."""
+    jt = _univ_joint(device)
+    host = as_host(jt)
+    rvs = jt.rvs
+    keeps = [
+        (rvs[0], rvs[1]),
+        (rvs[0], rvs[1]),          # exact duplicate
+        (rvs[0], rvs[1], rvs[2]),  # shares the (rvs0, rvs1) prefix
+        (rvs[0],),
+    ]
+    outs = jt.marginal_batch(list(keeps))
+    assert len(outs) == len(keeps)
+    for keep, out in zip(keeps, outs):
+        _assert_same_cells(host.marginal(keep), out)
+
+
+@pytest.mark.parametrize("device", [False, True], ids=["host", "device"])
+def test_marginal_batch_single_nonzero_cell(device):
+    """A one-cell table marginalizes to one-cell tables on every keep."""
+    ct = SparseCT(
+        ("a", "b", "c"), (3, 4, 5),
+        np.asarray([2 * 20 + 1 * 5 + 3], np.int64),  # (a=2, b=1, c=3)
+        np.asarray([7.0], np.float32),
+    )
+    jt = ct.to_device() if device else ct
+    outs = jt.marginal_batch([("b",), ("c", "a"), (), ("a", "b", "c")])
+    for keep, digits in zip(
+        [("b",), ("c", "a"), (), ("a", "b", "c")],
+        [(1,), (3, 2), (), (2, 1, 3)],
+    ):
+        got = as_host(outs.pop(0))
+        ser = ct.marginal(keep)
+        _assert_same_cells(ser, got)
+        assert got.n_nonzero() == 1
+        np.testing.assert_allclose(got.counts, [7.0])
+        # the surviving cell is the digit projection of the original cell
+        cards = [ct.card_of(v) for v in keep]
+        code = 0
+        for d, s in zip(digits, counts.radix_strides(cards)):
+            code += d * s
+        np.testing.assert_array_equal(got.codes, [code])
+
+
+@pytest.mark.parametrize("device", [False, True], ids=["host", "device"])
+def test_marginal_batch_unknown_rv_raises(device):
+    with pytest.raises(KeyError):
+        _univ_joint(device).marginal_batch([("nope",)])
+
+
+@pytest.mark.parametrize("device", [False, True], ids=["host", "device"])
+def test_marginal_batch_empty_table(device):
+    """A zero-cell table marginalizes to zero-cell tables on every keep."""
+    empty = SparseCT(
+        ("a", "b"), (2, 3),
+        np.zeros(0, np.int64), np.zeros(0, np.float32),
+    )
+    jt = empty.to_device() if device else empty
+    outs = jt.marginal_batch([("a",), ("b", "a"), ()])
+    for out in outs:
+        got = as_host(out)
+        assert got.n_nonzero() == 0
+    assert float(jt.total()) == 0.0
+    assert as_host(jt.marginal(("b",))).n_nonzero() == 0
+
+
+def test_host_marginal_batch_device_sort_route():
+    """Past the row threshold the host path aggregates via ONE device sort."""
+    from repro.core import sparse_counts
+
+    host = _univ_joint(device=False)
+    old = sparse_counts._DEVICE_SORT_MIN_ROWS
+    sparse_counts._DEVICE_SORT_MIN_ROWS = 1  # force the device route
+    try:
+        ops.reset_launch_counts()
+        outs = host.marginal_batch([(host.rvs[0],), host.rvs])
+        assert ops.launch_counts().get("coo_aggregate") == 1
+    finally:
+        sparse_counts._DEVICE_SORT_MIN_ROWS = old
+    for keep, out in zip([(host.rvs[0],), host.rvs], outs):
+        _assert_same_cells(host.marginal(keep), out)
+
+
+# ---------------------------------------------------------------------------
+# Fused sparse_family_score kernel: oracle + host ground truth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.5])
+def test_sparse_family_score_kernel_vs_oracle(alpha):
+    """Pallas kernel == jnp oracle on a random prepared COO stream."""
+    rng = np.random.default_rng(int(alpha * 10) + 3)
+    n, b = 3000, 5
+    fam = np.sort(rng.integers(0, b, n)).astype(np.int32)
+    ctot = rng.integers(1, 9, n).astype(np.float32)
+    ptot = ctot + rng.integers(0, 20, n).astype(np.float32)
+    cc = rng.integers(2, 7, n).astype(np.float32)
+    rep = (rng.random(n) < 0.3).astype(np.float32)
+    args = [jnp.asarray(x) for x in (ctot, ptot, cc, rep, fam)]
+    from repro.kernels.ref import sparse_family_score_ref
+    from repro.kernels.sparse_score import sparse_family_score_pallas
+
+    want = np.asarray(sparse_family_score_ref(*args, b, alpha))
+    got = np.asarray(sparse_family_score_pallas(*args, b, alpha, interpret=True))
+    assert got.shape == (b,)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("alpha", [0.0, 0.5])
+def test_sparse_family_score_matches_host_stats(impl, alpha):
+    """Fused batched scorer == sparse_family_stats per family (host truth),
+    including duplicate (pre-aggregation) codes and empty families."""
+    rng = np.random.default_rng(17)
+    metas = [(6, 3), (1, 4), (12, 2), (2, 5)]  # (parent_configs, child_card)
+    bounds = np.zeros(len(metas) + 1, np.int64)
+    bounds[1:] = np.cumsum([p * c for p, c in metas])
+    chunks, weights, want = [], [], []
+    for i, (p, c) in enumerate(metas):
+        n = 0 if i == 3 else 60  # family 3 has no realized cells
+        codes = rng.integers(0, p * c, n).astype(np.int64)
+        w = rng.integers(1, 6, n).astype(np.float32)
+        chunks.append(codes + bounds[i])
+        weights.append(w)
+        u, s = aggregate_codes(codes, w)
+        fct = SparseCT(("p", "c"), (p, c), u, s)
+        ll, _ = sparse_family_stats(fct, "c", ("p",), alpha)
+        want.append(ll)
+    codes = np.concatenate(chunks).astype(np.int32)
+    w = np.concatenate(weights)
+    got = np.asarray(
+        ops.sparse_family_score_batched(
+            jnp.asarray(codes), jnp.asarray(w),
+            jnp.asarray(bounds.astype(np.int32)),
+            jnp.asarray([c for _, c in metas], np.int32),
+            alpha, impl=impl,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_sparse_family_score_empty_stream(impl):
+    """An empty COO stream scores every family to exactly 0.0 (no crash)."""
+    got = np.asarray(
+        ops.sparse_family_score_batched(
+            jnp.asarray([], jnp.int32), jnp.asarray([], jnp.float32),
+            jnp.asarray([0, 6, 10], jnp.int32), jnp.asarray([3, 5], jnp.int32),
+            0.5, impl=impl,
+        )
+    )
+    np.testing.assert_array_equal(got, [0.0, 0.0])
+    single = ops.sparse_family_score(
+        jnp.asarray([], jnp.int32), jnp.asarray([], jnp.float32), 3, 12, 0.5,
+        impl=impl,
+    )
+    assert float(single) == 0.0
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_sparse_family_score_single(impl):
+    rng = np.random.default_rng(5)
+    p, c = 8, 3
+    codes = rng.integers(0, p * c, 40).astype(np.int32)
+    w = rng.integers(1, 5, 40).astype(np.float32)
+    u, s = aggregate_codes(codes.astype(np.int64), w)
+    fct = SparseCT(("p", "c"), (p, c), u, s)
+    want, _ = sparse_family_stats(fct, "c", ("p",), 0.25)
+    got = float(
+        ops.sparse_family_score(
+            jnp.asarray(codes), jnp.asarray(w), c, p * c, 0.25, impl=impl
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ScoreManager: fused device scoring == host serial scoring
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.5])
+def test_device_score_batch_matches_serial(alpha):
+    db = university_db()
+    mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    ser = CountCache(db, mode="sparse")
+    fams = [
+        (UNIV_RVS[1], (UNIV_RVS[0],)),
+        (UNIV_RVS[0], ()),
+        (UNIV_RVS[3], (UNIV_RVS[2],)),
+        ("salary(prof0,student0)", ("RA(prof0,student0)",)),
+    ]
+    got = mgr.score_batch(fams, alpha=alpha)
+    for (child, parents), fs in zip(fams, got):
+        want = score_family(ser, child, tuple(sorted(parents)), alpha)
+        assert fs.child == child
+        assert fs.n_params == want.n_params
+        np.testing.assert_allclose(fs.loglik, want.loglik, rtol=1e-5, atol=1e-4)
+
+
+def test_device_score_batch_chunks_match_serial():
+    """Forced chunking (tiny row budget) changes launches, not scores."""
+    db = university_db()
+    mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    ser = CountCache(db, mode="sparse")
+    fams = [
+        (UNIV_RVS[1], (UNIV_RVS[0],)),
+        (UNIV_RVS[0], ()),
+        (UNIV_RVS[2], ()),
+        (UNIV_RVS[3], (UNIV_RVS[2], UNIV_RVS[0])),
+    ]
+    old = mgr.SPARSE_BATCH_ROW_BUDGET
+    mgr.SPARSE_BATCH_ROW_BUDGET = 1  # one family per launch
+    try:
+        groups = mgr._sparse_groups([(c, tuple(sorted(p))) for c, p in fams])
+        assert len(groups) == len(fams)
+        ops.reset_launch_counts()
+        got = mgr.score_batch(fams)
+        assert ops.launch_counts()["sparse_family_score"] == len(fams)
+    finally:
+        mgr.SPARSE_BATCH_ROW_BUDGET = old
+    for (child, parents), fs in zip(fams, got):
+        want = score_family(ser, child, tuple(sorted(parents)), 0.0)
+        np.testing.assert_allclose(fs.loglik, want.loglik, rtol=1e-5, atol=1e-4)
+        assert fs.n_params == want.n_params
+
+
+@pytest.mark.parametrize("impl", ["auto", "pallas"])
+def test_device_hill_climb_equals_serial(impl):
+    db = university_db()
+    ser = CountCache(db, mode="sparse")
+    mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    kw = dict(score="aic", max_parents=2, impl=impl)
+    r_ser = hill_climb(UNIV_RVS, ser, **kw)
+    r_bat = hill_climb(UNIV_RVS, mgr, **kw)
+    assert sorted(r_ser.bn.edges()) == sorted(r_bat.bn.edges())
+    np.testing.assert_allclose(r_bat.score, r_ser.score, rtol=1e-5)
+    assert r_bat.n_sweeps == r_ser.n_sweeps
+
+
+def test_device_learn_and_join_launches_per_sweep():
+    """The acceptance criterion: <= 3 fused launches per sweep, same model."""
+    db = university_db()
+    ser = CountCache(db, mode="sparse")
+    a = learn_and_join(db, ser, score="aic", max_parents=2, max_chain=1)
+    mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    ops.reset_launch_counts()
+    b = learn_and_join(db, mgr, score="aic", max_parents=2, max_chain=1)
+    assert sorted(a.bn.edges()) == sorted(b.bn.edges())
+    assert ops.total_launches() <= 3 * max(b.n_sweeps, 1), (
+        ops.launch_counts(), b.n_sweeps,
+    )
+    # the fused scorer is the ONLY op the sparse device sweep dispatches
+    assert set(ops.launch_counts()) <= {"sparse_family_score", "coo_aggregate"}
+
+
+def test_device_hill_climb_random_db():
+    from repro.core.schema import KIND_ENTITY_ATTR
+
+    db = random_db(7)
+    rvs = tuple(v.vid for v in db.catalog.par_rvs if v.kind == KIND_ENTITY_ATTR)
+    ser = hill_climb(rvs, CountCache(db, mode="sparse"), score="aic", max_parents=2)
+    bat = hill_climb(
+        rvs, ScoreManager(db, mode="sparse", device_resident=True),
+        score="aic", max_parents=2,
+    )
+    assert sorted(ser.bn.edges()) == sorted(bat.bn.edges())
+    np.testing.assert_allclose(bat.score, ser.score, rtol=1e-5)
+
+
+def test_device_manager_still_serves_cts():
+    """Device manager keeps the CountCache contract (learn_parameters path)."""
+    from repro.core.cpt import learn_parameters
+
+    db = university_db()
+    mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    cache = CountCache(db, mode="sparse")
+    fam = (UNIV_RVS[0], UNIV_RVS[1])
+    _assert_same_cells(as_host(cache(fam)), mgr(fam))
+    res = learn_and_join(db, mgr, score="aic", max_parents=2, max_chain=1)
+    factors = learn_parameters(res.bn, mgr, alpha=0.1)
+    assert set(factors) == set(res.bn.rvs)
