@@ -16,6 +16,12 @@ CSV rows:
                              joint: launch count and accounted host<->device
                              transfer bytes (the device path ships the joint
                              once and pulls only split bounds back)
+    sparse/<config>/device_build — the same joint built ON device
+                             (``device_resident=True``): join-tree
+                             contraction + Möbius join as COO code algebra,
+                             with launch count, accounted h2d/d2h bytes
+                             (h2d must be 0 — no bulk COO upload) and the
+                             upload bytes the device build avoids
 """
 
 from __future__ import annotations
@@ -115,13 +121,33 @@ def run(configs=None) -> list[dict]:
             f"keeps={len(keeps)};launches={mb_launches};"
             f"h2d={transfers['h2d']};d2h={transfers['d2h']}",
         )
+        # device-side build: the same joint constructed as COO algebra on
+        # the device — zero host-side COO, zero bulk h2d upload
+        ops.reset_launch_counts()
+        ops.reset_transfer_counts()
+        dct, bsecs = timed(
+            joint_contingency_table, db, impl="sparse", device_resident=True
+        )
+        dev_build_launches = ops.total_launches()
+        btr = ops.transfer_bytes()
+        upload_avoided = ct.codes.nbytes + ct.counts.nbytes
+        emit(
+            f"sparse/{name}/device_build", bsecs,
+            f"SS={dct.n_nonzero()};launches={dev_build_launches};"
+            f"h2d={btr['h2d']};d2h={btr['d2h']};upload_avoided={upload_avoided}",
+        )
         rows.append(
             {"name": name, "cells": cells, "n_ss": nss,
              "dense_s": dsecs, "sparse_s": ssecs,
              "build_launches": build_launches,
              "device_marginal_batch_s": msecs,
              "device_marginal_batch_launches": mb_launches,
-             "h2d_bytes": transfers["h2d"], "d2h_bytes": transfers["d2h"]}
+             "h2d_bytes": transfers["h2d"], "d2h_bytes": transfers["d2h"],
+             "device_build_s": bsecs,
+             "device_build_launches": dev_build_launches,
+             "device_build_h2d_bytes": btr["h2d"],
+             "device_build_d2h_bytes": btr["d2h"],
+             "device_build_upload_avoided_bytes": upload_avoided}
         )
     biggest = max(r["cells"] for r in rows)
     assert biggest > 10**9, "sweep must include a >10^9-dense-cell config"

@@ -115,11 +115,20 @@ def run_batched(
             learn_and_join, db, sp_ser_cache, score="aic", max_parents=2,
             max_chain=max_chain,
         )
-        # transfer tally brackets the manager build (the one-time joint
-        # upload is part of the traffic story); the launch tally starts
-        # after it, so launches/sweep measures scoring cost only
+        # The joint is now BUILT on device (PR 4): bracket the build's own
+        # launches and transfer bytes — h2d must stay ~0 (no bulk COO
+        # upload; the PR 3 route shipped the whole codes+counts stream) and
+        # d2h is a handful of accounted scalar size syncs.  The transfer
+        # tally keeps running through the search so the device leg's total
+        # traffic story (build + scoring) stays visible; the launch tally
+        # restarts after the build so launches/sweep measures scoring only.
         ops.reset_transfer_counts()
-        mgr_sp, _ = timed(ScoreManager, db, mode="sparse", device_resident=True)
+        ops.reset_launch_counts()
+        mgr_sp, sp_build_secs = timed(
+            ScoreManager, db, mode="sparse", device_resident=True
+        )
+        sp_build_launches = ops.total_launches()
+        sp_build_tr = dict(ops.transfer_bytes())
         ops.reset_launch_counts()
         res_sp_dev, sp_dev_secs = timed(
             learn_and_join, db, mgr_sp, score="aic", max_parents=2,
@@ -169,6 +178,10 @@ def run_batched(
             / max(res_sp_dev.n_sweeps, 1),
             "sparse_device_h2d_bytes": sp_transfers["h2d"],
             "sparse_device_d2h_bytes": sp_transfers["d2h"],
+            "sparse_device_build_ms": sp_build_secs * 1e3,
+            "sparse_build_launches": sp_build_launches,
+            "sparse_build_h2d_bytes": sp_build_tr["h2d"],
+            "sparse_build_d2h_bytes": sp_build_tr["d2h"],
             "sparse_n_sweeps": res_sp_dev.n_sweeps,
             "sparse_edges_equal": sparse_edges_equal,
             "sparse_scores_equal": sparse_scores_equal,
@@ -183,6 +196,11 @@ def run_batched(
         emit(f"scoremgr/{name}/serial", ser_secs,
              f"cands_per_s={metrics['cands_per_sec_serial']:.0f}")
         emit(f"scoremgr/{name}/sparse_joint_build", sparse_build, "mode=sparse")
+        emit(
+            f"scoremgr/{name}/sparse_device_build", sp_build_secs,
+            f"launches={sp_build_launches};h2d={sp_build_tr['h2d']};"
+            f"d2h={sp_build_tr['d2h']}",
+        )
         emit(
             f"scoremgr/{name}/sparse_device", sp_dev_secs,
             f"speedup={metrics['sparse_device_speedup']:.2f}x;"

@@ -77,10 +77,16 @@ def sparse_device_demo(db) -> None:
     from repro.kernels import ops
 
     print("\n== Device-resident sparse counting (COO joint on device) ==")
+    ops.reset_launch_counts()
+    ops.reset_transfer_counts()
     mgr = ScoreManager(db, mode="sparse", device_resident=True)
     assert isinstance(mgr.joint, DeviceSparseCT)
+    build_tr = ops.transfer_bytes()
     print(f"  joint: #SS={mgr.joint.n_nonzero()} of {mgr.joint.n_cells} dense cells, "
           f"codes dtype={mgr.joint.codes.dtype} on {list(mgr.joint.codes.devices())[0]}")
+    print(f"  built ON device: {ops.total_launches()} launches, "
+          f"h2d={build_tr['h2d']} B (no COO upload), "
+          f"d2h={build_tr['d2h']} B (scalar size syncs)")
 
     ops.reset_launch_counts()
     ops.reset_transfer_counts()

@@ -28,7 +28,13 @@ Two storage backends implement the same :class:`CTLike` interface:
   * :class:`~repro.core.sparse_counts.SparseCT` — COO over mixed-radix
     composite codes storing only *realized* sufficient statistics (the
     paper's #SS, vastly smaller than the cross product; §IV).  Built by
-    sort-then-segment-sum; ``impl="sparse"`` selects it explicitly.
+    sort-then-segment-sum; ``impl="sparse"`` selects it explicitly.  With
+    ``device_resident=True`` the sparse build itself runs on device
+    (:func:`~repro.core.sparse_counts.device_sparse_contingency_table`):
+    the join-tree contraction and Möbius recursion execute as COO code
+    algebra over ``jax.Array``s and the result is a
+    :class:`~repro.core.sparse_counts.DeviceSparseCT` that never existed
+    on host.
 
 **Auto-switch heuristic:** with ``impl="auto"`` the dense/Pallas path is used
 while the dense cell count (domain cross product, times the group-entity
@@ -825,20 +831,33 @@ def contingency_table(
     forced or ``impl="auto"`` finds the dense cell count above
     ``dense_cell_budget`` (default :data:`DENSE_CELL_BUDGET`), a COO
     :class:`~repro.core.sparse_counts.SparseCT` with identical cells.
-    ``device_resident=True`` moves a sparse result onto the device
-    (:class:`~repro.core.sparse_counts.DeviceSparseCT` — all subsequent CT
-    algebra runs through ``jax.lax.sort``-based device aggregation); dense
-    tables are jax arrays already, so the flag is a no-op for them.
+    ``device_resident=True`` selects the *device-side* sparse build: the
+    whole construction runs as COO code algebra on device and returns a
+    :class:`~repro.core.sparse_counts.DeviceSparseCT` (bit-identical cells,
+    zero host-side COO materialization — all subsequent CT algebra runs
+    through ``jax.lax.sort``-based device aggregation); dense tables are
+    jax arrays already, so the flag is a no-op for them.
     """
     if _pick_backend(db, rvs, impl, group_fovar, dense_cell_budget) == "sparse":
+        if device_resident:
+            # Device-side build: the join-tree contraction and Möbius
+            # recursion run as COO code algebra over jax.Arrays — no host
+            # COO column is ever materialized, so there is no bulk h2d copy
+            # of the result (ROADMAP "device-side builds").
+            from .sparse_counts import device_sparse_contingency_table
+
+            return device_sparse_contingency_table(
+                db, rvs,
+                group_fovar=group_fovar, restrict=restrict,
+                fovar_universe=fovar_universe,
+            )
         from .sparse_counts import sparse_contingency_table
 
-        ct = sparse_contingency_table(
+        return sparse_contingency_table(
             db, rvs,
             group_fovar=group_fovar, restrict=restrict,
             fovar_universe=fovar_universe,
         )
-        return ct.to_device() if device_resident else ct
 
     cat = db.catalog
     want, rel_names, added, attr_rvs, universe_t = mobius_setup(db, rvs, fovar_universe)
@@ -919,10 +938,12 @@ def joint_contingency_table(
     the *realized* sufficient statistics (#SS) instead of the domain cross
     product.  A forced dense ``impl`` keeps the historical hard cap.
 
-    ``device_resident=True`` parks a sparse joint on the device
-    (one h2d copy of the COO columns), after which structure search can
-    marginalize and score it without any host round-trip — the
-    ROADMAP's "device-resident COO" item.
+    ``device_resident=True`` *builds* a sparse joint on the device — the
+    join-tree contraction and Möbius virtual join run as COO code algebra
+    over ``jax.Array``s with no host-side COO materialization and no bulk
+    h2d copy — after which structure search can marginalize and score it
+    without any host round-trip (the ROADMAP's "device-resident COO" and
+    "device-side builds" items).
     """
     vids = tuple(v.vid for v in db.catalog.par_rvs)
     if _pick_backend(db, vids, impl, None, dense_cell_budget) == "sparse":

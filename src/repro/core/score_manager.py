@@ -94,11 +94,16 @@ class CountCache:
     from the database (the pre-counted joint counts as one; memo hits and
     joint marginals are not materializations).
 
-    ``device_resident=True`` parks a sparse pre-counted joint on the device
-    (:class:`~repro.core.sparse_counts.DeviceSparseCT`): served marginals
-    are then computed by device sort+segment-sum and returned as device
-    tables (host consumers coerce via
-    :func:`~repro.core.sparse_counts.as_host`).
+    ``device_resident=True`` makes the sparse pre-counted joint device
+    end-to-end: it is *built* on device (the join-tree contraction and
+    Möbius join as COO code algebra — see
+    :func:`~repro.core.sparse_counts.device_sparse_contingency_table`; no
+    host COO, no bulk h2d copy) and served marginals are computed by device
+    sort+segment-sum and returned as device tables (host consumers coerce
+    via :func:`~repro.core.sparse_counts.as_host`).  Device-built joints
+    may carry interior zero-count cells (exact Möbius cancellations);
+    every consumer here treats them as absent — they re-encode to
+    zero-weight stream elements that contribute nothing.
     """
 
     def __init__(

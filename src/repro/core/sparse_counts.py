@@ -39,12 +39,39 @@ Two residency twins implement the representation:
     device through ``jax.lax.sort``-based aggregation
     (``kernels.ops.coo_aggregate``), and batched family scoring feeds the
     fused ``kernels.ops.sparse_family_score`` kernel — the structure-search
-    hot loop never round-trips the COO stream to host.  int64 composite
-    codes run under a local ``jax.experimental.enable_x64`` scope (the
-    global default stays 32-bit).
+    hot loop never round-trips the COO stream to host.
 
-``contingency_table(..., device_resident=True)`` / ``SparseCT.to_device()``
-move a built table across; :func:`as_host` coerces back.
+and two build routes produce them:
+
+  * the **host build** (:func:`sparse_ct_conditional` /
+    :func:`sparse_contingency_table`) — numpy messages, ``np.lexsort`` /
+    ``reduceat`` aggregation.  The small-N fast path and the equivalence
+    oracle; ``SparseCT.to_device()`` ships its result across in one bulk
+    h2d copy.
+  * the **device build** (:func:`device_sparse_ct_conditional` /
+    :func:`device_sparse_contingency_table`, selected by
+    ``contingency_table(..., device_resident=True)``) — the same join-tree
+    contraction re-expressed as COO code algebra over ``jax.Array``s: leaf
+    tuple encode is digit arithmetic on the (already device-resident)
+    database columns, the foreign-key join is a sort-merge on entity rows
+    (``kernels.ops.coo_join``), and every canonicalization — including each
+    Möbius T/don't-care subtraction — is a (signed) ``ops.coo_aggregate``
+    pass.  No COO column ever exists on host; the only d2h traffic is
+    accounted scalar size syncs.  ``to_host()`` of a device-built table is
+    bit-identical (codes and float32 counts) to the host build.
+
+**enable_x64 scoping contract.** The global JAX dtype default stays 32-bit;
+every computation that touches int64 composite codes (or wants float64
+count accumulation) opens a *local* ``jax.experimental.enable_x64()``
+scope around exactly the jnp calls that need it.  Two rules keep this
+sound: (1) any function returning int64 device arrays documents it, and
+callers doing further arithmetic on them must open their own scope —
+int64 *storage* survives outside the scope, but new literals/conversions
+inside an unscoped expression would silently truncate to int32; (2) the
+scope is never held across a host sync or a public API boundary, so user
+code never observes a flipped global flag.
+
+:func:`as_host` coerces a device table back to its host twin.
 """
 
 from __future__ import annotations
@@ -396,7 +423,20 @@ class DeviceSparseCT:
 
     @classmethod
     def build(cls, rvs, cards, codes, counts) -> "DeviceSparseCT":
-        """Canonicalize raw COO data (unsorted, duplicates legal) on device."""
+        """Canonicalize raw COO data on device (one ``coo_aggregate`` launch).
+
+        Merge semantics: ``codes`` may be unsorted and contain duplicates —
+        duplicate cells are summed (float64 accumulation, correctly-rounded
+        float32 result, bit-identical to the host ``aggregate_codes``) —
+        and entries may carry weight 0 or the :data:`_PAD_CODE` sentinel;
+        both are legal padding.  The result keeps the *input length*:
+        ascending unique codes as a prefix, then an int-max/zero-count tail
+        (jit needs static shapes, so nothing is compacted here — builders
+        trim the tail once at the end via one scalar sync, and every
+        consumer treats ``counts == 0`` as absent).  Signed weights are
+        allowed (the Möbius subtraction passes ``-CT[T]``); exact
+        cancellations survive as zero-count cells, i.e. absent.
+        """
         u, s = ops.coo_aggregate(codes, counts)
         return cls(tuple(rvs), tuple(cards), u, s)
 
@@ -588,6 +628,57 @@ def _fold_all(msgs: list[_Msg]) -> _Msg:
 # ---------------------------------------------------------------------------
 
 
+def _contract_join_tree(plan: QueryPlan, cat, cond_true, comp, *,
+                        initial, fold, eliminate, finish):
+    """Leaf-elimination driver shared by the host and device sparse builders.
+
+    The tree walk itself (leaf choice, root choice, edge bookkeeping) is
+    residency-independent; the two builders differ only in how messages are
+    represented and combined, injected via the four callbacks:
+
+      * ``initial(fid)`` — a fovar's own attribute message;
+      * ``fold(msgs)`` — combine one fovar's pending messages (row join);
+      * ``eliminate(msg, rname, leaf, other)`` — push a folded leaf message
+        through a relationship (the foreign-key join);
+      * ``finish(fid, msgs)`` — contract the root over its entity rows.
+
+    Root choice matches the dense backend: the group fovar when present
+    (its rows must survive as the §VI block axis), else the max-degree hub.
+    """
+    if len(comp) == 1 and not plan.adj[comp[0]]:
+        return finish(comp[0], [initial(comp[0])])
+
+    state = {f: [initial(f)] for f in comp}
+    remaining_edges = {
+        rname: tuple(f.fid for f in cat.rel_var_of(rname).fovars)
+        for rname in cond_true
+        if plan.comp_of[cat.rel_var_of(rname).fovars[0].fid]
+        == plan.comp_of[comp[0]]
+    }
+    degree = {f: len(plan.adj[f]) for f in comp}
+    alive = set(comp)
+    if plan.group_fovar in comp:
+        root = plan.group_fovar
+    else:
+        root = max(comp, key=lambda f: (degree[f], f))
+
+    while len(alive) > 1:
+        leaf = min(f for f in alive if degree[f] <= 1 and f != root)
+        rname, (f1, f2) = next(
+            (rn, fs) for rn, fs in remaining_edges.items() if leaf in fs
+        )
+        other = f2 if leaf == f1 else f1
+        msg = fold(state[leaf])
+        state[other].append(eliminate(msg, rname, leaf, other))
+        alive.discard(leaf)
+        degree[other] -= 1
+        degree[leaf] -= 1
+        del remaining_edges[rname]
+
+    assert next(iter(alive)) == root
+    return finish(root, state[root])
+
+
 def sparse_ct_conditional(
     db: RelationalDatabase,
     attr_rvs: tuple[str, ...],
@@ -678,38 +769,11 @@ def sparse_ct_conditional(
         return codes, counts, msg.cards, msg.folded
 
     def contract_component(comp: tuple[str, ...]):
-        if len(comp) == 1 and not plan.adj[comp[0]]:
-            return finish_root(comp[0], [initial_message(comp[0])])
-
-        state: dict[str, list[_Msg]] = {f: [initial_message(f)] for f in comp}
-        remaining_edges = {
-            rname: tuple(f.fid for f in cat.rel_var_of(rname).fovars)
-            for rname in cond_true
-            if plan.comp_of[cat.rel_var_of(rname).fovars[0].fid]
-            == plan.comp_of[comp[0]]
-        }
-        degree = {f: len(plan.adj[f]) for f in comp}
-        alive = set(comp)
-        if plan.group_fovar in comp:
-            root = plan.group_fovar
-        else:
-            root = max(comp, key=lambda f: (degree[f], f))
-
-        while len(alive) > 1:
-            leaf = min(f for f in alive if degree[f] <= 1 and f != root)
-            rname, (f1, f2) = next(
-                (rn, fs) for rn, fs in remaining_edges.items() if leaf in fs
-            )
-            other = f2 if leaf == f1 else f1
-            msg = _fold_all(state[leaf])
-            state[other].append(eliminate_leaf(msg, rname, leaf, other))
-            alive.discard(leaf)
-            degree[other] -= 1
-            degree[leaf] -= 1
-            del remaining_edges[rname]
-
-        assert next(iter(alive)) == root
-        return finish_root(root, state[root])
+        return _contract_join_tree(
+            plan, cat, cond_true, comp,
+            initial=initial_message, fold=_fold_all,
+            eliminate=eliminate_leaf, finish=finish_root,
+        )
 
     # Contract each component; cross product of sparse count vectors.
     vec_codes = np.zeros(1, np.int64)
@@ -753,6 +817,28 @@ def _sparse_sub(star: SparseCT, t_sum: SparseCT) -> SparseCT:
     return SparseCT(star.rvs, star.cards, codes, counts)
 
 
+def mobius_code_space(
+    db: RelationalDatabase,
+    rvs: tuple[str, ...],
+    added: list[str],
+    group_fovar: str | None,
+) -> int:
+    """Largest code space any Möbius recursion level assembles into.
+
+    Every queried axis, plus an extra indicator digit (x2) for each
+    relationship injected only to support its attributes, plus the group
+    axis.  Shared overflow guard of the host and device sparse builders —
+    without it, huge schemas would wrap int64 silently instead of raising.
+    Exact Python int.
+    """
+    cat = db.catalog
+    code_space = math.prod((cat[v].cardinality for v in rvs), start=1)
+    code_space *= 2 ** len(added)
+    if group_fovar is not None:
+        code_space *= db.entities[cat.fovar(group_fovar).entity].n_rows
+    return code_space
+
+
 def sparse_contingency_table(
     db: RelationalDatabase,
     rvs: tuple[str, ...],
@@ -773,15 +859,7 @@ def sparse_contingency_table(
     cat = db.catalog
     want, rel_names, added, attr_rvs, universe_t = mobius_setup(db, rvs, fovar_universe)
 
-    # Guard the *assembled* code space: every queried axis, plus an extra
-    # indicator digit (x2) for each relationship injected only to support
-    # its attributes, plus the group axis — the largest space any recursion
-    # level concatenates into.  Without this, huge schemas would wrap int64
-    # silently instead of raising.
-    code_space = math.prod((cat[v].cardinality for v in rvs), start=1)
-    code_space *= 2 ** len(added)
-    if group_fovar is not None:
-        code_space *= db.entities[cat.fovar(group_fovar).entity].n_rows
+    code_space = mobius_code_space(db, rvs, added, group_fovar)
     if code_space >= _MAX_CODE_SPACE:
         raise OverflowError(
             f"CT code space {code_space:.3g} overflows int64 composite codes; "
@@ -834,6 +912,366 @@ def sparse_contingency_table(
         keep = g_prefix + tuple(v.vid for v in want)
         full = full.marginal(keep)
     return full.transpose(g_prefix + tuple(rvs))
+
+
+# ---------------------------------------------------------------------------
+# Device-side build: COO messages as jax.Arrays (ROADMAP "device-side builds")
+# ---------------------------------------------------------------------------
+#
+# The device twin of the host builder above: the same join-tree contraction
+# and Möbius recursion (shared ``plan_conditional`` / ``mobius_setup`` /
+# ``_contract_join_tree``), but every message is a device COO table, the
+# foreign-key join is ``ops.coo_join`` (sort-merge on entity rows), and every
+# canonicalization — including each Möbius T/don't-care subtraction — is a
+# signed ``ops.coo_aggregate`` pass.  No COO column ever materializes on
+# host; the only d2h traffic is the scalar size syncs (``ops.sync_scalar``)
+# that fix data-dependent launch shapes.  Counts are exact: every weight is
+# an integer-valued float32 and all aggregation accumulates in float64, so
+# ``to_host()`` of a device-built table is bit-identical to the host build
+# (codes and counts) for any total below 2**53.
+
+
+@dataclass
+class _DevMsg:
+    """Device join-tree message: the ``jax.Array`` twin of :class:`_Msg`.
+
+    Same invariants as the host message — lexsorted by ``(rows, codes)``,
+    aggregated, no explicit zeros and no padding entries (device aggregation
+    results are compacted through one scalar sync before they become
+    messages) — so ``rows`` is ready to be the sorted side of the next
+    ``ops.coo_join``.  ``rows`` are int32 (entity row ids), ``codes`` int64
+    mixed-radix composite keys held under the module's ``enable_x64``
+    scoping contract, ``weights`` float32.
+    """
+
+    rows: jax.Array      # int32 entity row ids, non-decreasing
+    codes: jax.Array     # int64 mixed-radix codes over `cards`
+    weights: jax.Array   # float32
+    cards: list[int]
+    folded: list[str]    # par-RV vids, row-major axis order matching `cards`
+
+    @property
+    def code_space(self) -> int:
+        return math.prod(self.cards) if self.cards else 1
+
+
+def _trim_pad(codes, counts):
+    """Slice a device aggregation result past its :data:`_PAD_CODE` tail.
+
+    The shared compaction step of every device-build canonicalization: pad
+    entries are a contiguous int-max tail of the sorted result, so one
+    accounted scalar sync (the non-pad count) fixes the slice.  The dtype
+    comparison runs under ``enable_x64`` (the sentinel is an int64
+    literal); the blocking sync itself happens *outside* the scope, per
+    the module's scoping contract.
+    """
+    with enable_x64():
+        n_valid_dev = jnp.sum(codes != _PAD_CODE)
+    n_valid = ops.sync_scalar(n_valid_dev)
+    return codes[:n_valid], counts[:n_valid]
+
+
+def _dev_aggregate_pairs(rows, codes, weights, code_space: int, n_rows: int):
+    """Canonicalize a device COO message: one fused aggregate + compaction.
+
+    The device twin of :func:`_aggregate_pairs`: the ``(row, code)`` pair is
+    packed into one int64 composite (row-major), canonicalized by a single
+    ``ops.coo_aggregate`` launch, compacted past the int-max padding tail
+    (:func:`_trim_pad`), and unpacked.  Packing needs
+    ``n_rows * code_space`` headroom in int64 — raise rather than wrap.
+    """
+    if int(rows.shape[0]) == 0:
+        return rows, codes, weights
+    if n_rows * code_space >= _MAX_CODE_SPACE:
+        raise OverflowError(
+            f"device message packs {n_rows} rows x {code_space:.3g} codes; "
+            "overflows int64 — use the host builder for this query"
+        )
+    with enable_x64():
+        comp = rows.astype(jnp.int64) * jnp.int64(code_space) + codes
+    u, s = _trim_pad(*ops.coo_aggregate(comp, weights))
+    with enable_x64():
+        return (u // code_space).astype(jnp.int32), u % code_space, s
+
+
+def _compact_tail(ct: DeviceSparseCT) -> DeviceSparseCT:
+    """Drop a device table's contiguous padding tail (one scalar sync).
+
+    Build pipelines leave fixed-shape aggregation results whose tail is
+    :data:`_PAD_CODE` / count-0 entries; trimming it once at the end keeps
+    every downstream per-sweep re-encode proportional to the real #SS.
+    Interior zero-count cells (exact Möbius cancellations) stay — they are
+    "absent" by the :class:`DeviceSparseCT` contract.
+    """
+    if int(ct.codes.shape[0]) == 0:
+        return ct
+    codes, counts = _trim_pad(ct.codes, ct.counts)
+    if int(codes.shape[0]) == int(ct.codes.shape[0]):
+        return ct
+    return DeviceSparseCT(ct.rvs, ct.cards, codes, counts)
+
+
+def _dev_combine(a: _DevMsg, b: _DevMsg) -> _DevMsg:
+    """Join two messages of one fovar on entity row (device sort-merge).
+
+    Mirrors :func:`_combine_sparse`: probe with ``a`` (so the output stays
+    ``a``-major and therefore lexsorted — matches within one row follow
+    ``b``'s code order), gather both sides, concatenate code spaces.
+    Unique and lexsorted by construction — no aggregation pass.
+    """
+    cb = b.code_space
+    idx_b, idx_a, _total = ops.coo_join(b.rows, a.rows)
+    with enable_x64():
+        codes = a.codes[idx_a] * jnp.int64(cb) + b.codes[idx_b]
+    return _DevMsg(
+        rows=a.rows[idx_a],
+        codes=codes,
+        weights=a.weights[idx_a] * b.weights[idx_b],
+        cards=a.cards + b.cards,
+        folded=a.folded + b.folded,
+    )
+
+
+def _dev_fold_all(msgs: list[_DevMsg]) -> _DevMsg:
+    out = msgs[0]
+    for m in msgs[1:]:
+        out = _dev_combine(out, m)
+    return out
+
+
+def device_sparse_ct_conditional(
+    db: RelationalDatabase,
+    attr_rvs: tuple[str, ...],
+    cond_true: tuple[str, ...],
+    fovar_universe: tuple[str, ...] | None = None,
+    *,
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+) -> DeviceSparseCT:
+    """Device twin of :func:`sparse_ct_conditional` (same cells, no host COO).
+
+    Every join-tree message lives on device from the first gather of the
+    database columns (which are device arrays already); leaf elimination is
+    ``ops.coo_join`` + one ``ops.coo_aggregate``, root contraction one more
+    aggregate.  ``to_host()`` of the result is bit-identical to the host
+    builder's table — the equivalence the device-build tests pin down.
+    """
+    cat = db.catalog
+    plan: QueryPlan = plan_conditional(
+        db, attr_rvs, cond_true, fovar_universe,
+        group_fovar=group_fovar, restrict=restrict,
+    )
+    code_space = math.prod((cat[v].cardinality for v in attr_rvs), start=1)
+    if group_fovar is not None:
+        code_space *= db.entities[cat.fovar(group_fovar).entity].n_rows
+    if code_space >= _MAX_CODE_SPACE:
+        raise OverflowError(
+            f"query code space {code_space:.3g} overflows int64 composite codes"
+        )
+
+    def fovar_n_rows(fid: str) -> int:
+        return db.entities[cat.fovar(fid).entity].n_rows
+
+    def initial_message(fid: str) -> _DevMsg:
+        n = fovar_n_rows(fid)
+        cards = [rv.cardinality for rv in plan.ent_attrs[fid]]
+        folded = [rv.vid for rv in plan.ent_attrs[fid]]
+        with enable_x64():
+            codes = jnp.zeros((n,), jnp.int64)
+            for rv, stride in zip(plan.ent_attrs[fid], radix_strides(cards)):
+                col = db.entities[rv.table].attrs[rv.column]
+                codes = codes + col.astype(jnp.int64) * jnp.int64(stride)
+        rows = jnp.arange(n, dtype=jnp.int32)
+        weights = jnp.ones((n,), jnp.float32)
+        if fid in plan.restrict:
+            # the restriction keeps exactly one entity row — a static slice,
+            # no data-dependent compaction needed
+            r = plan.restrict[fid]
+            rows, codes, weights = rows[r:r + 1], codes[r:r + 1], weights[r:r + 1]
+        return _DevMsg(rows, codes, weights, cards, folded)
+
+    def eliminate_leaf(msg: _DevMsg, rname: str, leaf: str, other: str) -> _DevMsg:
+        """Push a leaf's message through a relationship (device FK join)."""
+        rel = db.relationships[rname]
+        f1, f2 = (f.fid for f in cat.rel_var_of(rname).fovars)
+        fk_leaf = rel.fk1 if leaf == f1 else rel.fk2
+        fk_other = rel.fk2 if leaf == f1 else rel.fk1
+        r_cards = [rv.cardinality for rv in plan.rel_attrs[rname]]
+        r_names = [rv.vid for rv in plan.rel_attrs[rname]]
+        d_r = math.prod(r_cards, start=1)
+        with enable_x64():
+            rcode = jnp.zeros((int(fk_leaf.shape[0]),), jnp.int64)
+            for rv, stride in zip(plan.rel_attrs[rname], radix_strides(r_cards)):
+                rcode = rcode + rel.attrs[rv.column].astype(jnp.int64) * jnp.int64(stride)
+        idx_m, idx_r, _total = ops.coo_join(msg.rows, fk_leaf)
+        with enable_x64():
+            codes = msg.codes[idx_m] * jnp.int64(d_r) + rcode[idx_r]
+        rows, codes, weights = _dev_aggregate_pairs(
+            fk_other[idx_r].astype(jnp.int32), codes, msg.weights[idx_m],
+            msg.code_space * d_r, fovar_n_rows(other),
+        )
+        return _DevMsg(rows, codes, weights, msg.cards + r_cards, msg.folded + r_names)
+
+    def finish_root(fid: str, msgs: list[_DevMsg]):
+        """Contract the root over its entity rows -> device COO count vector."""
+        msg = _dev_fold_all(msgs)
+        if fid == plan.group_fovar:
+            with enable_x64():
+                codes = (
+                    msg.rows.astype(jnp.int64) * jnp.int64(msg.code_space)
+                    + msg.codes
+                )  # lexsorted => still sorted
+            return (
+                codes, msg.weights,
+                [fovar_n_rows(fid)] + msg.cards,
+                [GROUP_AXIS] + msg.folded,
+            )
+        u, s = ops.coo_aggregate(msg.codes, msg.weights)
+        if int(u.shape[0]):
+            u, s = _trim_pad(u, s)
+        return u, s, msg.cards, msg.folded
+
+    # Contract each component; cross product of device count vectors.
+    with enable_x64():
+        vec_codes = jnp.zeros((1,), jnp.int64)
+    vec_counts = jnp.ones((1,), jnp.float32)
+    all_cards: list[int] = []
+    all_folded: list[str] = []
+    for comp in plan.comps:
+        c_codes, c_counts, cards, folded = _contract_join_tree(
+            plan, cat, cond_true, comp,
+            initial=initial_message, fold=_dev_fold_all,
+            eliminate=eliminate_leaf, finish=finish_root,
+        )
+        if not cards:
+            # Attribute-less component: a scalar multiplier (its population
+            # count), float64-accumulated then rounded like the host path.
+            with enable_x64():
+                scalar = jnp.sum(
+                    c_counts, dtype=ops.count_acc_dtype()
+                ).astype(jnp.float32)
+            vec_counts = vec_counts * scalar
+            continue
+        c = math.prod(cards)
+        with enable_x64():
+            vec_codes = (
+                vec_codes[:, None] * jnp.int64(c) + c_codes[None, :]
+            ).reshape(-1)
+        vec_counts = (vec_counts[:, None] * c_counts[None, :]).reshape(-1)
+        all_cards += cards
+        all_folded += folded
+
+    ct = DeviceSparseCT(tuple(all_folded), tuple(all_cards), vec_codes, vec_counts)
+    out_order = tuple(attr_rvs)
+    if group_fovar is not None:
+        out_order = (GROUP_AXIS,) + out_order
+    return _compact_tail(ct.transpose(out_order))
+
+
+def _dev_sparse_sub(star: DeviceSparseCT, t_sum: DeviceSparseCT) -> DeviceSparseCT:
+    """``CT[F] = CT[*] − CT[T]`` as ONE signed ``ops.coo_aggregate`` pass.
+
+    Padding entries of either operand carry count 0 and merge into the
+    result's tail; exact cancellations become zero-count cells (absent by
+    contract).  float64 accumulation over integer-valued float32 counts
+    keeps the subtraction bit-identical to the host :func:`_sparse_sub`.
+    """
+    assert star.rvs == t_sum.rvs, (star.rvs, t_sum.rvs)
+    with enable_x64():
+        codes = jnp.concatenate([star.codes, t_sum.codes])
+        deltas = jnp.concatenate([star.counts, -t_sum.counts])
+    u, s = ops.coo_aggregate(codes, deltas)
+    return DeviceSparseCT(star.rvs, star.cards, u, s)
+
+
+def device_sparse_contingency_table(
+    db: RelationalDatabase,
+    rvs: tuple[str, ...],
+    *,
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+    fovar_universe: tuple[str, ...] | None = None,
+) -> DeviceSparseCT:
+    """Device twin of :func:`sparse_contingency_table` (Möbius on device).
+
+    Structurally identical recursion; each level's don't-care subtraction is
+    a signed ``ops.coo_aggregate`` pass (:func:`_dev_sparse_sub`) and the
+    F/T assembly one ``DeviceSparseCT.build`` canonicalization — the F block
+    embedded at the ``n/a`` (code-0) relationship-attribute cells, the T
+    block shifted past it by the indicator digit, exactly like the host
+    builder.  This is the default route of ``contingency_table(...,
+    device_resident=True)`` on the sparse backend: the joint CT is built
+    with zero host-side COO materialization.
+    """
+    cat = db.catalog
+    want, rel_names, added, attr_rvs, universe_t = mobius_setup(db, rvs, fovar_universe)
+
+    if mobius_code_space(db, rvs, added, group_fovar) >= _MAX_CODE_SPACE:
+        raise OverflowError(
+            f"CT code space {mobius_code_space(db, rvs, added, group_fovar):.3g} "
+            "overflows int64 composite codes; split the query into smaller "
+            "par-RV subsets"
+        )
+
+    g_prefix: tuple[str, ...] = (GROUP_AXIS,) if group_fovar is not None else ()
+
+    def recurse(
+        remaining: tuple[str, ...], fixed_true: tuple[str, ...], attrs: tuple[str, ...]
+    ) -> DeviceSparseCT:
+        if not remaining:
+            return device_sparse_ct_conditional(
+                db, attrs, fixed_true, universe_t,
+                group_fovar=group_fovar, restrict=restrict,
+            )
+        r, rest = remaining[0], remaining[1:]
+        r_attr_vids = tuple(
+            v.vid for v in want if v.kind == KIND_REL_ATTR and v.table == r
+        )
+        t_branch = recurse(rest, fixed_true + (r,), attrs)
+        star_attrs = tuple(v for v in attrs if v not in r_attr_vids)
+        star_branch = recurse(rest, fixed_true, star_attrs)
+
+        shared = tuple(v for v in t_branch.rvs if v not in r_attr_vids)
+        t_ct = t_branch.transpose(shared + r_attr_vids)
+        t_sum = t_ct.marginal(shared) if r_attr_vids else t_ct
+        star = star_branch.transpose(shared)
+        f_count = _dev_sparse_sub(star, t_sum)  # counts with r = False
+
+        r_cards = tuple(cat[v].cardinality for v in r_attr_vids)
+        d_r = math.prod(r_cards, start=1)
+        shared_cards = t_ct.cards[: len(shared)]
+        d_rest = math.prod(shared_cards, start=1) * d_r
+
+        # F block at the n/a (code 0) r-attribute cells, T block shifted
+        # past the F half; padding/zero cells are pinned to _PAD_CODE
+        # *before* the shift so their garbage codes can't wrap into range.
+        with enable_x64():
+            f_valid = f_count.counts != 0.0
+            f_codes = jnp.where(
+                f_valid,
+                jnp.where(f_valid, f_count.codes, 0) * jnp.int64(d_r),
+                _PAD_CODE,
+            )
+            t_valid = t_ct.counts != 0.0
+            t_codes = jnp.where(
+                t_valid,
+                jnp.where(t_valid, t_ct.codes, 0) + jnp.int64(d_rest),
+                _PAD_CODE,
+            )
+            codes = jnp.concatenate([f_codes, t_codes])
+            counts = jnp.concatenate([f_count.counts, t_ct.counts])
+        rel_vid = cat.rel_var_of(r).vid
+        return DeviceSparseCT.build(
+            (rel_vid,) + shared + r_attr_vids,
+            (2,) + shared_cards + r_cards,
+            codes, counts,
+        )
+
+    full = recurse(tuple(rel_names), (), attr_rvs)
+    if added:
+        keep = g_prefix + tuple(v.vid for v in want)
+        full = full.marginal(keep)
+    return _compact_tail(full.transpose(g_prefix + tuple(rvs)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel for the sort-merge join expansion (device CT builds).
+
+The device-side sparse CT build (paper §IV; ``repro.core.sparse_counts``)
+expresses every foreign-key join as a **sort-merge join on entity rows**:
+one side is a COO message whose ``rows`` column is sorted, the other a
+relationship table's foreign-key column probing it.  The match table is two
+``searchsorted`` passes (``lo``/``hi`` per probe key, computed by the ops
+wrapper in plain XLA); what remains — and what this kernel implements — is
+the *expansion* of that match table into flat gather indices:
+
+    for probe j, for m in [0, cnt[j]):  emit (lo[j] + m, j)
+
+ordered probe-major, so the joined stream inherits the probe side's order.
+The output length ``total = sum(cnt)`` is data-dependent; the caller syncs
+it to host (one accounted scalar d2h) and pads it to a power-of-two bucket
+so launch shapes stabilize.
+
+Kernel formulation (TPU-native, no data-dependent control flow): with
+``cum = cumsum(cnt)``, output slot ``p`` belongs to the probe key with
+``rank[p] = #{k : cum[k] <= p}`` (a vectorized binary-search-by-counting
+over probe chunks on the VPU), and the within-run offset is ``p -
+start[rank[p]]`` where ``start = cum - cnt``.  The ``lo``/``start`` gathers
+by ``rank`` are one-hot masked reductions over the same probe chunks —
+gathers as compares+reduces, the same trick as ``ct_count``'s scatter.
+
+The jnp oracle (`kernels.ref.coo_join_expand_ref`) computes the identical
+indices with ``jnp.searchsorted`` + gathers; dispatch and accounting live
+in :func:`repro.kernels.ops.coo_join`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Output elements per grid step (lane-tile of the expanded join stream).
+_BM = 1024
+
+#: Probe-table chunk width for the rank/gather sweeps (one VPU lane row).
+_BK = 128
+
+#: Padding value for the cumulative-count table: larger than any valid
+#: output position (positions are int32), so padded probe slots never
+#: contribute to a rank count.
+_CUM_PAD = jnp.iinfo(jnp.int32).max
+
+
+def _coo_join_expand_kernel(cum_ref, lo_ref, start_ref, ia_ref, ib_ref):
+    i = pl.program_id(0)
+    bm = ia_ref.shape[1]
+    n_pad = cum_ref.shape[1]
+    n_chunks = n_pad // _BK
+
+    pos = i * bm + jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
+    pos_col = jnp.swapaxes(pos, 0, 1)  # (bm, 1)
+
+    # rank[p] = #{k : cum[k] <= p} — counting formulation of searchsorted
+    # (cum is non-decreasing), accumulated chunk by chunk on the VPU.
+    def rank_body(k, rank):
+        chunk = cum_ref[:, pl.ds(k * _BK, _BK)]  # (1, BK)
+        return rank + jnp.sum(
+            (chunk <= pos_col).astype(jnp.int32), axis=1, keepdims=True
+        )
+
+    rank = jax.lax.fori_loop(
+        0, n_chunks, rank_body, jnp.zeros((bm, 1), jnp.int32)
+    )
+
+    # Gather lo[rank] and start[rank] as one-hot masked reductions over the
+    # same chunks (rank beyond the real probe count only occurs on output
+    # padding slots, which the wrapper slices off).
+    def gather_body(k, carry):
+        lo_g, st_g = carry
+        ids = k * _BK + jax.lax.broadcasted_iota(jnp.int32, (1, _BK), 1)
+        onehot = rank == ids  # (bm, BK)
+        lo_chunk = lo_ref[:, pl.ds(k * _BK, _BK)]
+        st_chunk = start_ref[:, pl.ds(k * _BK, _BK)]
+        lo_g = lo_g + jnp.sum(
+            jnp.where(onehot, lo_chunk, 0), axis=1, keepdims=True
+        )
+        st_g = st_g + jnp.sum(
+            jnp.where(onehot, st_chunk, 0), axis=1, keepdims=True
+        )
+        return lo_g, st_g
+
+    zeros = jnp.zeros((bm, 1), jnp.int32)
+    lo_g, st_g = jax.lax.fori_loop(0, n_chunks, gather_body, (zeros, zeros))
+
+    ia_ref[...] = jnp.swapaxes(lo_g + (pos_col - st_g), 0, 1)
+    ib_ref[...] = jnp.swapaxes(rank, 0, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("total", "interpret", "bm"))
+def coo_join_expand_pallas(
+    lo: jax.Array,
+    cnt: jax.Array,
+    total: int,
+    *,
+    interpret: bool = False,
+    bm: int = _BM,
+) -> tuple[jax.Array, jax.Array]:
+    """Expand a sort-merge match table into ``(idx_sorted, idx_probe)``.
+
+    ``lo[j]``/``cnt[j]`` are the first match position and match count of
+    probe key ``j`` against the sorted key column; ``total`` is the (static,
+    pre-synced) number of output pairs — callers pad it to a bucket and
+    slice, so slots at positions ``>= sum(cnt)`` hold garbage indices that
+    must be discarded.  Output ``idx_sorted[p]``/``idx_probe[p]`` index the
+    sorted and probe sides of pair ``p``, probe-major.
+    """
+    n = lo.shape[0]
+    n_pad = max(_BK, -(-n // _BK) * _BK)
+    cum = jnp.cumsum(cnt.astype(jnp.int32))
+    start = cum - cnt.astype(jnp.int32)
+    cum = jnp.pad(cum, (0, n_pad - n), constant_values=_CUM_PAD).reshape(1, -1)
+    lo2 = jnp.pad(lo.astype(jnp.int32), (0, n_pad - n)).reshape(1, -1)
+    start = jnp.pad(start, (0, n_pad - n)).reshape(1, -1)
+
+    bm = min(bm, max(128, -(-total // 128) * 128))
+    n_tiles = -(-total // bm)
+
+    ia, ib = pl.pallas_call(
+        _coo_join_expand_kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, n_pad), lambda i: (0, 0))] * 3,
+        out_specs=[pl.BlockSpec((1, bm), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((n_tiles, bm), jnp.int32)] * 2,
+        interpret=interpret,
+    )(cum, lo2, start)
+    return ia.reshape(-1)[:total], ib.reshape(-1)[:total]

@@ -67,6 +67,31 @@ def ct_count_matmul(
     return jnp.sum(partials, axis=0)
 
 
+def coo_join_expand_ref(
+    lo: jax.Array, cnt: jax.Array, total: int
+) -> tuple[jax.Array, jax.Array]:
+    """Expand a sort-merge join's match table into flat gather indices.
+
+    ``lo[j]``/``cnt[j]`` locate probe key ``j``'s matches inside the sorted
+    key column (first position / run length, from two ``searchsorted``
+    passes); ``total`` is the static output length.  Pair ``p`` of the
+    probe-major expansion is ``(idx_sorted[p], idx_probe[p])`` with
+
+        ``idx_probe[p]  = searchsorted(cumsum(cnt), p, side="right")``
+        ``idx_sorted[p] = lo[idx_probe[p]] + (p - start[idx_probe[p]])``
+
+    — the semantic ground truth of the Pallas kernel in
+    :mod:`repro.kernels.coo_join`.  Slots at ``p >= sum(cnt)`` (bucket
+    padding) hold clamped garbage the caller slices off.
+    """
+    cum = jnp.cumsum(cnt.astype(jnp.int32))
+    pos = jnp.arange(total, dtype=jnp.int32)
+    idx_probe = jnp.searchsorted(cum, pos, side="right").astype(jnp.int32)
+    start = (cum - cnt.astype(jnp.int32))[idx_probe]
+    idx_sorted = lo.astype(jnp.int32)[idx_probe] + (pos - start)
+    return idx_sorted, idx_probe
+
+
 def sorted_segment_sum_ref(
     values: jax.Array, segment_ids: jax.Array, num_segments: int
 ) -> jax.Array:

@@ -1,0 +1,261 @@
+"""Device-side sparse CT builds: the join-tree contraction + Möbius virtual
+join as COO code algebra on device.  Pins the bit-identity contract — a
+device-built table's ``to_host()`` must match the host builder's codes and
+float32 counts exactly on every tricky count-query shape (multi-relationship
+Möbius joins, §VI block/``restrict`` paths, empty joins, degenerate trees) —
+plus the ``ops.coo_join`` sort-merge kernel vs its oracle and the
+zero-host-COO traffic story."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import counts
+from repro.core.counts import joint_contingency_table
+from repro.core.database import from_labels, university_db
+from repro.core.schema import make_schema
+from repro.core.score_manager import CountCache, ScoreManager
+from repro.core.sparse_counts import DeviceSparseCT, SparseCT
+from repro.core.structure import learn_and_join
+from repro.kernels import ops
+
+from .bruteforce import random_db
+
+
+def _pair(db, rvs, **kw):
+    """(host build, device build) of one count query, both sparse."""
+    host = counts.contingency_table(db, rvs, impl="sparse", **kw)
+    dev = counts.contingency_table(db, rvs, impl="sparse", device_resident=True, **kw)
+    assert isinstance(host, SparseCT) and isinstance(dev, DeviceSparseCT)
+    return host, dev
+
+
+def _assert_bit_identical(host: SparseCT, dev: DeviceSparseCT) -> None:
+    got = dev.to_host()
+    assert got.rvs == host.rvs and got.cards == host.cards
+    np.testing.assert_array_equal(got.codes, host.codes)
+    np.testing.assert_array_equal(got.counts, host.counts)  # bitwise, not close
+
+
+def _chain_db(depth=2, card=3, n_rows=7, seed=0):
+    """Entities e0..e<depth> linked by a chain of relationships (with one
+    relationship attribute each) — the multi-relationship Möbius workload."""
+    rng = np.random.default_rng(seed)
+    dom = tuple(str(i) for i in range(card))
+    schema = make_schema(
+        entities={f"e{k}": {f"a{k}": dom} for k in range(depth + 1)},
+        relationships={
+            f"r{k}": ((f"e{k}", f"e{k + 1}"), {f"w{k}": ("p", "q")})
+            for k in range(depth)
+        },
+    )
+    ents = {
+        f"e{k}": {f"a{k}": [dom[j] for j in rng.integers(0, card, n_rows)]}
+        for k in range(depth + 1)
+    }
+    rels = {}
+    for k in range(depth):
+        pairs = sorted(
+            {(int(rng.integers(0, n_rows)), int(rng.integers(0, n_rows)))
+             for _ in range(n_rows)}
+        )
+        rels[f"r{k}"] = {
+            "fk1": [p[0] for p in pairs],
+            "fk2": [p[1] for p in pairs],
+            "attrs": {f"w{k}": [("p", "q")[int(rng.integers(0, 2))] for _ in pairs]},
+        }
+    return from_labels(schema, ents, rels)
+
+
+def _empty_rel_db():
+    schema = make_schema(
+        entities={"a": {"x": ("0", "1")}, "b": {"y": ("0", "1", "2")}},
+        relationships={"R": (("a", "b"), {"w": ("p", "q")})},
+    )
+    return from_labels(
+        schema,
+        {"a": {"x": ["0", "1", "1"]}, "b": {"y": ["2", "0"]}},
+        {"R": {"fk1": [], "fk2": [], "attrs": {"w": []}}},
+    )
+
+
+# ---------------------------------------------------------------------------
+# ops.coo_join: sort-merge join vs a brute-force pairing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_coo_join_matches_bruteforce(impl, seed):
+    rng = np.random.default_rng(seed)
+    skeys = np.sort(rng.integers(0, 11, int(rng.integers(1, 60)))).astype(np.int32)
+    pkeys = rng.integers(0, 13, int(rng.integers(1, 70))).astype(np.int32)
+    ia, ib, total = ops.coo_join(jnp.asarray(skeys), jnp.asarray(pkeys), impl=impl)
+    want = [
+        (int(m), j)
+        for j, p in enumerate(pkeys)
+        for m in np.flatnonzero(skeys == p)
+    ]
+    assert total == len(want)
+    got = list(zip(np.asarray(ia).tolist(), np.asarray(ib).tolist()))
+    assert got == want  # probe-major order, contiguous match runs
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_coo_join_empty_sides(impl):
+    empty = jnp.zeros((0,), jnp.int32)
+    some = jnp.asarray([0, 1, 2], jnp.int32)
+    for a, b in [(empty, some), (some, empty), (empty, empty)]:
+        ia, ib, total = ops.coo_join(a, b, impl=impl)
+        assert total == 0 and ia.shape == (0,) and ib.shape == (0,)
+    # disjoint key ranges: probes present, zero matches
+    ia, ib, total = ops.coo_join(some, jnp.asarray([7, 9], jnp.int32), impl=impl)
+    assert total == 0
+
+
+def test_coo_join_counts_launch_and_scalar_sync():
+    ops.reset_launch_counts()
+    ops.reset_transfer_counts()
+    ops.coo_join(jnp.asarray([0, 0, 1], jnp.int32), jnp.asarray([0, 1], jnp.int32))
+    assert ops.launch_counts().get("coo_join") == 1
+    assert ops.transfer_bytes()["d2h"] == 8  # the one int64 size sync
+
+
+# ---------------------------------------------------------------------------
+# Build equivalence: device vs host, bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_device_joint_build_university():
+    db = university_db()
+    host = joint_contingency_table(db, impl="sparse")
+    dev = joint_contingency_table(db, impl="sparse", device_resident=True)
+    assert isinstance(dev, DeviceSparseCT)
+    _assert_bit_identical(host, dev)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("self_rel", [False, True])
+def test_device_build_random_dbs(seed, self_rel):
+    db = random_db(seed, self_rel=self_rel)
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    host, dev = _pair(db, rvs)
+    _assert_bit_identical(host, dev)
+
+
+@pytest.mark.parametrize("depth", [2, 3])
+def test_device_build_multi_relationship_mobius(depth):
+    """Chains of relationships: the Möbius recursion nests ``depth`` signed
+    subtraction levels, each with a relationship-attribute n/a embedding."""
+    db = _chain_db(depth=depth)
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    host, dev = _pair(db, rvs)
+    _assert_bit_identical(host, dev)
+
+
+def test_device_build_group_axis():
+    """§VI block access: the ``__group__`` pseudo-axis survives the device
+    root contraction with its entity rows intact."""
+    db = random_db(11)
+    rvs = ("b1(beta0)", "R(alpha0,beta0)", "ra(alpha0,beta0)")
+    host, dev = _pair(db, rvs, group_fovar="alpha0")
+    _assert_bit_identical(host, dev)
+
+
+def test_device_build_restrict():
+    """§VI single access: counting restricted to one entity row."""
+    db = random_db(11)
+    rvs = ("b1(beta0)", "R(alpha0,beta0)", "ra(alpha0,beta0)")
+    for e in range(db.entities["alpha"].n_rows):
+        host, dev = _pair(db, rvs, restrict={"alpha0": e})
+        _assert_bit_identical(host, dev)
+
+
+def test_device_build_empty_join():
+    """A relationship with zero tuples: the T branch is empty, all mass sits
+    in the Möbius F block (and the rel attribute at its n/a code)."""
+    db = _empty_rel_db()
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    host, dev = _pair(db, rvs)
+    assert float(host.total()) > 0  # the F block carries the cross product
+    _assert_bit_identical(host, dev)
+
+
+def test_device_build_degenerate_trees():
+    """Single-leaf (one fovar, no relationships) and disconnected-component
+    (pure cross product) join trees."""
+    db = _empty_rel_db()
+    for rvs in [("x(a0)",), ("y(b0)",), ("x(a0)", "y(b0)")]:
+        host, dev = _pair(db, rvs)
+        _assert_bit_identical(host, dev)
+
+
+def test_device_build_conditional_only():
+    """The conditional contraction (no Möbius level) on its own."""
+    from repro.core.sparse_counts import device_sparse_ct_conditional
+
+    db = university_db()
+    query = ("intelligence(student0)", "salary(prof0,student0)")
+    host = counts.ct_conditional(db, query, ("RA",), impl="sparse")
+    dev = device_sparse_ct_conditional(db, query, ("RA",))
+    assert isinstance(dev, DeviceSparseCT)
+    _assert_bit_identical(host, dev)
+
+
+# ---------------------------------------------------------------------------
+# Canonical form + traffic of the device route
+# ---------------------------------------------------------------------------
+
+
+def test_device_build_canonical_form():
+    """Compacted tail, non-decreasing codes, strict host canonical on d2h."""
+    db = university_db()
+    dev = joint_contingency_table(db, impl="sparse", device_resident=True)
+    codes = np.asarray(dev.codes)
+    assert np.all(np.diff(codes) >= 0)
+    assert codes.size == 0 or codes[-1] < dev.n_cells  # no _PAD_CODE tail
+    host = dev.to_host()
+    assert np.all(np.diff(host.codes) > 0) and np.all(host.counts != 0)
+
+
+def test_device_build_zero_host_coo_traffic():
+    """The tentpole acceptance: the device joint build ships NO bulk COO
+    columns across the PCIe — zero h2d bytes, d2h limited to scalar size
+    syncs (8 bytes each)."""
+    db = university_db()
+    ops.reset_transfer_counts()
+    dev = joint_contingency_table(db, impl="sparse", device_resident=True)
+    tr = ops.transfer_bytes()
+    assert tr["h2d"] == 0
+    assert 0 < tr["d2h"] <= 8 * 64  # a handful of scalar syncs
+    # the PR 3 route (host build + bulk upload) for contrast
+    ops.reset_transfer_counts()
+    host = joint_contingency_table(db, impl="sparse")
+    host.to_device()
+    assert ops.transfer_bytes()["h2d"] >= host.codes.nbytes + host.counts.nbytes
+    assert dev.to_host().n_nonzero() == host.n_nonzero()
+
+
+def test_device_built_joint_serves_score_manager():
+    """CountCache/ScoreManager threading: a device-*built* joint drives the
+    fused scoring path to the same model as the host sparse path."""
+    db = university_db()
+    mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    assert isinstance(mgr.joint, DeviceSparseCT)
+    res_dev = learn_and_join(db, mgr, score="aic", max_parents=2, max_chain=1)
+    ser = CountCache(db, mode="sparse")
+    res_ser = learn_and_join(db, ser, score="aic", max_parents=2, max_chain=1)
+    assert sorted(res_dev.bn.edges()) == sorted(res_ser.bn.edges())
+
+
+def test_device_build_marginals_match_host_build():
+    """Marginals of a device-built joint == marginals of the host joint
+    (the served-family-CT contract of CountCache)."""
+    db = _chain_db(depth=2)
+    host = joint_contingency_table(db, impl="sparse")
+    dev = joint_contingency_table(db, impl="sparse", device_resident=True)
+    for keep in [host.rvs[:2], (host.rvs[3], host.rvs[0]), host.rvs[-2:]]:
+        hm = host.marginal(tuple(keep))
+        dm = dev.marginal(tuple(keep)).to_host()
+        np.testing.assert_array_equal(dm.codes, hm.codes)
+        np.testing.assert_array_equal(dm.counts, hm.counts)

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo docs (CI docs job).
+
+Walks the given markdown files/directories, extracts inline links and
+images ``[text](target)``, and verifies that every *relative* target
+resolves to an existing file or directory (anchors are stripped; external
+``http(s)``/``mailto`` links are not fetched — this guards against moved or
+renamed files, not the public internet).  Exits non-zero listing every
+broken link.  Stdlib-only so the CI docs job needs no installs.
+
+Usage: python tools/check_links.py README.md ROADMAP.md docs
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: inline links/images: [text](target "title") — target up to space or ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def links_of(md: Path) -> list[str]:
+    # drop fenced code blocks so example snippets can't trip the checker
+    text = re.sub(r"```.*?```", "", md.read_text(), flags=re.S)
+    return _LINK.findall(text)
+
+
+def check(paths: list[str]) -> int:
+    files: list[Path] = []
+    for p in map(Path, paths):
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+        else:
+            print(f"warning: skipping non-markdown arg {p}", file=sys.stderr)
+
+    broken: list[tuple[Path, str]] = []
+    n_checked = 0
+    for md in files:
+        for target in links_of(md):
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            n_checked += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                broken.append((md, target))
+
+    for md, target in broken:
+        print(f"BROKEN LINK: {md}: ({target})", file=sys.stderr)
+    print(
+        f"checked {n_checked} relative links in {len(files)} markdown files; "
+        f"{len(broken)} broken"
+    )
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(check(sys.argv[1:] or ["README.md", "ROADMAP.md", "docs"]))
