@@ -24,6 +24,22 @@ from .common import emit, load, timed
 # also failed to terminate on the large sets (N/T entries of Table IX).
 BASELINE_OK = {"uw-cse", "mutagenesis", "mondial", "hepatitis"}
 
+#: CI compile budget: max XLA backend compiles any dataset's cold device
+#: leg (build + search, counted by the kernels.bucketing probe) may record
+#: before the bench smoke FAILS.  The shape-bucket ladder keeps the cold
+#: pass at O(op-kinds x rungs) programs (~230 measured on the smoke
+#: dataset, lower for every later dataset of a run because rungs are
+#: shared); the budget adds headroom for backend drift but fails long
+#: before a per-join-shape recompile regression (which lands in the
+#: thousands).  Committed here so a regression fails the PR that caused
+#: it, not the next profiling session.
+COMPILE_BUDGET = 320
+
+#: Warm-leg compile budget: a second same-shape build + search must hit
+#: the jit cache everywhere.  Zero in a healthy run; tiny headroom only
+#: for incidental host-side constant programs.
+WARM_COMPILE_BUDGET = 8
+
 
 def run(datasets: list[str], scale: float | None = None, max_chain: int = 1) -> dict:
     out = {}
@@ -79,7 +95,12 @@ def run_batched(
     host sort, and the metrics record its per-sweep launch count (the
     acceptance criterion is <= 3) and the accounted host<->device transfer
     bytes — the whole traffic is the one joint upload plus a (B,) score
-    row per batch.
+    row per batch.  The device leg runs cold THEN warm: the cold pass
+    records the actual XLA compile count (``compiles``, gated against
+    :data:`COMPILE_BUDGET` by the CI smoke) and the warm pass — fresh
+    ScoreManager, warm jit cache — supplies the headline build/search
+    timings and ``sparse_device_speedup``, so compile time never leaks
+    into the steady-state throughput numbers.
     """
     out: dict[str, dict] = {}
     for name in datasets:
@@ -115,28 +136,50 @@ def run_batched(
             learn_and_join, db, sp_ser_cache, score="aic", max_parents=2,
             max_chain=max_chain,
         )
-        # The joint is now BUILT on device (PR 4): bracket the build's own
+        # The joint is BUILT on device (PR 4): bracket the build's own
         # launches and transfer bytes — h2d must stay ~0 (no bulk COO
         # upload; the PR 3 route shipped the whole codes+counts stream) and
         # d2h is a handful of accounted scalar size syncs.  The transfer
         # tally keeps running through the search so the device leg's total
         # traffic story (build + scoring) stays visible; the launch tally
         # restarts after the build so launches/sweep measures scoring only.
+        #
+        # The leg runs TWICE (PR 5): the cold pass pays whatever XLA
+        # compiles the shape-bucket ladder hasn't amortized yet (counted by
+        # the ops compile probe — the number the CI compile budget gates),
+        # then a warm pass with a fresh ScoreManager (fresh score memo,
+        # warm jit cache) measures steady-state throughput.  Headline
+        # numbers come from the warm pass so compile time never masquerades
+        # as per-sweep cost; cold numbers keep their own keys.
         ops.reset_transfer_counts()
         ops.reset_launch_counts()
-        mgr_sp, sp_build_secs = timed(
+        ops.reset_compile_counts()
+        mgr_sp, sp_build_cold_secs = timed(
             ScoreManager, db, mode="sparse", device_resident=True
         )
         sp_build_launches = ops.total_launches()
         sp_build_tr = dict(ops.transfer_bytes())
         ops.reset_launch_counts()
-        res_sp_dev, sp_dev_secs = timed(
+        res_sp_dev, sp_dev_cold_secs = timed(
             learn_and_join, db, mgr_sp, score="aic", max_parents=2,
             max_chain=max_chain,
         )
         sp_dev_launches = ops.total_launches()
         sp_transfers = ops.transfer_bytes()
+        cold_compiles = ops.compile_counts()
+        ops.reset_compile_counts()
+        mgr_warm, sp_build_warm_secs = timed(
+            ScoreManager, db, mode="sparse", device_resident=True
+        )
+        res_sp_warm, sp_dev_warm_secs = timed(
+            learn_and_join, db, mgr_warm, score="aic", max_parents=2,
+            max_chain=max_chain,
+        )
+        warm_compiles = ops.compile_counts()
         sparse_edges_equal = sorted(res_sp_ser.bn.edges()) == sorted(
+            res_sp_dev.bn.edges()
+        )
+        sparse_warm_edges_equal = sorted(res_sp_warm.bn.edges()) == sorted(
             res_sp_dev.bn.edges()
         )
         aic_sp_ser = score_structure(res_sp_ser.bn, sp_ser_cache).aic
@@ -171,20 +214,33 @@ def run_batched(
             "edges_equal": edges_equal,
             "scores_equal": scores_equal,
             "sparse_serial_seconds": sp_ser_secs,
-            "sparse_device_seconds": sp_dev_secs,
-            "sparse_device_speedup": sp_ser_secs / max(sp_dev_secs, 1e-9),
+            # steady-state (warm-cache) numbers are the headline; the cold
+            # first-pass keeps its own keys so compile cost stays visible
+            "sparse_device_seconds": sp_dev_warm_secs,
+            "sparse_device_seconds_cold": sp_dev_cold_secs,
+            "sparse_device_speedup": sp_ser_secs / max(sp_dev_warm_secs, 1e-9),
+            "sparse_device_speedup_cold": sp_ser_secs / max(sp_dev_cold_secs, 1e-9),
             "sparse_device_launches": sp_dev_launches,
             "sparse_launches_per_sweep": sp_dev_launches
             / max(res_sp_dev.n_sweeps, 1),
             "sparse_device_h2d_bytes": sp_transfers["h2d"],
             "sparse_device_d2h_bytes": sp_transfers["d2h"],
-            "sparse_device_build_ms": sp_build_secs * 1e3,
+            "sparse_device_build_ms_cold": sp_build_cold_secs * 1e3,
+            "sparse_device_build_ms_warm": sp_build_warm_secs * 1e3,
             "sparse_build_launches": sp_build_launches,
             "sparse_build_h2d_bytes": sp_build_tr["h2d"],
             "sparse_build_d2h_bytes": sp_build_tr["d2h"],
             "sparse_n_sweeps": res_sp_dev.n_sweeps,
             "sparse_edges_equal": sparse_edges_equal,
+            "sparse_warm_edges_equal": sparse_warm_edges_equal,
             "sparse_scores_equal": sparse_scores_equal,
+            # actual XLA backend compiles of the device leg, counted by the
+            # jax.monitoring probe in kernels.bucketing: cold = build +
+            # search of the first pass (bounded by the CI compile budget),
+            # warm = the second pass (must be ~0: the cache-warmth gate)
+            "compiles": cold_compiles["compiles"],
+            "compile_secs": cold_compiles["compile_secs"],
+            "compiles_warm": warm_compiles["compiles"],
         }
         out[name] = metrics
         emit(
@@ -197,13 +253,15 @@ def run_batched(
              f"cands_per_s={metrics['cands_per_sec_serial']:.0f}")
         emit(f"scoremgr/{name}/sparse_joint_build", sparse_build, "mode=sparse")
         emit(
-            f"scoremgr/{name}/sparse_device_build", sp_build_secs,
+            f"scoremgr/{name}/sparse_device_build", sp_build_warm_secs,
+            f"cold={sp_build_cold_secs:.3f}s;compiles={metrics['compiles']};"
             f"launches={sp_build_launches};h2d={sp_build_tr['h2d']};"
             f"d2h={sp_build_tr['d2h']}",
         )
         emit(
-            f"scoremgr/{name}/sparse_device", sp_dev_secs,
+            f"scoremgr/{name}/sparse_device", sp_dev_warm_secs,
             f"speedup={metrics['sparse_device_speedup']:.2f}x;"
+            f"cold={sp_dev_cold_secs:.3f}s;"
             f"launches_per_sweep={metrics['sparse_launches_per_sweep']:.2f};"
             f"h2d={sp_transfers['h2d']};d2h={sp_transfers['d2h']};"
             f"edges_equal={sparse_edges_equal};scores_equal={sparse_scores_equal}",

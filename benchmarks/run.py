@@ -61,6 +61,29 @@ def main(argv: list[str] | None = None) -> None:
         if failed:
             print(f"# EQUIVALENCE FAILED: {', '.join(failed)}", file=sys.stderr)
             sys.exit(1)
+        # Compile-budget gate (same pattern): the cold device leg's actual
+        # XLA compile count must stay under the committed budget, and the
+        # warm leg must be cache-complete — a recompile regression (a shape
+        # escaping the bucket ladder) fails the PR here, not the next
+        # profiling session.
+        over = [
+            f"{name}:{metrics['compiles']}"
+            for name, metrics in payload["datasets"].items()
+            if metrics["compiles"] > bench_structure.COMPILE_BUDGET
+        ]
+        over_warm = [
+            f"{name}:warm={metrics['compiles_warm']}"
+            for name, metrics in payload["datasets"].items()
+            if metrics["compiles_warm"] > bench_structure.WARM_COMPILE_BUDGET
+        ]
+        if over or over_warm:
+            print(
+                f"# COMPILE BUDGET EXCEEDED: {', '.join(over + over_warm)} "
+                f"(budget={bench_structure.COMPILE_BUDGET}, "
+                f"warm_budget={bench_structure.WARM_COMPILE_BUDGET})",
+                file=sys.stderr,
+            )
+            sys.exit(1)
         return
 
     scale = 0.02 if a.fast else (1.0 if a.paper_scale else None)

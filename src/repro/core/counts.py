@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..kernels.bucketing import bucket_rows
 from .database import RelationalDatabase
 from .schema import (
     KIND_ENTITY_ATTR,
@@ -88,11 +89,14 @@ def set_dense_cell_budget(n_cells: int) -> int:
 def pow2_bucket(n: int) -> int:
     """Smallest power of two >= n.
 
-    Shared by every batched code path that pads a data-dependent dimension
-    (batch size, scatter rows, stacked parent/child extents, sparse code
+    Shared by every batched code path that pads a data-dependent *logical*
+    dimension (batch size, stacked parent/child extents, sparse code
     spaces) so jitted launch shapes stabilize across hill-climb sweeps —
     and so the chunking guards and the padding they protect can never
-    disagree about a bucket boundary.
+    disagree about a bucket boundary.  Data-dependent *row counts* use the
+    configurable geometric ladder in :mod:`repro.kernels.bucketing`
+    instead (:func:`~repro.kernels.bucketing.bucket_rows`), which the ops
+    wrappers apply to every device COO stream.
     """
     return 1 << max(0, n - 1).bit_length()
 
@@ -248,7 +252,10 @@ def stacked_family_tables(
             chunks.append(code)
         bins = xp.concatenate(chunks).astype(xp.int32)
         weights = xp.tile(cell_counts, len(families))
-        row_pad = bucket(int(bins.shape[0])) - int(bins.shape[0])
+        # scatter rows ride the kernels' geometric row ladder (not pow2):
+        # the padded histogram input shares compiled programs with every
+        # other bucketed stream of the run
+        row_pad = bucket_rows(int(bins.shape[0])) - int(bins.shape[0])
         # -1 keys are dropped by ct_count: row padding is free of mass
         bins = xp.pad(bins, (0, row_pad), constant_values=-1)
         weights = xp.pad(weights, (0, row_pad))

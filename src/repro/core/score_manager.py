@@ -60,7 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from ..kernels import ops
+from ..kernels import bucketing, ops
 from ..kernels.sparse_score import MAX_FAMILIES
 from .counts import (
     CTLike,
@@ -321,14 +321,19 @@ class ScoreManager(CountCache):
         cumulative ``prod(cards)`` (plus one padding slot per padded family)
         must stay under 2**31, its family count under the kernel's
         ``MAX_FAMILIES`` lane cap, and its ``B_pad * nnz`` rows under
-        :data:`SPARSE_BATCH_ROW_BUDGET`.  Typical sweep batches (bounded
-        family domains) stay ONE launch group.  Returns chunks of
-        ``(family, code_space)`` pairs so the scorer never recomputes the
-        spaces this guard was sized with.
+        :data:`SPARSE_BATCH_ROW_BUDGET` *after* the ops layer's bucket
+        padding (the stream is topped up to the ``kernels.bucketing`` row
+        ladder, at most one growth factor — the budget here is shrunk by
+        that factor so guard and padding can never disagree).  Typical
+        sweep batches (bounded family domains) stay ONE launch group.
+        Returns chunks of ``(family, code_space)`` pairs so the scorer
+        never recomputes the spaces this guard was sized with.
         """
         self._ensure_cells()
         nnz = int(self._cell_counts.shape[0])
-        max_rows_fams = max(1, self.SPARSE_BATCH_ROW_BUDGET // max(nnz, 1))
+        _, growth = bucketing.bucket_ladder()
+        max_rows = max(1, int(self.SPARSE_BATCH_ROW_BUDGET / growth))
+        max_rows_fams = max(1, max_rows // max(nnz, 1))
         space_guard = 2**31 - 2 * MAX_FAMILIES
 
         out: list[list[tuple[tuple[str, tuple[str, ...]], int]]] = []

@@ -84,7 +84,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from ..kernels import ops
+from ..kernels import bucketing, ops
 from .counts import (
     GROUP_AXIS,
     ContingencyTable,
@@ -378,6 +378,11 @@ def plan_marginal_batch(ct, keeps: list[tuple[str, ...]]):
 #: every valid composite code (< _MAX_CODE_SPACE) and matches the
 #: ``segment_min`` fill value of ``ops.coo_aggregate``.
 _PAD_CODE = np.iinfo(np.int64).max
+
+#: Padding entity-row id for bucket-padded device messages: int32 max —
+#: sorts after every valid row, never a legal row id, and identical to
+#: ``ops.PAD_KEY`` so ``ops.coo_join`` recognizes padded probes directly.
+_PAD_ROW = np.iinfo(np.int32).max
 
 
 @dataclass(frozen=True)
@@ -935,13 +940,18 @@ def sparse_contingency_table(
 class _DevMsg:
     """Device join-tree message: the ``jax.Array`` twin of :class:`_Msg`.
 
-    Same invariants as the host message — lexsorted by ``(rows, codes)``,
-    aggregated, no explicit zeros and no padding entries (device aggregation
-    results are compacted through one scalar sync before they become
-    messages) — so ``rows`` is ready to be the sorted side of the next
-    ``ops.coo_join``.  ``rows`` are int32 (entity row ids), ``codes`` int64
-    mixed-radix composite keys held under the module's ``enable_x64``
-    scoping contract, ``weights`` float32.
+    Same invariants as the host message — lexsorted by ``(rows, codes)``
+    and aggregated — except for **shape-bucket padding**: every column is
+    padded up to the ``kernels.bucketing`` row ladder with an identity
+    suffix (``rows = _PAD_ROW``, ``codes = _PAD_CODE``, ``weights = 0``),
+    so the whole build hits O(buckets) compiled programs instead of one
+    per data-dependent message length.  Valid entries form a prefix
+    (weights strictly positive — messages never subtract), pads a suffix
+    that sorts last, so ``rows`` is still ready to be the sorted side of
+    the next ``ops.coo_join`` (pad rows are never matched: every valid
+    entity row id is < ``_PAD_ROW``).  ``rows`` are int32 (entity row
+    ids), ``codes`` int64 mixed-radix composite keys held under the
+    module's ``enable_x64`` scoping contract, ``weights`` float32.
     """
 
     rows: jax.Array      # int32 entity row ids, non-decreasing
@@ -956,19 +966,24 @@ class _DevMsg:
 
 
 def _trim_pad(codes, counts):
-    """Slice a device aggregation result past its :data:`_PAD_CODE` tail.
+    """Slice a device aggregation result down to a bucket past its pad tail.
 
     The shared compaction step of every device-build canonicalization: pad
     entries are a contiguous int-max tail of the sorted result, so one
-    accounted scalar sync (the non-pad count) fixes the slice.  The dtype
-    comparison runs under ``enable_x64`` (the sentinel is an int64
-    literal); the blocking sync itself happens *outside* the scope, per
-    the module's scoping contract.
+    accounted scalar sync (the non-pad count) fixes the slice.  The slice
+    target is the ``bucketing`` row-ladder rung of the valid count — NOT
+    the exact count — so downstream shapes stay on the ladder and the
+    slice itself is one of a bounded set of (rung, rung) programs; the
+    residual tail (< one growth factor) keeps its ``_PAD_CODE``/zero-count
+    identity padding.  The dtype comparison runs under ``enable_x64`` (the
+    sentinel is an int64 literal); the blocking sync itself happens
+    *outside* the scope, per the module's scoping contract.
     """
     with enable_x64():
         n_valid_dev = jnp.sum(codes != _PAD_CODE)
     n_valid = ops.sync_scalar(n_valid_dev)
-    return codes[:n_valid], counts[:n_valid]
+    n_keep = min(int(codes.shape[0]), bucketing.bucket_rows(max(n_valid, 1)))
+    return codes[:n_keep], counts[:n_keep]
 
 
 def _dev_aggregate_pairs(rows, codes, weights, code_space: int, n_rows: int):
@@ -977,8 +992,13 @@ def _dev_aggregate_pairs(rows, codes, weights, code_space: int, n_rows: int):
     The device twin of :func:`_aggregate_pairs`: the ``(row, code)`` pair is
     packed into one int64 composite (row-major), canonicalized by a single
     ``ops.coo_aggregate`` launch, compacted past the int-max padding tail
-    (:func:`_trim_pad`), and unpacked.  Packing needs
-    ``n_rows * code_space`` headroom in int64 — raise rather than wrap.
+    (:func:`_trim_pad`, to a ladder rung), and unpacked.  Zero-weight
+    entries (bucket padding of the inputs — message weights proper are
+    strictly positive) are pinned to :data:`_PAD_CODE` *before* packing so
+    their garbage row/code values can neither overflow the packing nor
+    land on a real cell, and pinned back to the ``_PAD_ROW``/``_PAD_CODE``
+    message padding after unpacking.  Packing needs ``n_rows * code_space``
+    headroom in int64 — raise rather than wrap.
     """
     if int(rows.shape[0]) == 0:
         return rows, codes, weights
@@ -988,10 +1008,20 @@ def _dev_aggregate_pairs(rows, codes, weights, code_space: int, n_rows: int):
             "overflows int64 — use the host builder for this query"
         )
     with enable_x64():
-        comp = rows.astype(jnp.int64) * jnp.int64(code_space) + codes
+        valid = weights != 0.0
+        comp = jnp.where(
+            valid,
+            jnp.where(valid, rows, 0).astype(jnp.int64) * jnp.int64(code_space)
+            + jnp.where(valid, codes, 0),
+            _PAD_CODE,
+        )
     u, s = _trim_pad(*ops.coo_aggregate(comp, weights))
     with enable_x64():
-        return (u // code_space).astype(jnp.int32), u % code_space, s
+        ok = s != 0.0
+        u_safe = jnp.where(ok, u, 0)
+        rows_u = jnp.where(ok, u_safe // code_space, _PAD_ROW).astype(jnp.int32)
+        codes_u = jnp.where(ok, u_safe % code_space, _PAD_CODE)
+        return rows_u, codes_u, s
 
 
 def _compact_tail(ct: DeviceSparseCT) -> DeviceSparseCT:
@@ -1017,16 +1047,23 @@ def _dev_combine(a: _DevMsg, b: _DevMsg) -> _DevMsg:
     Mirrors :func:`_combine_sparse`: probe with ``a`` (so the output stays
     ``a``-major and therefore lexsorted — matches within one row follow
     ``b``'s code order), gather both sides, concatenate code spaces.
-    Unique and lexsorted by construction — no aggregation pass.
+    Unique and lexsorted by construction — no aggregation pass.  The
+    bucketed join's garbage suffix (slots past ``total``) is pinned to the
+    message padding identity, preserving the pads-are-a-suffix invariant.
     """
     cb = b.code_space
-    idx_b, idx_a, _total = ops.coo_join(b.rows, a.rows)
+    idx_b, idx_a, valid, _total = ops.coo_join(b.rows, a.rows)
     with enable_x64():
-        codes = a.codes[idx_a] * jnp.int64(cb) + b.codes[idx_b]
+        # gather through the mask first: garbage-slot gathers may surface
+        # _PAD_CODE values whose radix shift would overflow int64
+        ca = jnp.where(valid, a.codes[idx_a], 0)
+        codes = jnp.where(valid, ca * jnp.int64(cb) + b.codes[idx_b], _PAD_CODE)
+        rows = jnp.where(valid, a.rows[idx_a], _PAD_ROW)
+        weights = jnp.where(valid, a.weights[idx_a] * b.weights[idx_b], 0.0)
     return _DevMsg(
-        rows=a.rows[idx_a],
+        rows=rows,
         codes=codes,
-        weights=a.weights[idx_a] * b.weights[idx_b],
+        weights=weights,
         cards=a.cards + b.cards,
         folded=a.folded + b.folded,
     )
@@ -1037,6 +1074,30 @@ def _dev_fold_all(msgs: list[_DevMsg]) -> _DevMsg:
     for m in msgs[1:]:
         out = _dev_combine(out, m)
     return out
+
+
+def _pad_msg(msg: _DevMsg) -> _DevMsg:
+    """Bucket-pad a device message's columns with the identity suffix.
+
+    The entry point of the shape-bucket discipline: entity-table-sized
+    initial messages (and the ``restrict`` path's single-row message) are
+    topped up to the ``kernels.bucketing`` row ladder so every downstream
+    join, gather and aggregation sees ladder shapes.  Pad entries are
+    ``(_PAD_ROW, _PAD_CODE, 0)`` — sorted after every valid entry, matched
+    by no probe, carrying no mass.
+    """
+    n = int(msg.rows.shape[0])
+    n_pad = bucketing.bucket_rows(n)
+    if n_pad <= n:
+        return msg
+    w = n_pad - n
+    with enable_x64():
+        codes = jnp.concatenate(
+            [msg.codes, jnp.full((w,), _PAD_CODE, jnp.int64)]
+        )
+    rows = jnp.concatenate([msg.rows, jnp.full((w,), _PAD_ROW, jnp.int32)])
+    weights = jnp.concatenate([msg.weights, jnp.zeros((w,), jnp.float32)])
+    return _DevMsg(rows, codes, weights, msg.cards, msg.folded)
 
 
 def device_sparse_ct_conditional(
@@ -1088,7 +1149,7 @@ def device_sparse_ct_conditional(
             # no data-dependent compaction needed
             r = plan.restrict[fid]
             rows, codes, weights = rows[r:r + 1], codes[r:r + 1], weights[r:r + 1]
-        return _DevMsg(rows, codes, weights, cards, folded)
+        return _pad_msg(_DevMsg(rows, codes, weights, cards, folded))
 
     def eliminate_leaf(msg: _DevMsg, rname: str, leaf: str, other: str) -> _DevMsg:
         """Push a leaf's message through a relationship (device FK join)."""
@@ -1103,11 +1164,14 @@ def device_sparse_ct_conditional(
             rcode = jnp.zeros((int(fk_leaf.shape[0]),), jnp.int64)
             for rv, stride in zip(plan.rel_attrs[rname], radix_strides(r_cards)):
                 rcode = rcode + rel.attrs[rv.column].astype(jnp.int64) * jnp.int64(stride)
-        idx_m, idx_r, _total = ops.coo_join(msg.rows, fk_leaf)
+        idx_m, idx_r, valid, _total = ops.coo_join(msg.rows, fk_leaf)
         with enable_x64():
-            codes = msg.codes[idx_m] * jnp.int64(d_r) + rcode[idx_r]
+            cm = jnp.where(valid, msg.codes[idx_m], 0)
+            codes = jnp.where(valid, cm * jnp.int64(d_r) + rcode[idx_r], _PAD_CODE)
+            weights = jnp.where(valid, msg.weights[idx_m], 0.0)
+            rows_j = jnp.where(valid, fk_other[idx_r].astype(jnp.int32), _PAD_ROW)
         rows, codes, weights = _dev_aggregate_pairs(
-            fk_other[idx_r].astype(jnp.int32), codes, msg.weights[idx_m],
+            rows_j, codes, weights,
             msg.code_space * d_r, fovar_n_rows(other),
         )
         return _DevMsg(rows, codes, weights, msg.cards + r_cards, msg.folded + r_names)
@@ -1117,10 +1181,14 @@ def device_sparse_ct_conditional(
         msg = _dev_fold_all(msgs)
         if fid == plan.group_fovar:
             with enable_x64():
-                codes = (
-                    msg.rows.astype(jnp.int64) * jnp.int64(msg.code_space)
-                    + msg.codes
-                )  # lexsorted => still sorted
+                ok = msg.weights != 0.0
+                codes = jnp.where(
+                    ok,
+                    jnp.where(ok, msg.rows, 0).astype(jnp.int64)
+                    * jnp.int64(msg.code_space)
+                    + jnp.where(ok, msg.codes, 0),
+                    _PAD_CODE,
+                )  # lexsorted => still sorted (padding is a suffix)
             return (
                 codes, msg.weights,
                 [fovar_n_rows(fid)] + msg.cards,
@@ -1137,6 +1205,7 @@ def device_sparse_ct_conditional(
     vec_counts = jnp.ones((1,), jnp.float32)
     all_cards: list[int] = []
     all_folded: list[str] = []
+    n_attr_comps = 0
     for comp in plan.comps:
         c_codes, c_counts, cards, folded = _contract_join_tree(
             plan, cat, cond_true, comp,
@@ -1153,13 +1222,36 @@ def device_sparse_ct_conditional(
             vec_counts = vec_counts * scalar
             continue
         c = math.prod(cards)
+        n_attr_comps += 1
+        new_counts = (vec_counts[:, None] * c_counts[None, :]).reshape(-1)
         with enable_x64():
-            vec_codes = (
-                vec_codes[:, None] * jnp.int64(c) + c_codes[None, :]
-            ).reshape(-1)
-        vec_counts = (vec_counts[:, None] * c_counts[None, :]).reshape(-1)
+            # pad entries of either factor (count 0, code _PAD_CODE) would
+            # overflow the radix shift — zero them through the mask, then
+            # re-pin the product's dead cells to the padding identity
+            va = jnp.where(vec_counts != 0.0, vec_codes, 0)
+            vb = jnp.where(c_counts != 0.0, c_codes, 0)
+            vec_codes = jnp.where(
+                new_counts != 0.0,
+                (va[:, None] * jnp.int64(c) + vb[None, :]).reshape(-1),
+                _PAD_CODE,
+            )
+        vec_counts = new_counts
         all_cards += cards
         all_folded += folded
+        if n_attr_comps > 1:
+            # the pairwise product interleaves the factors' bucket-padding
+            # suffixes into the interior AND multiplies their lengths —
+            # left alone, the ladder's base floor would compound across
+            # components (base^3 rows for a 3-component query of tiny
+            # factors).  One aggregate + compaction after each multiply
+            # keeps the running vector at its #SS bucket, so every product
+            # stays #SS x bucket and the final transpose re-encodes at #SS.
+            tmp = _compact_tail(
+                DeviceSparseCT.build(
+                    tuple(all_folded), tuple(all_cards), vec_codes, vec_counts
+                )
+            )
+            vec_codes, vec_counts = tmp.codes, tmp.counts
 
     ct = DeviceSparseCT(tuple(all_folded), tuple(all_cards), vec_codes, vec_counts)
     out_order = tuple(attr_rvs)
@@ -1261,10 +1353,15 @@ def device_sparse_contingency_table(
             codes = jnp.concatenate([f_codes, t_codes])
             counts = jnp.concatenate([f_count.counts, t_ct.counts])
         rel_vid = cat.rel_var_of(r).vid
-        return DeviceSparseCT.build(
-            (rel_vid,) + shared + r_attr_vids,
-            (2,) + shared_cards + r_cards,
-            codes, counts,
+        # compact each recursion level back to its #SS bucket (one scalar
+        # sync) so branch concatenations can't snowball padding through
+        # the Möbius levels
+        return _compact_tail(
+            DeviceSparseCT.build(
+                (rel_vid,) + shared + r_attr_vids,
+                (2,) + shared_cards + r_cards,
+                codes, counts,
+            )
         )
 
     full = recurse(tuple(rel_names), (), attr_rvs)

@@ -5,8 +5,21 @@ joins), the parameter manager (CT -> CPT normalization), score computation
 (count x log-parameter contraction) and block test-set prediction (the
 grouped scoring matmul).  Each hot spot has a Pallas kernel (<name>.py), a
 pure-jnp oracle (ref.py) and a jitted dispatching wrapper (ops.py).
+
+``bucketing.py`` is the shape discipline under all of them: every device
+COO stream is padded to a small geometric row ladder so a learning run
+compiles O(buckets) XLA programs, with compile accounting (the CI budget's
+probe) and persistent-cache/donation knobs alongside.
 """
 
+from .bucketing import (
+    bucket_ladder,
+    bucket_rows,
+    compile_counts,
+    enable_persistent_cache,
+    reset_compile_counts,
+    set_bucket_ladder,
+)
 from .ops import (
     block_predict,
     coo_aggregate,
@@ -21,7 +34,9 @@ from .ops import (
 )
 
 __all__ = [
-    "block_predict", "coo_aggregate", "ct_count", "factor_loglik",
+    "block_predict", "bucket_ladder", "bucket_rows", "compile_counts",
+    "coo_aggregate", "ct_count", "enable_persistent_cache", "factor_loglik",
     "factor_loglik_batched", "mle_cpt", "mle_cpt_batched",
-    "sorted_segment_sum", "sparse_family_score", "sparse_family_score_batched",
+    "reset_compile_counts", "set_bucket_ladder", "sorted_segment_sum",
+    "sparse_family_score", "sparse_family_score_batched",
 ]

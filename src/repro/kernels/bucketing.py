@@ -1,0 +1,223 @@
+"""Shape-bucketed device execution: the compile-budget layer.
+
+Every device COO stream in this codebase has a data-dependent length — join
+expansions, Möbius subtractions, aggregation compactions, per-sweep score
+batches.  Left alone, each distinct length traces and compiles a fresh XLA
+program: a cold device-side CT build pays hundreds of backend compiles
+(seconds of wall time for milliseconds of actual compute), and a
+production system serving many schemas would re-trace per join shape
+forever.  This module is the fix, in three parts:
+
+**1. The bucket ladder.**  :func:`bucket_rows` maps any row count onto a
+small geometric ladder (``base * growth^k``, default 128 x 2.0).  The ops
+wrappers pad every COO operand up to its rung with *identity padding* —
+int-max sentinel codes / zero weights, which every COO consumer already
+treats as absent — so all joins, subtractions and sweep scorings of a
+learning run hit O(buckets) compiled programs instead of one per
+data-dependent shape.  Results are unchanged: padding carries no mass and
+sorts after every valid code.  Knobs: ``REPRO_BUCKET_BASE`` /
+``REPRO_BUCKET_GROWTH`` env vars or :func:`set_bucket_ladder`.
+
+**2. Compile accounting.**  A ``jax.monitoring`` duration listener on the
+``backend_compile`` event counts *actual* XLA compiles (cache hits are
+free), exposed as :func:`compile_counts` / :func:`reset_compile_counts`
+next to the launch/transfer counters in :mod:`repro.kernels.ops`.  The
+benchmarks record it per dataset and CI fails when it exceeds the
+committed budget — recompile regressions fail the PR, not the next
+profiling session.
+
+**3. Warm starts.**  ``REPRO_JAX_CACHE_DIR`` (or
+:func:`enable_persistent_cache`) wires JAX's persistent compilation cache
+so bucketed programs survive process restarts, and
+:func:`donate_buffers` gates input-buffer donation for the wrapper-owned
+padded temporaries (``REPRO_DONATE=auto|0|1``; auto enables it off-CPU,
+where XLA actually implements donation).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+
+# ---------------------------------------------------------------------------
+# The bucket ladder
+# ---------------------------------------------------------------------------
+
+_DEFAULT_BASE = 128
+_DEFAULT_GROWTH = 2.0
+
+
+def _validated_ladder(base: int, growth: float) -> tuple[int, float]:
+    base, growth = int(base), float(growth)
+    if base < 1:
+        raise ValueError(f"bucket base must be >= 1, got {base}")
+    if growth <= 1.0:
+        # growth == 1 would make every row count its own "bucket" and
+        # silently bring the per-shape recompile tax back
+        raise ValueError(f"bucket growth must be > 1, got {growth}")
+    return base, growth
+
+
+def _env_ladder() -> tuple[int, float]:
+    raw_base = os.environ.get("REPRO_BUCKET_BASE", "").strip()
+    raw_growth = os.environ.get("REPRO_BUCKET_GROWTH", "").strip()
+    try:
+        base = int(raw_base) if raw_base else _DEFAULT_BASE
+        growth = float(raw_growth) if raw_growth else _DEFAULT_GROWTH
+    except ValueError as e:
+        # fail loudly, like REPRO_KERNEL_IMPL: a typo'd value would silently
+        # fall back to defaults and defeat the knob
+        raise ValueError(
+            f"REPRO_BUCKET_BASE / REPRO_BUCKET_GROWTH must parse as int / "
+            f"float, got {raw_base!r} / {raw_growth!r}"
+        ) from e
+    return _validated_ladder(base, growth)
+
+
+_BASE, _GROWTH = _env_ladder()
+
+
+def bucket_ladder() -> tuple[int, float]:
+    """Current ``(base, growth)`` of the row-count bucket ladder."""
+    return _BASE, _GROWTH
+
+
+def set_bucket_ladder(
+    base: int | None = None, growth: float | None = None
+) -> tuple[int, float]:
+    """Set the ladder; returns the previous ``(base, growth)``.
+
+    Tests shrink the base to force padding on tiny inputs; production
+    tuning widens ``growth`` to trade sort overhead (each stream is padded
+    by at most one growth factor) against program count.
+    """
+    global _BASE, _GROWTH
+    old = (_BASE, _GROWTH)
+    _BASE, _GROWTH = _validated_ladder(
+        _BASE if base is None else base, _GROWTH if growth is None else growth
+    )
+    return old
+
+
+def bucket_rows(n: int) -> int:
+    """Smallest ladder rung >= ``n`` (``0`` stays ``0``: empties never pad).
+
+    Rungs are generated iteratively (``next = ceil(rung * growth)``) so the
+    ladder is a single consistent set of sizes regardless of which ``n``
+    asks — no floating-point boundary can put two callers on different
+    rungs for the same count.
+    """
+    n = int(n)
+    if n <= 0:
+        return 0
+    rung = _BASE
+    while rung < n:
+        rung = max(rung + 1, math.ceil(rung * _GROWTH))
+    return rung
+
+
+# ---------------------------------------------------------------------------
+# Compile accounting
+# ---------------------------------------------------------------------------
+
+#: The jax.monitoring event fired once per actual XLA backend compile
+#: (tracing and compilation-cache hits do NOT fire it) — the honest probe
+#: behind the benchmarks' ``compiles`` field and the CI compile budget.
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_COMPILES = {"compiles": 0, "compile_secs": 0.0}
+
+
+def _on_compile_event(event: str, duration: float, **kw) -> None:
+    if event == _COMPILE_EVENT:
+        _COMPILES["compiles"] += 1
+        _COMPILES["compile_secs"] += duration
+
+
+# getattr-guarded: jax.monitoring has carried this registration API since
+# 0.4, but a missing symbol on some future version should degrade to
+# compiles=0 (a lenient gate), never to an import error.
+_register = getattr(jax.monitoring, "register_event_duration_secs_listener", None)
+if _register is not None:
+    _register(_on_compile_event)
+
+
+def compile_probe_active() -> bool:
+    """Whether the backend-compile listener could be registered at all.
+
+    The compile-budget gate and the cache-warmth tests are meaningful only
+    when this is True; on a JAX without the monitoring hook they degrade
+    to lenient no-ops rather than false failures.
+    """
+    return _register is not None
+
+
+def reset_compile_counts() -> None:
+    """Zero the compile tally (benchmark bracketing)."""
+    _COMPILES["compiles"] = 0
+    _COMPILES["compile_secs"] = 0.0
+
+
+def compile_counts() -> dict:
+    """``{"compiles": n, "compile_secs": s}`` since the last reset."""
+    return dict(_COMPILES)
+
+
+def total_compiles() -> int:
+    return _COMPILES["compiles"]
+
+
+# ---------------------------------------------------------------------------
+# Persistent compilation cache + donation policy
+# ---------------------------------------------------------------------------
+
+
+def enable_persistent_cache(cache_dir) -> None:
+    """Point JAX's persistent compilation cache at ``cache_dir``.
+
+    With the bucket ladder bounding the set of program shapes, the cache
+    makes even the *first* build of a process warm: every (op, rung)
+    program compiled by any previous run is deserialized instead of
+    recompiled.  Thresholds are zeroed so the small bucketed programs
+    qualify (by default JAX only persists compiles >1s).
+    """
+    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+
+
+_CACHE_ENV = os.environ.get("REPRO_JAX_CACHE_DIR", "").strip()
+if _CACHE_ENV:
+    enable_persistent_cache(_CACHE_ENV)
+
+
+_DONATE_MODES = ("auto", "0", "1")
+_DONATE = os.environ.get("REPRO_DONATE", "auto").strip().lower() or "auto"
+if _DONATE not in _DONATE_MODES:
+    raise ValueError(f"REPRO_DONATE must be one of {_DONATE_MODES}, got {_DONATE!r}")
+
+
+def set_donation(mode: str) -> str:
+    """Set the donation policy (``auto|0|1``); returns the previous mode."""
+    global _DONATE
+    if mode not in _DONATE_MODES:
+        raise ValueError(f"donation mode must be one of {_DONATE_MODES}, got {mode!r}")
+    old, _DONATE = _DONATE, mode
+    return old
+
+
+def donate_buffers() -> bool:
+    """Whether ops wrappers should donate their padded input temporaries.
+
+    Donation is only ever applied to buffers the wrapper itself created by
+    bucket-padding (never to caller arrays, whose identity must survive the
+    call).  ``auto`` enables it away from CPU — XLA:CPU ignores donation
+    and warns, so forcing it there (``REPRO_DONATE=1``) is for tests only.
+    """
+    if _DONATE == "1":
+        return True
+    if _DONATE == "0":
+        return False
+    return jax.default_backend() != "cpu"

@@ -26,8 +26,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from . import ref
+from . import bucketing, ref
 from .block_predict import block_predict_pallas
+from .bucketing import (  # noqa: F401  (re-exported next to launch/transfer counters)
+    compile_counts,
+    reset_compile_counts,
+    total_compiles,
+)
 from .coo_join import coo_join_expand_pallas
 from .ct_count import ct_count_pallas
 from .factor_loglik import factor_loglik_batched_pallas, factor_loglik_pallas
@@ -280,8 +285,7 @@ def block_predict(counts: jax.Array, log_cpt: jax.Array, *, impl: str = "auto") 
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _coo_aggregate_jit(codes: jax.Array, weights: jax.Array):
+def _coo_aggregate_impl(codes: jax.Array, weights: jax.Array):
     """Canonicalize a COO vector on device: sort, unique, segment-sum.
 
     Fixed-shape twin of the host ``aggregate_codes``: the output keeps the
@@ -305,6 +309,35 @@ def _coo_aggregate_jit(codes: jax.Array, weights: jax.Array):
     return uniq, sums.astype(jnp.float32)
 
 
+_coo_aggregate_jit = jax.jit(_coo_aggregate_impl)
+#: Donating twin: only ever fed the wrapper-owned padded temporaries (see
+#: ``bucketing.donate_buffers`` — caller buffers are never donated).
+_coo_aggregate_jit_donated = jax.jit(_coo_aggregate_impl, donate_argnums=(0, 1))
+
+
+def _pad_coo_stream(codes: jax.Array, weights: jax.Array, pad_code) -> tuple:
+    """Bucket-pad a COO stream with identity padding; -> (codes, weights, padded?).
+
+    Padding entries carry ``pad_code`` and weight 0.  Aggregation callers
+    pass the code dtype's int-max (sorts after every valid code, matches
+    ``segment_min``'s fill, merges into the dead tail); the fused scorer
+    passes 0 (codes must stay inside the family code space — zero-weight
+    duplicates add exactly nothing to its segment sums).  Must run inside
+    the caller's ``enable_x64`` scope when codes are int64.
+    """
+    n = int(codes.shape[0])
+    n_pad = bucketing.bucket_rows(n)
+    if n_pad <= n:
+        return codes, weights, False
+    codes = jnp.concatenate(
+        [codes, jnp.full((n_pad - n,), pad_code, codes.dtype)]
+    )
+    weights = jnp.concatenate(
+        [weights, jnp.zeros((n_pad - n,), weights.dtype)]
+    )
+    return codes, weights, True
+
+
 def coo_aggregate(codes: jax.Array, weights: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Sort-then-segment-sum COO canonicalization, entirely on device.
 
@@ -312,9 +345,15 @@ def coo_aggregate(codes: jax.Array, weights: jax.Array) -> tuple[jax.Array, jax.
     ``aggregate_codes``: ONE fused sort + segment reduction instead of a
     host ``np.argsort`` round-trip.  ``codes`` may be int64 (mixed-radix
     composite keys run under a local ``enable_x64`` scope) or int32.
-    Returns ``(uniq_codes, sums)`` of the *input length*: ascending unique
-    codes first, int-max / zero-count padding after (see
-    :func:`_coo_aggregate_jit`).
+
+    Inputs are bucket-padded to the ``bucketing`` row ladder (int-max
+    codes, zero weights — identity padding) so every aggregation of a
+    learning run compiles O(buckets) sort programs instead of one per
+    data-dependent stream length; when padding created fresh temporaries
+    and the donation policy allows, their buffers are donated to the
+    compiled program.  Returns ``(uniq_codes, sums)`` of the *bucketed*
+    length: ascending unique codes first, int-max / zero-count padding
+    after (see :func:`_coo_aggregate_impl`).
     """
     _LAUNCHES["coo_aggregate"] += 1
     with enable_x64():
@@ -323,7 +362,57 @@ def coo_aggregate(codes: jax.Array, weights: jax.Array) -> tuple[jax.Array, jax.
             # empty stream: nothing to canonicalize (the fixed-shape
             # program below needs n >= 1), mirror the host guard
             return codes, weights.astype(jnp.float32)
+        pad_code = jnp.iinfo(codes.dtype).max
+        codes, weights, padded = _pad_coo_stream(codes, weights, pad_code)
+        if padded and bucketing.donate_buffers():
+            return _coo_aggregate_jit_donated(codes, weights)
         return _coo_aggregate_jit(codes, weights)
+
+
+#: Key-column pad sentinel for bucketed joins: int32-max never collides with
+#: a valid entity row id, sorts after every valid key, and is recognized on
+#: the probe side (padded probes match nothing).  Shared with the sparse
+#: build's message padding (``sparse_counts._PAD_ROW``).
+PAD_KEY = np.iinfo(np.int32).max
+
+
+@jax.jit
+def _coo_join_probe_jit(sorted_keys: jax.Array, probe_keys: jax.Array):
+    """Match table of a sort-merge join, one fused program per shape bucket.
+
+    ``lo``/``cnt`` locate each probe key's match run inside the sorted
+    column; :data:`PAD_KEY` probes (bucket padding of either the wrapper or
+    an upstream message) are masked to zero matches — pad keys on the
+    sorted side are never matched because every valid probe is <
+    ``PAD_KEY``.  ``total`` is the int64 pair count (traced under the
+    caller's ``enable_x64`` scope).
+    """
+    lo = jnp.searchsorted(sorted_keys, probe_keys, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(sorted_keys, probe_keys, side="right").astype(jnp.int32)
+    cnt = jnp.where(probe_keys == PAD_KEY, 0, hi - lo)
+    total = jnp.sum(cnt, dtype=jnp.int64)
+    return lo, cnt, total
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _prefix_mask_jit(total: jax.Array, n: int) -> jax.Array:
+    """``arange(n) < total`` — the valid-prefix mask of a bucketed result."""
+    return jnp.arange(n, dtype=jnp.int32) < total
+
+
+def _pad_keys(keys: jax.Array) -> jax.Array:
+    """Bucket-pad an int32 key column with the :data:`PAD_KEY` sentinel."""
+    n = int(keys.shape[0])
+    n_pad = bucketing.bucket_rows(n)
+    if n_pad <= n:
+        return keys
+    return jnp.concatenate([keys, jnp.full((n_pad - n,), PAD_KEY, jnp.int32)])
+
+
+#: Jitted oracle expansion (the Pallas twin jits internally): without this,
+#: the ref path's searchsorted+gathers compile as a handful of separate
+#: eager programs per shape bucket.
+_coo_join_expand_ref_jit = jax.jit(ref.coo_join_expand_ref, static_argnums=(2,))
 
 
 def coo_join(
@@ -331,62 +420,67 @@ def coo_join(
     probe_keys: jax.Array,
     *,
     impl: str = "auto",
-) -> tuple[jax.Array, jax.Array, int]:
+) -> tuple[jax.Array, jax.Array, jax.Array, int]:
     """Sort-merge join: match every probe key against a sorted key column.
 
     The device-resident foreign-key join of the sparse CT build (paper §IV):
     ``sorted_keys`` is a COO message's (sorted, duplicate-legal) entity-row
     column, ``probe_keys`` a relationship table's FK column (any order).
-    Returns ``(idx_sorted, idx_probe, total)``: ``total`` matched pairs
-    (synced to host — the one accounted scalar d2h this join pays, needed
-    to fix the expansion's launch shape), with pair ``p`` joining
-    ``sorted_keys[idx_sorted[p]]`` to ``probe_keys[idx_probe[p]]``,
-    probe-major — so gathering through ``idx_probe`` preserves the probe
-    side's order and per-probe match runs stay contiguous.
+    Both sides may carry a :data:`PAD_KEY` bucket-padding suffix (the
+    wrapper tops them up to the ``bucketing`` row ladder either way):
+    padded probes match nothing, padded sorted keys are never matched.
 
-    The match table itself (``lo``/``cnt`` per probe key) is two XLA
-    ``searchsorted`` passes; ``impl`` picks the expansion: the Pallas
-    rank/gather kernel (:mod:`repro.kernels.coo_join`) or the jnp
-    ``searchsorted`` oracle.  The expansion length is padded to a
-    power-of-two bucket so jitted launch shapes stabilize across the
-    build's data-dependent join sizes.
+    Returns ``(idx_sorted, idx_probe, valid, total)``: ``total`` matched
+    pairs (synced to host — the one accounted scalar d2h this join pays,
+    needed for the overflow guard and downstream size bookkeeping), with
+    the index arrays at the *bucketed* length ``bucket_rows(total)`` and
+    ``valid`` the boolean prefix mask — pair ``p`` (where ``valid[p]``)
+    joins ``sorted_keys[idx_sorted[p]]`` to ``probe_keys[idx_probe[p]]``,
+    probe-major, so gathering through ``idx_probe`` preserves the probe
+    side's order and per-probe match runs stay contiguous.  Slots past
+    ``total`` hold clamped garbage indices: callers MUST mask everything
+    gathered through them (weights to 0, codes to the pad sentinel).
+
+    The match table (``lo``/``cnt`` per probe key) is one fused jitted
+    program; ``impl`` picks the expansion: the Pallas rank/gather kernel
+    (:mod:`repro.kernels.coo_join`) or the jitted jnp ``searchsorted``
+    oracle.  With all three shapes (sorted, probe, expansion) on the
+    bucket ladder, a whole learning run's joins compile O(buckets)
+    programs.
     """
     sorted_keys = jnp.asarray(sorted_keys, jnp.int32)
     probe_keys = jnp.asarray(probe_keys, jnp.int32)
+    empty = jnp.zeros((0,), jnp.int32)
+    no_match = (empty, empty, jnp.zeros((0,), bool), 0)
     if int(probe_keys.shape[0]) == 0 or int(sorted_keys.shape[0]) == 0:
         # no device work dispatched: keep the launch tally honest (it is
         # the bench's build-launch headline number)
-        empty = jnp.zeros((0,), jnp.int32)
-        return empty, empty, 0
+        return no_match
     _LAUNCHES["coo_join"] += 1
-    lo = jnp.searchsorted(sorted_keys, probe_keys, side="left").astype(jnp.int32)
-    hi = jnp.searchsorted(sorted_keys, probe_keys, side="right").astype(jnp.int32)
-    cnt = hi - lo
+    sorted_keys = _pad_keys(sorted_keys)
+    probe_keys = _pad_keys(probe_keys)
     with enable_x64():
-        total_dev = jnp.sum(cnt, dtype=jnp.int64)
+        lo, cnt, total_dev = _coo_join_probe_jit(sorted_keys, probe_keys)
     total = sync_scalar(total_dev)
     if total == 0:
-        empty = jnp.zeros((0,), jnp.int32)
-        return empty, empty, 0
+        return no_match
     if total >= 2**31:
         raise OverflowError(
             f"sort-merge join expands to {total:.3g} pairs; beyond the int32 "
             "index space of the device build"
         )
     # bucket the data-dependent expansion length to stabilize launch shapes
-    padded = 1 << (total - 1).bit_length()
+    padded = bucketing.bucket_rows(total)
     use, interp = _use_pallas(impl)
     if use:
         ia, ib = coo_join_expand_pallas(lo, cnt, padded, interpret=interp)
     else:
-        ia, ib = ref.coo_join_expand_ref(lo, cnt, padded)
-    return ia[:total], ib[:total], total
+        ia, ib = _coo_join_expand_ref_jit(lo, cnt, padded)
+    valid = _prefix_mask_jit(jnp.int32(total), padded)
+    return ia, ib, valid, total
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_fams", "alpha", "use_pallas", "interpret")
-)
-def _fused_sparse_score_jit(
+def _fused_sparse_score_impl(
     codes: jax.Array,
     weights: jax.Array,
     bounds: jax.Array,
@@ -442,6 +536,16 @@ def _fused_sparse_score_jit(
     )
 
 
+_SCORE_STATICS = ("num_fams", "alpha", "use_pallas", "interpret")
+_fused_sparse_score_jit = jax.jit(
+    _fused_sparse_score_impl, static_argnames=_SCORE_STATICS
+)
+#: Donating twin — fed only the wrapper-owned bucket-padded stream temps.
+_fused_sparse_score_jit_donated = jax.jit(
+    _fused_sparse_score_impl, static_argnames=_SCORE_STATICS, donate_argnums=(0, 1)
+)
+
+
 def sparse_family_score_batched(
     codes: jax.Array,
     weights: jax.Array,
@@ -482,8 +586,20 @@ def sparse_family_score_batched(
         # realized cells); the fixed-shape program below needs n >= 1
         return jnp.zeros((num_fams,), jnp.float32)
     with enable_x64():
-        return _fused_sparse_score_jit(
-            jnp.asarray(codes), jnp.asarray(weights),
+        # Bucket-pad the concatenated stream so per-sweep batches of any
+        # size share O(buckets) compiled programs.  Pad elements carry
+        # code 0 / weight 0: zero-weight duplicates are free by the fused
+        # scorer's contract (they add exactly 0.0 to every segment sum).
+        codes, weights, padded = _pad_coo_stream(
+            jnp.asarray(codes), jnp.asarray(weights), 0
+        )
+        fn = (
+            _fused_sparse_score_jit_donated
+            if padded and bucketing.donate_buffers()
+            else _fused_sparse_score_jit
+        )
+        return fn(
+            codes, weights,
             jnp.asarray(bounds), jnp.asarray(child_cards),
             num_fams, float(alpha), use, interp,
         )

@@ -1,0 +1,267 @@
+"""Shape-bucketed execution layer: ladder algebra, identity padding
+(padded vs unpadded results bit-identical across bucket boundaries,
+including empty inputs and exact-bucket-size edges), compile accounting,
+and cache warmth (a second same-bucket build performs zero new XLA
+compiles)."""
+
+import math
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.counts import joint_contingency_table
+from repro.core.database import university_db
+from repro.core.sparse_counts import (
+    DeviceSparseCT,
+    SparseCT,
+    aggregate_codes,
+    sparse_family_stats,
+)
+from repro.kernels import bucketing, ops
+
+
+@pytest.fixture
+def tiny_ladder():
+    """Shrink the ladder so single-digit inputs exercise real padding."""
+    old = bucketing.set_bucket_ladder(4, 2.0)
+    yield
+    bucketing.set_bucket_ladder(*old)
+
+
+# ---------------------------------------------------------------------------
+# The ladder itself
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_rows_ladder_properties(tiny_ladder):
+    assert bucketing.bucket_rows(0) == 0  # empties never pad
+    for n in range(1, 200):
+        b = bucketing.bucket_rows(n)
+        assert b >= n
+        assert bucketing.bucket_rows(b) == b  # rungs are fixed points
+        assert b <= bucketing.bucket_rows(n + 1)  # monotone
+    # base 4, growth 2: the classic pow2 ladder with a floor
+    assert [bucketing.bucket_rows(n) for n in (1, 4, 5, 8, 9)] == [4, 4, 8, 8, 16]
+
+
+def test_bucket_ladder_fractional_growth():
+    old = bucketing.set_bucket_ladder(100, 1.5)
+    try:
+        rungs = sorted({bucketing.bucket_rows(n) for n in range(1, 1000)})
+        assert rungs[0] == 100
+        for a, b in zip(rungs, rungs[1:]):
+            assert b == max(a + 1, math.ceil(a * 1.5))
+    finally:
+        bucketing.set_bucket_ladder(*old)
+
+
+def test_bucket_ladder_validation():
+    with pytest.raises(ValueError):
+        bucketing.set_bucket_ladder(0, 2.0)
+    with pytest.raises(ValueError):
+        bucketing.set_bucket_ladder(8, 1.0)  # growth 1 = no bucketing at all
+    with pytest.raises(ValueError):
+        bucketing.set_donation("yes")
+
+
+# ---------------------------------------------------------------------------
+# coo_aggregate: identity padding across bucket boundaries
+# ---------------------------------------------------------------------------
+
+
+def _agg_host(u, s):
+    """Drop the device result's padding/zero cells -> host canonical form."""
+    u, s = np.asarray(u), np.asarray(s)
+    keep = s != 0.0
+    return u[keep], s[keep]
+
+
+@pytest.mark.parametrize("n", [1, 3, 4, 5, 8, 9, 16])
+def test_coo_aggregate_padded_identity(tiny_ladder, n):
+    """Bucket-padded aggregation is bit-identical to the host oracle at
+    below-/at-/above-boundary sizes of the (4, 2.0) ladder."""
+    rng = np.random.default_rng(n)
+    codes = rng.integers(0, 6, n).astype(np.int64)
+    weights = rng.integers(-3, 4, n).astype(np.float32)  # signed, Möbius-style
+    u, s = ops.coo_aggregate(codes, weights)
+    assert int(u.shape[0]) == bucketing.bucket_rows(n)  # on the ladder
+    got_u, got_s = _agg_host(u, s)
+    want_u, want_s = aggregate_codes(codes, weights)
+    np.testing.assert_array_equal(got_u, want_u)
+    np.testing.assert_array_equal(got_s, want_s)  # bitwise, not close
+
+
+def test_coo_aggregate_empty(tiny_ladder):
+    u, s = ops.coo_aggregate(np.zeros(0, np.int64), np.zeros(0, np.float32))
+    assert u.shape == (0,) and s.shape == (0,)
+
+
+def test_coo_aggregate_ladder_independent():
+    """The same stream aggregates to the same cells on any ladder."""
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 50, 37).astype(np.int64)
+    weights = np.ones(37, np.float32)
+    with_default = _agg_host(*ops.coo_aggregate(codes, weights))
+    old = bucketing.set_bucket_ladder(4, 3.0)
+    try:
+        with_tiny = _agg_host(*ops.coo_aggregate(codes, weights))
+    finally:
+        bucketing.set_bucket_ladder(*old)
+    np.testing.assert_array_equal(with_default[0], with_tiny[0])
+    np.testing.assert_array_equal(with_default[1], with_tiny[1])
+
+
+# ---------------------------------------------------------------------------
+# coo_join: bucketed match table vs brute force at boundary sizes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("ns,np_", [(3, 4), (4, 4), (5, 9), (8, 8), (16, 5)])
+def test_coo_join_padded_identity(tiny_ladder, impl, ns, np_):
+    rng = np.random.default_rng(ns * 31 + np_)
+    skeys = np.sort(rng.integers(0, 5, ns)).astype(np.int32)
+    pkeys = rng.integers(0, 5, np_).astype(np.int32)
+    ia, ib, valid, total = ops.coo_join(
+        jnp.asarray(skeys), jnp.asarray(pkeys), impl=impl
+    )
+    want = [
+        (int(m), j) for j, p in enumerate(pkeys) for m in np.flatnonzero(skeys == p)
+    ]
+    assert total == len(want)
+    if total:
+        assert int(ia.shape[0]) == bucketing.bucket_rows(total)
+        got = list(zip(np.asarray(ia)[:total].tolist(),
+                       np.asarray(ib)[:total].tolist()))
+        assert got == want
+        np.testing.assert_array_equal(
+            np.asarray(valid), np.arange(int(ia.shape[0])) < total
+        )
+
+
+# ---------------------------------------------------------------------------
+# sparse_family_score: padded stream scores bit-identically
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_cells", [1, 3, 4, 5, 8])
+def test_sparse_family_score_padded_identity(tiny_ladder, n_cells):
+    """Bucket padding (code 0 / weight 0) leaves fused scores bitwise
+    unchanged and matching the float64 host path."""
+    rng = np.random.default_rng(n_cells)
+    child_card, parent_card = 3, 4
+    space = child_card * parent_card
+    codes = np.sort(rng.choice(space, size=n_cells, replace=False)).astype(np.int32)
+    counts = rng.integers(1, 9, n_cells).astype(np.float32)
+    got = float(ops.sparse_family_score(codes, counts, child_card, space, impl="ref"))
+    old = bucketing.set_bucket_ladder(1024, 2.0)  # no padding at this size
+    try:
+        unpadded = float(
+            ops.sparse_family_score(codes, counts, child_card, space, impl="ref")
+        )
+    finally:
+        bucketing.set_bucket_ladder(*old)
+    assert got == unpadded
+    fct = SparseCT(
+        ("p", "c"), (parent_card, child_card), codes.astype(np.int64), counts
+    )
+    want, _ = sparse_family_stats(fct, "c", ("p",))
+    assert abs(got - want) <= 1e-12 * max(1.0, abs(want))
+
+
+# ---------------------------------------------------------------------------
+# Device build under a tiny ladder stays bit-identical to the host build
+# ---------------------------------------------------------------------------
+
+
+def test_device_build_bit_identical_under_tiny_ladder(tiny_ladder):
+    db = university_db()
+    host = joint_contingency_table(db, impl="sparse")
+    dev = joint_contingency_table(db, impl="sparse", device_resident=True)
+    assert isinstance(host, SparseCT) and isinstance(dev, DeviceSparseCT)
+    got = dev.to_host()
+    assert got.rvs == host.rvs and got.cards == host.cards
+    np.testing.assert_array_equal(got.codes, host.codes)
+    np.testing.assert_array_equal(got.counts, host.counts)
+
+
+# ---------------------------------------------------------------------------
+# Compile accounting + cache warmth
+# ---------------------------------------------------------------------------
+
+
+needs_probe = pytest.mark.skipif(
+    not bucketing.compile_probe_active(),
+    reason="jax.monitoring compile listener unavailable on this JAX",
+)
+
+
+@needs_probe
+def test_compile_counter_sees_fresh_compiles():
+    ops.reset_compile_counts()
+    # a program no other test compiles: unique constant baked into the jaxpr
+    @jax.jit
+    def fresh(x):
+        return x * 7919.25 + 1e-7
+
+    fresh(jnp.arange(33, dtype=jnp.float32)).block_until_ready()
+    counts = ops.compile_counts()
+    assert counts["compiles"] >= 1
+    assert counts["compile_secs"] > 0.0
+    ops.reset_compile_counts()
+    fresh(jnp.arange(33, dtype=jnp.float32)).block_until_ready()  # cache hit
+    assert ops.compile_counts()["compiles"] == 0
+
+
+@needs_probe
+def test_second_build_performs_zero_new_compiles():
+    """The cache-warmth contract: rebuilding a same-bucket joint hits only
+    already-compiled programs — the compile counter stays at zero."""
+    db = university_db()
+    joint_contingency_table(db, impl="sparse", device_resident=True)
+    ops.reset_compile_counts()
+    dev = joint_contingency_table(db, impl="sparse", device_resident=True)
+    assert ops.compile_counts()["compiles"] == 0
+    assert dev.n_nonzero() > 0  # the warm build still did real work
+
+
+# ---------------------------------------------------------------------------
+# Donation + persistent-cache knobs
+# ---------------------------------------------------------------------------
+
+
+def test_donation_forced_on_padded_path(tiny_ladder):
+    """REPRO_DONATE=1 routes padded temporaries through the donating jit;
+    results are unchanged (on CPU, XLA ignores the donation and warns)."""
+    old = bucketing.set_donation("1")
+    try:
+        assert bucketing.donate_buffers()
+        codes = np.asarray([5, 2, 5], np.int64)
+        weights = np.asarray([1.0, 2.0, 3.0], np.float32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            u, s = ops.coo_aggregate(codes, weights)
+        got_u, got_s = _agg_host(u, s)
+        np.testing.assert_array_equal(got_u, [2, 5])
+        np.testing.assert_array_equal(got_s, [2.0, 4.0])
+    finally:
+        bucketing.set_donation(old)
+    # set_donation returns the previous mode (the restore contract)
+    assert bucketing.set_donation("0") == old
+    assert bucketing.set_donation(old) == "0"
+
+
+def test_persistent_cache_knob(tmp_path):
+    """enable_persistent_cache points JAX's compilation cache at the dir
+    and zeroes the persistence thresholds (REPRO_JAX_CACHE_DIR wiring)."""
+    before = jax.config.jax_compilation_cache_dir
+    try:
+        bucketing.enable_persistent_cache(tmp_path)
+        assert jax.config.jax_compilation_cache_dir == str(tmp_path)
+        assert jax.config.jax_persistent_cache_min_entry_size_bytes == -1
+        assert jax.config.jax_persistent_cache_min_compile_time_secs == 0.0
+    finally:
+        jax.config.update("jax_compilation_cache_dir", before)

@@ -17,7 +17,7 @@ from repro.core.schema import make_schema
 from repro.core.score_manager import CountCache, ScoreManager
 from repro.core.sparse_counts import DeviceSparseCT, SparseCT
 from repro.core.structure import learn_and_join
-from repro.kernels import ops
+from repro.kernels import bucketing, ops
 
 from .bruteforce import random_db
 
@@ -90,14 +90,24 @@ def test_coo_join_matches_bruteforce(impl, seed):
     rng = np.random.default_rng(seed)
     skeys = np.sort(rng.integers(0, 11, int(rng.integers(1, 60)))).astype(np.int32)
     pkeys = rng.integers(0, 13, int(rng.integers(1, 70))).astype(np.int32)
-    ia, ib, total = ops.coo_join(jnp.asarray(skeys), jnp.asarray(pkeys), impl=impl)
+    ia, ib, valid, total = ops.coo_join(
+        jnp.asarray(skeys), jnp.asarray(pkeys), impl=impl
+    )
     want = [
         (int(m), j)
         for j, p in enumerate(pkeys)
         for m in np.flatnonzero(skeys == p)
     ]
     assert total == len(want)
-    got = list(zip(np.asarray(ia).tolist(), np.asarray(ib).tolist()))
+    # results come back at the bucketed length with a valid-prefix mask
+    assert ia.shape == ib.shape == valid.shape
+    assert int(ia.shape[0]) == bucketing.bucket_rows(total)
+    np.testing.assert_array_equal(
+        np.asarray(valid), np.arange(int(ia.shape[0])) < total
+    )
+    got = list(zip(
+        np.asarray(ia)[:total].tolist(), np.asarray(ib)[:total].tolist()
+    ))
     assert got == want  # probe-major order, contiguous match runs
 
 
@@ -106,11 +116,24 @@ def test_coo_join_empty_sides(impl):
     empty = jnp.zeros((0,), jnp.int32)
     some = jnp.asarray([0, 1, 2], jnp.int32)
     for a, b in [(empty, some), (some, empty), (empty, empty)]:
-        ia, ib, total = ops.coo_join(a, b, impl=impl)
+        ia, ib, valid, total = ops.coo_join(a, b, impl=impl)
         assert total == 0 and ia.shape == (0,) and ib.shape == (0,)
+        assert valid.shape == (0,)
     # disjoint key ranges: probes present, zero matches
-    ia, ib, total = ops.coo_join(some, jnp.asarray([7, 9], jnp.int32), impl=impl)
+    ia, ib, valid, total = ops.coo_join(some, jnp.asarray([7, 9], jnp.int32), impl=impl)
     assert total == 0
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_coo_join_padded_probes_match_nothing(impl):
+    # bucket-padding sentinels on either side never produce pairs: pad
+    # probes are masked, pad sorted keys are unreachable for valid probes
+    skeys = jnp.asarray([1, 2, 2, ops.PAD_KEY, ops.PAD_KEY], jnp.int32)
+    pkeys = jnp.asarray([2, ops.PAD_KEY, 1, ops.PAD_KEY], jnp.int32)
+    ia, ib, valid, total = ops.coo_join(skeys, pkeys, impl=impl)
+    assert total == 3
+    got = list(zip(np.asarray(ia)[:total].tolist(), np.asarray(ib)[:total].tolist()))
+    assert got == [(1, 0), (2, 0), (0, 2)]
 
 
 def test_coo_join_counts_launch_and_scalar_sync():
@@ -208,12 +231,25 @@ def test_device_build_conditional_only():
 
 
 def test_device_build_canonical_form():
-    """Compacted tail, non-decreasing codes, strict host canonical on d2h."""
+    """Bucket-trimmed pad tail, non-decreasing codes, strict host canonical
+    on d2h.  Since the shape-bucketing layer, the device table keeps an
+    identity-padding suffix up to its row-ladder rung (int-max codes, zero
+    counts) instead of an exact compaction — every consumer treats it as
+    absent, and ``to_host()`` restores the strict form."""
+    from repro.core.sparse_counts import _PAD_CODE
+
     db = university_db()
     dev = joint_contingency_table(db, impl="sparse", device_resident=True)
     codes = np.asarray(dev.codes)
+    counts = np.asarray(dev.counts)
     assert np.all(np.diff(codes) >= 0)
-    assert codes.size == 0 or codes[-1] < dev.n_cells  # no _PAD_CODE tail
+    # the table length sits on the bucket ladder, valid cells as a prefix
+    assert codes.size == bucketing.bucket_rows(codes.size)
+    pad = codes == _PAD_CODE
+    n_valid = int((~pad).sum())
+    assert np.all(~pad[:n_valid]) and np.all(pad[n_valid:])  # pads are a suffix
+    assert np.all(counts[pad] == 0.0)
+    assert n_valid == 0 or codes[n_valid - 1] < dev.n_cells
     host = dev.to_host()
     assert np.all(np.diff(host.codes) > 0) and np.all(host.counts != 0)
 

@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Per-metric delta table between two BENCH_structure.json documents.
+
+CI's bench-trend job downloads the base branch's latest ``BENCH_structure``
+artifact and this run's one, then pipes this tool's markdown into
+``$GITHUB_STEP_SUMMARY`` so every PR shows how the structure-search
+metrics moved.  Regressions **warn, never fail**: wall-clock metrics that
+regress by more than :data:`WALL_CLOCK_WARN_PCT` emit GitHub ``::warning``
+annotations (runner-to-runner noise makes a hard gate unfair; the compile
+budget and equivalence flags are the hard gates, in ``benchmarks/run.py``).
+
+Stdlib-only on purpose — the trend job runs it without installing the
+package.
+
+Usage: ``python tools/bench_diff.py base.json head.json``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: Metrics shown in the delta table, in order: (key, label, lower_is_better).
+METRICS = [
+    ("cands_per_sec_batched", "candidates/sec (batched)", False),
+    ("speedup", "batched vs serial speedup", False),
+    ("sweep_ms_batched", "sweep ms (batched)", True),
+    ("batched_launches", "launches (batched)", True),
+    ("sparse_launches_per_sweep", "fused launches/sweep", True),
+    ("compiles", "compiles (cold device leg)", True),
+    ("compiles_warm", "compiles (warm device leg)", True),
+    ("sparse_device_build_ms_warm", "device build ms (warm)", True),
+    ("sparse_device_build_ms_cold", "device build ms (cold)", True),
+    ("sparse_device_seconds", "device search s (warm)", True),
+    ("sparse_device_speedup", "device vs host-sparse (warm)", False),
+]
+
+#: Wall-clock metrics whose >25% regressions emit ::warning annotations.
+WALL_CLOCK = {
+    "sweep_ms_batched",
+    "sparse_device_build_ms_warm",
+    "sparse_device_seconds",
+}
+WALL_CLOCK_WARN_PCT = 25.0
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        return f"{v:,.3g}" if abs(v) < 1000 else f"{v:,.0f}"
+    return str(v)
+
+
+def _delta_pct(base, head) -> float | None:
+    if base is None or head is None:
+        return None
+    try:
+        base, head = float(base), float(head)
+    except (TypeError, ValueError):
+        return None
+    if base == 0.0:
+        return None
+    return (head - base) / abs(base) * 100.0
+
+
+def diff_tables(base: dict, head: dict) -> tuple[str, list[str]]:
+    """-> (markdown, warnings): the per-dataset delta tables + regressions."""
+    lines: list[str] = ["## Bench trend: base vs this run", ""]
+    warnings: list[str] = []
+    names = [n for n in head.get("datasets", {}) if n in base.get("datasets", {})]
+    if not names:
+        lines.append("_No overlapping datasets between base and head runs._")
+        return "\n".join(lines) + "\n", warnings
+    for name in names:
+        b, h = base["datasets"][name], head["datasets"][name]
+        lines += [f"### {name}", "",
+                  "| metric | base | head | delta |",
+                  "|---|---:|---:|---:|"]
+        for key, label, lower_better in METRICS:
+            bv, hv = b.get(key), h.get(key)
+            if bv is None and hv is None:
+                continue
+            pct = _delta_pct(bv, hv)
+            if pct is None:
+                delta = "—"
+            else:
+                arrow = "" if abs(pct) < 1e-9 else (
+                    # green direction depends on the metric's polarity
+                    "🟢" if (pct < 0) == lower_better else "🔴"
+                )
+                delta = f"{pct:+.1f}% {arrow}".strip()
+            lines.append(f"| {label} | {_fmt(bv)} | {_fmt(hv)} | {delta} |")
+            if (
+                key in WALL_CLOCK
+                and pct is not None
+                and pct > WALL_CLOCK_WARN_PCT
+            ):
+                warnings.append(
+                    f"{name}: {label} regressed {pct:+.1f}% "
+                    f"({_fmt(bv)} -> {_fmt(hv)})"
+                )
+        lines.append("")
+    if warnings:
+        lines += ["> ⚠️ wall-clock regressions over "
+                  f"{WALL_CLOCK_WARN_PCT:.0f}% (warn-only):"]
+        lines += [f"> - {w}" for w in warnings]
+        lines.append("")
+    return "\n".join(lines) + "\n", warnings
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("base", type=Path, help="base branch BENCH_structure.json")
+    p.add_argument("head", type=Path, help="this run's BENCH_structure.json")
+    a = p.parse_args(argv)
+    base = json.loads(a.base.read_text())
+    head = json.loads(a.head.read_text())
+    markdown, warnings = diff_tables(base, head)
+    print(markdown)
+    for w in warnings:
+        # GitHub annotation (shows on the workflow run); the job still passes
+        print(f"::warning title=bench regression::{w}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
