@@ -1,0 +1,141 @@
+"""Paper-beyond scale: host vs sharded-device sparse joint builds.
+
+The paper's largest database is ~10^6 tuples; the ``synth-*`` star schemas
+(:mod:`repro.data.synth`) push the fact relationship to 10^6..10^7+ rows —
+the regime the device COO engine has to *earn*.  This leg builds the same
+sparse joint CT three ways and reports the speedup that decides the route:
+
+  * **host** — :func:`repro.core.counts.joint_contingency_table` with
+    ``impl="sparse"`` (numpy lexsort + reduceat, float64 accumulate): the
+    semantic oracle and the small-N fast path;
+  * **device** — the same call with ``device_resident=True``: the COO code
+    algebra on device, run cold THEN warm so XLA compile time keeps its own
+    key (``device_build_ms_cold``) and the headline
+    ``sparse_device_speedup = host_ms / device_build_ms_warm`` is
+    steady-state;
+  * **sharded device** — ``shards=2`` and ``shards=4``: the fact table
+    row-sharded through ``device_sparse_ct_conditional``'s pivot split
+    (per-shard contraction, one signed-aggregate merge).
+
+Every leg must be **bit-identical** (codes AND float32 counts) to the host
+build; the ``*_equal`` flags gate the numbers the same way the structure
+bench's equivalence flags do (``benchmarks/run.py`` fails on any False).
+Results land under the ``bench_scale`` key of ``BENCH_structure.json``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.counts import joint_contingency_table
+from repro.core.sparse_counts import as_host
+from repro.kernels import ops
+
+from .common import emit, load, timed
+
+#: Presets for the CI smoke artifact vs the committed full document vs the
+#: weekly slow schedule (see .github/workflows/ci.yml).
+SMOKE_PRESETS = ["synth-smoke"]
+FULL_PRESETS = ["synth-smoke", "synth-1m"]
+WEEKLY_PRESETS = ["synth-smoke", "synth-1m", "synth-4m", "synth-10m"]
+
+#: Shard counts exercised by the sharded legs (each gated bit-identical).
+SHARD_COUNTS = (2, 4)
+
+
+def _equal(host_ct, dev_ct) -> bool:
+    """Bit-identity of a device build against the host oracle."""
+    h, d = as_host(host_ct), as_host(dev_ct)
+    return (
+        h.rvs == d.rvs
+        and np.array_equal(np.asarray(h.codes), np.asarray(d.codes))
+        and np.array_equal(np.asarray(h.counts), np.asarray(d.counts))
+    )
+
+
+def run_scale(presets: list[str] | None = None) -> dict:
+    """Build the scale presets' sparse joints host/device/sharded; -> metrics.
+
+    Emits ``scale/<preset>/...`` CSV rows and returns the JSON-ready dict
+    ``benchmarks.run`` stores under ``payload["bench_scale"]``.
+    """
+    out: dict[str, dict] = {}
+    for name in presets or FULL_PRESETS:
+        bdb, gen_secs = timed(load, name)
+        db = bdb.db
+        n_facts = sum(r.n_rows for r in db.relationships.values())
+
+        # host oracle: second run is the reported number so one-time numpy
+        # warmup (BLAS thread pools, allocator growth) stays out of it
+        timed(joint_contingency_table, db, impl="sparse")
+        host_ct, host_secs = timed(joint_contingency_table, db, impl="sparse")
+
+        ops.reset_compile_counts()
+        dev_cold, cold_secs = timed(
+            joint_contingency_table, db, impl="sparse", device_resident=True,
+        )
+        cold_compiles = ops.compile_counts()
+        dev_warm, warm_secs = timed(
+            joint_contingency_table, db, impl="sparse", device_resident=True,
+        )
+
+        metrics = {
+            "n_facts": n_facts,
+            "total_tuples": int(db.total_tuples),
+            "nnz": int(np.asarray(as_host(host_ct).codes).shape[0]),
+            "generate_ms": gen_secs * 1e3,
+            "host_build_ms": host_secs * 1e3,
+            "device_build_ms_cold": cold_secs * 1e3,
+            "device_build_ms_warm": warm_secs * 1e3,
+            "compiles": cold_compiles["compiles"],
+            "sparse_device_speedup": host_secs / max(warm_secs, 1e-9),
+            "sparse_device_equal": _equal(host_ct, dev_cold)
+            and _equal(host_ct, dev_warm),
+        }
+
+        for shards in SHARD_COUNTS:
+            # warm sharded build (the cold pass pays the new rungs' compiles)
+            timed(
+                joint_contingency_table, db, impl="sparse",
+                device_resident=True, shards=shards,
+            )
+            sh_ct, sh_secs = timed(
+                joint_contingency_table, db, impl="sparse",
+                device_resident=True, shards=shards,
+            )
+            metrics[f"sharded{shards}_build_ms"] = sh_secs * 1e3
+            metrics[f"sharded{shards}_equal"] = _equal(host_ct, sh_ct)
+
+        out[name] = metrics
+        emit(
+            f"scale/{name}/host_build", host_secs,
+            f"n_facts={n_facts};nnz={metrics['nnz']};gen={gen_secs:.2f}s",
+        )
+        emit(
+            f"scale/{name}/device_build", warm_secs,
+            f"speedup={metrics['sparse_device_speedup']:.2f}x;"
+            f"cold={cold_secs:.3f}s;compiles={metrics['compiles']};"
+            f"equal={metrics['sparse_device_equal']}",
+        )
+        for shards in SHARD_COUNTS:
+            emit(
+                f"scale/{name}/sharded{shards}_build",
+                metrics[f"sharded{shards}_build_ms"] / 1e3,
+                f"equal={metrics[f'sharded{shards}_equal']}",
+            )
+    return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--presets", nargs="*", default=None,
+                   help=f"scale presets (default: {FULL_PRESETS})")
+    a = p.parse_args(argv)
+    print("name,us_per_call,derived")
+    run_scale(a.presets)
+
+
+if __name__ == "__main__":
+    main()

@@ -101,6 +101,30 @@ def run_batched(
     ScoreManager, warm jit cache — supplies the headline build/search
     timings and ``sparse_device_speedup``, so compile time never leaks
     into the steady-state throughput numbers.
+
+    **Fair accounting.**  The legs walk the same move sequence (the
+    ``*_edges_equal`` flags gate that), but their raw candidate counters
+    are *per-leg denominators* and must not be compared directly:
+
+      * ``candidates_scored_serial`` counts memo misses of the serial
+        climber, whose family memo is **per lattice node** — families
+        shared between nodes are re-scored once per node;
+      * ``candidates_scored_batched`` counts the ScoreManager's memo
+        misses, and that memo is **global across the lattice** — every
+        distinct family is counted exactly once (it is the distinct-family
+        count of the shared trajectory);
+      * sweep counts are likewise per-leg (``n_sweeps_serial`` vs
+        ``n_sweeps``, ``sparse_n_sweeps_serial`` vs ``sparse_n_sweeps`` /
+        ``sparse_n_sweeps_warm``) — equal final edges do not force equal
+        sweep counts, since a leg may spend an extra no-improvement sweep.
+
+    Cross-leg comparisons therefore use equal-work normalizations:
+    ``speedup`` / ``sparse_device_speedup`` are wall-clock ratios over the
+    same search, and ``speedup_per_sweep`` / ``sparse_device_speedup_per_
+    sweep`` divide each leg's seconds by its *own* sweep count first, so a
+    sweep-count wobble cannot masquerade as a throughput change.  The
+    adaptive batch/serial router's split is reported as
+    ``batch_router_serial`` / ``batch_router_batched``.
     """
     out: dict[str, dict] = {}
     for name in datasets:
@@ -202,13 +226,24 @@ def run_batched(
             "serial_launches": ser_launches,
             "batched_launches": bat_launches,
             "launch_ratio": ser_launches / max(bat_launches, 1),
+            # per-leg denominators (NOT directly comparable; see docstring):
+            # serial re-scores node-shared families, batched's global memo
+            # makes its count the distinct-family count of the shared walk
             "candidates_scored_serial": res_ser.n_candidates_scored,
             "candidates_scored_batched": res_bat.n_candidates_scored,
             "cands_per_sec_serial": res_ser.n_candidates_scored / max(ser_secs, 1e-9),
             "cands_per_sec_batched": res_bat.n_candidates_scored / max(bat_secs, 1e-9),
             "n_sweeps": res_bat.n_sweeps,
+            "n_sweeps_serial": res_ser.n_sweeps,
             "sweep_ms_serial": ser_secs / max(res_ser.n_sweeps, 1) * 1e3,
             "sweep_ms_batched": bat_secs / max(res_bat.n_sweeps, 1) * 1e3,
+            # equal-work normalization: each leg's seconds over its OWN
+            # sweep count, so sweep-count wobble can't fake a speedup
+            "speedup_per_sweep": (ser_secs / max(res_ser.n_sweeps, 1))
+            / max(bat_secs / max(res_bat.n_sweeps, 1), 1e-9),
+            # adaptive batch/serial router split (ScoreManager counters)
+            "batch_router_serial": mgr.n_serial_routed,
+            "batch_router_batched": mgr.n_batched_routed,
             "sparse_joint_build_ms": sparse_build * 1e3,
             "n_edges": res_bat.bn.n_edges,
             "edges_equal": edges_equal,
@@ -231,6 +266,11 @@ def run_batched(
             "sparse_build_h2d_bytes": sp_build_tr["h2d"],
             "sparse_build_d2h_bytes": sp_build_tr["d2h"],
             "sparse_n_sweeps": res_sp_dev.n_sweeps,
+            "sparse_n_sweeps_serial": res_sp_ser.n_sweeps,
+            "sparse_n_sweeps_warm": res_sp_warm.n_sweeps,
+            "sparse_device_speedup_per_sweep": (
+                sp_ser_secs / max(res_sp_ser.n_sweeps, 1)
+            ) / max(sp_dev_warm_secs / max(res_sp_warm.n_sweeps, 1), 1e-9),
             "sparse_edges_equal": sparse_edges_equal,
             "sparse_warm_edges_equal": sparse_warm_edges_equal,
             "sparse_scores_equal": sparse_scores_equal,

@@ -7,11 +7,13 @@ from dataclasses import dataclass
 
 from repro.core.database import RelationalDatabase
 from repro.data.relational import BENCHMARKS, SyntheticSpec, generate
+from repro.data.synth import SCALE_PRESETS, ScaleSpec, generate_scale
 
 # Default scales keep a full `python -m benchmarks.run` pass tractable on a
 # single CPU core while preserving the paper's cross-dataset ordering
 # (MovieLens/IMDb ~10^5-10^6 tuples, the rest at full synthetic scale).
 # --paper-scale lifts MovieLens/IMDb to the paper's >10^6-tuple regime.
+# The synth-* star schemas (repro.data.synth) run at their preset size.
 DEFAULT_SCALES = {
     "movielens": 0.25,
     "mutagenesis": 1.0,
@@ -19,13 +21,14 @@ DEFAULT_SCALES = {
     "mondial": 1.0,
     "hepatitis": 1.0,
     "imdb": 0.1,
+    **{name: 1.0 for name in SCALE_PRESETS},
 }
 
 
 @dataclass
 class BenchDB:
     name: str
-    spec: SyntheticSpec
+    spec: SyntheticSpec | ScaleSpec
     db: RelationalDatabase
 
 
@@ -33,12 +36,21 @@ _CACHE: dict[tuple[str, float, int], BenchDB] = {}
 
 
 def load(name: str, scale: float | None = None, seed: int = 7) -> BenchDB:
-    spec = BENCHMARKS[name]
+    """Instantiate a bench database by name (memoized per (name, scale, seed)).
+
+    Names resolve against the paper-analogue catalog
+    (``repro.data.relational.BENCHMARKS``) first, then the million-row
+    ``synth-*`` star-schema presets (``repro.data.synth.SCALE_PRESETS``) —
+    the scale-leg datasets are first-class here, loadable by every bench.
+    """
+    synth = name not in BENCHMARKS
+    spec = SCALE_PRESETS[name] if synth else BENCHMARKS[name]
     s = scale if scale is not None else DEFAULT_SCALES[name]
     key = (name, s, seed)
     if key not in _CACHE:
         scaled = spec.scaled(s)
-        _CACHE[key] = BenchDB(name, scaled, generate(scaled, seed=seed))
+        gen = generate_scale if synth else generate
+        _CACHE[key] = BenchDB(name, scaled, gen(scaled, seed=seed))
     return _CACHE[key]
 
 

@@ -24,20 +24,25 @@ def main(argv: list[str] | None = None) -> None:
     p.add_argument("--fast", action="store_true", help="tiny datasets (CI smoke)")
     p.add_argument("--paper-scale", action="store_true", help="full 10^6-tuple runs")
     p.add_argument("--skip", nargs="*", default=[],
-                   help="benches to skip: counts sparse params structure predict kernels roofline")
+                   help="benches to skip: counts sparse params structure "
+                        "predict kernels roofline scale")
     p.add_argument("--json", nargs="?", const="BENCH_structure.json", default=None,
                    metavar="PATH",
-                   help="run the batched-vs-serial structure bench only and "
-                        "write its machine-readable metrics to PATH "
+                   help="run the batched-vs-serial structure bench plus the "
+                        "million-row scale leg and write their "
+                        "machine-readable metrics to PATH "
                         "(default BENCH_structure.json)")
     p.add_argument("--smoke", action="store_true",
                    help="with --json: one tiny dataset (CI artifact)")
+    p.add_argument("--weekly", action="store_true",
+                   help="with --json: extend the scale leg to the 4M/10M "
+                        "presets (the scheduled slow run)")
     a = p.parse_args(argv)
 
     if a.json is not None:
         import json
 
-        from . import bench_structure
+        from . import bench_scale, bench_structure
 
         datasets = ["uw-cse"] if a.smoke else ["uw-cse", "mutagenesis", "movielens"]
         scale = 0.05 if a.smoke else None
@@ -45,16 +50,28 @@ def main(argv: list[str] | None = None) -> None:
         payload = bench_structure.json_payload(
             datasets, scale, max_chain=1, smoke=a.smoke
         )
+        # The scale leg: host vs (sharded) device sparse joint builds on the
+        # synthetic star schemas.  Its per-preset metric keys differ from
+        # the structure bench's, so it lives under its own top-level key.
+        presets = (
+            bench_scale.SMOKE_PRESETS if a.smoke
+            else bench_scale.WEEKLY_PRESETS if a.weekly
+            else bench_scale.FULL_PRESETS
+        )
+        payload["bench_scale"] = bench_scale.run_scale(presets)
         with open(a.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {a.json}", file=sys.stderr)
         # Equivalence gate: batched-vs-serial (dense and device-sparse)
-        # walks must produce the same model.  CI's bench-smoke step fails on
-        # any False flag so a scoring regression cannot land silently.
+        # walks must produce the same model, and every scale-leg device /
+        # sharded build must be bit-identical to the host oracle.  CI's
+        # bench-smoke step fails on any False flag so a scoring or
+        # sharded-merge regression cannot land silently.
         failed = [
             f"{name}:{key}"
-            for name, metrics in payload["datasets"].items()
+            for group in ("datasets", "bench_scale")
+            for name, metrics in payload[group].items()
             for key, val in sorted(metrics.items())
             if key.endswith("_equal") and val is False
         ]
@@ -123,6 +140,13 @@ def main(argv: list[str] | None = None) -> None:
         from . import bench_structure
 
         bench_structure.run(datasets, scale)
+
+    if "scale" not in a.skip:
+        from . import bench_scale
+
+        bench_scale.run_scale(
+            bench_scale.SMOKE_PRESETS if a.fast else bench_scale.FULL_PRESETS
+        )
 
     if "predict" not in a.skip:
         from . import bench_predict

@@ -822,6 +822,7 @@ def contingency_table(
     fovar_universe: tuple[str, ...] | None = None,
     dense_cell_budget: int | None = None,
     device_resident: bool = False,
+    shards: int | None = None,
 ) -> CTLike:
     """Full contingency table for any par-RV set (paper Fig. 3(c)).
 
@@ -843,7 +844,10 @@ def contingency_table(
     :class:`~repro.core.sparse_counts.DeviceSparseCT` (bit-identical cells,
     zero host-side COO materialization — all subsequent CT algebra runs
     through ``jax.lax.sort``-based device aggregation); dense tables are
-    jax arrays already, so the flag is a no-op for them.
+    jax arrays already, so the flag is a no-op for them.  ``shards``
+    row-shards the device build's fact-table scans (default: the
+    ``REPRO_COO_SHARDS`` env knob) — bit-identical result, only relevant
+    with ``device_resident=True``.
     """
     if _pick_backend(db, rvs, impl, group_fovar, dense_cell_budget) == "sparse":
         if device_resident:
@@ -856,7 +860,7 @@ def contingency_table(
             return device_sparse_contingency_table(
                 db, rvs,
                 group_fovar=group_fovar, restrict=restrict,
-                fovar_universe=fovar_universe,
+                fovar_universe=fovar_universe, shards=shards,
             )
         from .sparse_counts import sparse_contingency_table
 
@@ -931,6 +935,7 @@ def joint_contingency_table(
     impl: str = "auto",
     dense_cell_budget: int | None = None,
     device_resident: bool = False,
+    shards: int | None = None,
 ) -> CTLike:
     """The pre-counting joint CT over *all* par-RVs (paper §VII-B).
 
@@ -955,7 +960,8 @@ def joint_contingency_table(
     vids = tuple(v.vid for v in db.catalog.par_rvs)
     if _pick_backend(db, vids, impl, None, dense_cell_budget) == "sparse":
         return contingency_table(
-            db, vids, impl="sparse", device_resident=device_resident
+            db, vids, impl="sparse", device_resident=device_resident,
+            shards=shards,
         )
     cells = dense_cells_of(db, vids)
     if cells > 2**28:

@@ -23,11 +23,19 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels import ops
 from .counts import ContingencyTable, encode_columns
 from .database import RelationalDatabase
+
+try:
+    # jax >= 0.6 spelling; on older versions the attribute access raises
+    # through jax's deprecation shim
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def _data_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -55,7 +63,7 @@ def sharded_ct_count(
         return jax.lax.psum(part.astype(jnp.float32), axes)
 
     w = jnp.ones(keys.shape, jnp.float32) if weights is None else weights
-    fn = jax.shard_map(
+    fn = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axes), P(axes)),
@@ -167,6 +175,78 @@ def single_rel_ct_sharded(
     return ct.transpose(tuple(rvs))
 
 
+def sharded_coo_aggregate(
+    codes: jax.Array,
+    weights: jax.Array,
+    mesh: Mesh,
+) -> tuple[jax.Array, jax.Array]:
+    """COO canonicalization with the stream sharded over the mesh's data axes.
+
+    The sparse twin of :func:`sharded_ct_count`: each device sorts and
+    segment-sums its row shard of the ``(codes, weights)`` stream locally
+    (``ops._coo_aggregate_impl`` — float64 accumulation, one float32
+    rounding per partial), the per-device partials are all-gathered, and
+    one replicated global :func:`ops.coo_aggregate` merges them.  Because
+    per-shard partial counts are integer-valued float32 (each bounded by
+    its merged cell, inside the 2**24 precision contract) and the merge
+    re-accumulates in float64, the result is bit-identical to the
+    single-device aggregation of the whole stream.
+
+    ``codes`` must be padded to a multiple of the data-axis device count
+    with the int-max sentinel (weight 0) — :func:`pad_rows` — the same
+    identity padding every COO consumer already ignores.
+    """
+    axes = _data_axes(mesh)
+
+    def local(c_shard, w_shard):
+        u, s = ops._coo_aggregate_impl(c_shard, w_shard)
+        u = jax.lax.all_gather(u, axes, tiled=True)
+        s = jax.lax.all_gather(s, axes, tiled=True)
+        return u, s
+
+    fn = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes), P(axes)),
+        out_specs=(P(), P()),
+        # the all_gather makes both outputs replicated; the static
+        # replication checker cannot infer that through the gather
+        check_rep=False,
+    )
+    with enable_x64():
+        u, s = fn(codes, weights)
+    return ops.coo_aggregate(u, s)
+
+
+def sharded_sparse_contingency_table(
+    db: RelationalDatabase,
+    rvs: Sequence[str],
+    mesh: Mesh,
+    *,
+    group_fovar: str | None = None,
+    restrict: dict | None = None,
+):
+    """The sparse COO joint/family CT, row-sharded by the mesh's data size.
+
+    The star-schema split of :func:`single_rel_ct_sharded` applied to the
+    *sparse* build: the shard count is the product of the mesh's data-axis
+    sizes, and the actual slicing/merging runs through
+    :func:`repro.core.sparse_counts.device_sparse_ct_conditional`'s pivot
+    sharding (per-shard contraction, one signed-aggregate merge).  On a
+    single-device mesh this degenerates to the plain device build.
+    Bit-identical to the unsharded table by the partial-merge argument
+    documented there.
+    """
+    from .sparse_counts import device_sparse_contingency_table
+
+    n_dev = int(np.prod([mesh.shape[a] for a in _data_axes(mesh)]))
+    return device_sparse_contingency_table(
+        db, tuple(rvs),
+        group_fovar=group_fovar, restrict=restrict,
+        shards=max(n_dev, 1),
+    )
+
+
 def sharded_block_predict(
     counts: jax.Array,
     log_cpt: jax.Array,
@@ -184,7 +264,7 @@ def sharded_block_predict(
     def local(c_shard, l_rep):
         return ops.block_predict(c_shard, l_rep, impl=impl)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axes, None), P(None, None)),

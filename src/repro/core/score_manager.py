@@ -54,6 +54,7 @@ launches per sweep with no host round-trip of the joint CT.
 from __future__ import annotations
 
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,38 @@ from .counts import (
 from .database import RelationalDatabase
 from .scores import FamilyScore, score_family, stacked_family_scores
 from .sparse_counts import DeviceSparseCT, SparseCT, sparse_family_stats
+
+
+#: Default routing threshold of the adaptive batch/serial scorer: sweeps
+#: with fewer memo-missing candidates than this go through the serial
+#: per-family path.  Every set-oriented engine pays per-batch fixed costs
+#: (stream assembly, kernel launch, the host sync of its result) that a
+#: handful of tiny family scorings undercut — the movielens regression,
+#: where hill-climb sweeps average ~2-3 fresh candidates and the batched
+#: leg measured *slower* than serial.  Large sweeps keep the batched path,
+#: which wins by amortizing exactly those costs.
+_BATCH_MIN_DEFAULT = 8
+
+
+def batch_min_candidates() -> int:
+    """The router threshold (``REPRO_BATCH_MIN_CANDIDATES``, fail-loud).
+
+    ``0`` disables the serial route entirely (every memo-missing batch is
+    set-oriented, the pre-router behavior); large values effectively force
+    serial scoring.
+    """
+    raw = os.environ.get("REPRO_BATCH_MIN_CANDIDATES", "").strip()
+    if not raw:
+        return _BATCH_MIN_DEFAULT
+    try:
+        n = int(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"REPRO_BATCH_MIN_CANDIDATES must be an integer >= 0, got {raw!r}"
+        ) from e
+    if n < 0:
+        raise ValueError(f"REPRO_BATCH_MIN_CANDIDATES must be >= 0, got {n}")
+    return n
 
 
 class CountCache:
@@ -114,6 +147,7 @@ class CountCache:
         impl: str = "auto",
         memoize: bool = True,
         device_resident: bool = False,
+        shards: int | None = None,
     ):
         assert mode in ("precount", "ondemand", "sparse")
         self.db = db
@@ -126,8 +160,11 @@ class CountCache:
         self.n_materializations = 0
         self.joint: CTLike | None = None
         if mode in ("precount", "sparse"):
+            # shards row-shards the device build's fact-table scans
+            # (default: the REPRO_COO_SHARDS env knob); bit-identical joint
             self.joint = joint_contingency_table(
-                db, impl=self.impl, device_resident=device_resident
+                db, impl=self.impl, device_resident=device_resident,
+                shards=shards,
             )
             self.n_materializations += 1
 
@@ -168,9 +205,11 @@ class ScoreManager(CountCache):
         impl: str = "auto",
         memoize: bool = True,
         device_resident: bool = False,
+        shards: int | None = None,
     ):
         super().__init__(
-            db, mode, impl=impl, memoize=memoize, device_resident=device_resident
+            db, mode, impl=impl, memoize=memoize,
+            device_resident=device_resident, shards=shards,
         )
         self._score_memo: dict[tuple, FamilyScore] = {}
         self._cards: dict[str, int] | None = None
@@ -181,6 +220,11 @@ class ScoreManager(CountCache):
         self._digit_mat = None
         self.n_score_batches = 0
         self.n_scored_families = 0
+        #: adaptive batch/serial router (see :func:`batch_min_candidates`):
+        #: memo-missing batches below the threshold score serially.
+        self.batch_min_candidates = batch_min_candidates()
+        self.n_serial_routed = 0
+        self.n_batched_routed = 0
 
     # -- joint-CT cell cache (counts layer plumbing) -------------------------
 
@@ -257,6 +301,12 @@ class ScoreManager(CountCache):
         come back in request order, and every computed row lands in the
         score memo, so only memo misses cost anything.  The memo key
         excludes ``impl`` — use one manager per kernel dispatch policy.
+
+        An adaptive router picks the engine per call: batches with fewer
+        than :attr:`batch_min_candidates` memo-missing families score
+        through the serial per-family path (identical scores, no batched
+        fixed costs), larger ones through the set-oriented engines.  The
+        split is counted in ``n_serial_routed`` / ``n_batched_routed``.
         """
         impl = self.impl if impl is None else impl
         canon = [(child, tuple(sorted(parents))) for child, parents in families]
@@ -271,8 +321,19 @@ class ScoreManager(CountCache):
         if todo:
             self.n_score_batches += 1
             self.n_scored_families += len(todo)
-            if self.joint is None:
-                # on-demand mode: no joint to remap; memoized per-family CTs
+            serial = self.joint is None or len(todo) < self.batch_min_candidates
+            if not serial:
+                self.n_batched_routed += len(todo)
+            if serial:
+                # on-demand mode (no joint to remap), or the adaptive
+                # router: a handful of memo misses — typical of late
+                # hill-climb sweeps, where most families are memo hits —
+                # cannot amortize the batched engines' per-pass fixed costs
+                # (stream assembly, launch, result sync), so score them
+                # through the per-family path.  Same scores either way:
+                # both routes reduce to identical family CT cells.
+                if self.joint is not None:
+                    self.n_serial_routed += len(todo)
                 for child, parents in todo:
                     fs = score_family(self, child, parents, alpha, impl=impl)
                     self._score_memo[(child, parents, float(alpha))] = fs

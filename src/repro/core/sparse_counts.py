@@ -77,6 +77,7 @@ code never observes a flipped global flag.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 
 import jax
@@ -93,7 +94,7 @@ from .counts import (
     plan_conditional,
     radix_strides,
 )
-from .database import RelationalDatabase
+from .database import RelationalDatabase, RelationshipTable
 from .schema import KIND_REL_ATTR
 
 # Mixed-radix codes are int64: the composite code space (dense cell count)
@@ -440,9 +441,15 @@ class DeviceSparseCT:
         trim the tail once at the end via one scalar sync, and every
         consumer treats ``counts == 0`` as absent).  Signed weights are
         allowed (the Möbius subtraction passes ``-CT[T]``); exact
-        cancellations survive as zero-count cells, i.e. absent.
+        cancellations survive as zero-count cells, i.e. absent.  The dense
+        cell count of ``cards`` is handed to the aggregation as its
+        histogram-engine bound; small code spaces take the O(n) dense
+        accumulator instead of the sort (and come back compacted to the
+        realized-bin ladder rung rather than input length).
         """
-        u, s = ops.coo_aggregate(codes, counts)
+        u, s = ops.coo_aggregate(
+            codes, counts, num_bins=math.prod(cards) if cards else 1
+        )
         return cls(tuple(rvs), tuple(cards), u, s)
 
     # -- CTLike protocol -----------------------------------------------------
@@ -537,7 +544,9 @@ class DeviceSparseCT:
                 chunks.append(jnp.where(valid, code, _PAD_CODE))
             big_codes = jnp.concatenate(chunks)
             big_counts = jnp.tile(self.counts, len(keeps))
-        codes, counts = ops.coo_aggregate(big_codes, big_counts)
+        codes, counts = ops.coo_aggregate(
+            big_codes, big_counts, num_bins=total_space
+        )
         with enable_x64():
             bounds_dev = jnp.searchsorted(
                 codes, jnp.asarray(list(offsets) + [total_space], dtype=jnp.int64)
@@ -959,6 +968,11 @@ class _DevMsg:
     weights: jax.Array   # float32
     cards: list[int]
     folded: list[str]    # par-RV vids, row-major axis order matching `cards`
+    #: entry index == entity row id over the whole population (the shape of
+    #: an un-restricted initial message: ``rows`` is ``arange(n)`` plus the
+    #: bucket-pad suffix).  Joins against a dense message need no sort-merge
+    #: — the other side's row column IS the gather index.
+    dense_rows: bool = False
 
     @property
     def code_space(self) -> int:
@@ -1015,7 +1029,9 @@ def _dev_aggregate_pairs(rows, codes, weights, code_space: int, n_rows: int):
             + jnp.where(valid, codes, 0),
             _PAD_CODE,
         )
-    u, s = _trim_pad(*ops.coo_aggregate(comp, weights))
+    u, s = _trim_pad(
+        *ops.coo_aggregate(comp, weights, num_bins=n_rows * code_space)
+    )
     with enable_x64():
         ok = s != 0.0
         u_safe = jnp.where(ok, u, 0)
@@ -1050,8 +1066,41 @@ def _dev_combine(a: _DevMsg, b: _DevMsg) -> _DevMsg:
     Unique and lexsorted by construction — no aggregation pass.  The
     bucketed join's garbage suffix (slots past ``total``) is pinned to the
     message padding identity, preserving the pads-are-a-suffix invariant.
+
+    When either side is a *dense* message (entry index == entity row id,
+    see :class:`_DevMsg`), the sort-merge join and its scalar sync are
+    skipped: the sparse side's row column is the gather index directly.
+    The output equals the generic path's, entry for entry — every valid
+    probe row matches exactly one dense entry, and with ``a`` dense the
+    b-major order *is* the a-major order (``a``'s rows are ``arange``) —
+    so the lexsorted invariant and device/host bit-identity both hold.
     """
     cb = b.code_space
+    n_a, n_b = int(a.codes.shape[0]), int(b.codes.shape[0])
+    if (a.dense_rows or b.dense_rows) and n_a and n_b:
+        if b.dense_rows:
+            sp, dn = a, b            # sparse probe side, dense gather side
+        else:
+            sp, dn = b, a
+        with enable_x64():
+            valid = sp.weights != 0.0
+            idx = jnp.where(valid, sp.rows, 0)
+            # mask codes through validity first: pad-lane _PAD_CODE values
+            # would overflow the int64 radix shift
+            cs = jnp.where(valid, sp.codes, 0)
+            cd = jnp.where(valid, dn.codes[idx], 0)
+            # code composition is always a-major: a.codes * cb + b.codes
+            ca_, cb_ = (cs, cd) if b.dense_rows else (cd, cs)
+            codes = jnp.where(valid, ca_ * jnp.int64(cb) + cb_, _PAD_CODE)
+            weights = jnp.where(valid, sp.weights * dn.weights[idx], 0.0)
+        return _DevMsg(
+            rows=sp.rows,
+            codes=codes,
+            weights=weights,
+            cards=a.cards + b.cards,
+            folded=a.folded + b.folded,
+            dense_rows=a.dense_rows and b.dense_rows,
+        )
     idx_b, idx_a, valid, _total = ops.coo_join(b.rows, a.rows)
     with enable_x64():
         # gather through the mask first: garbage-slot gathers may surface
@@ -1097,7 +1146,83 @@ def _pad_msg(msg: _DevMsg) -> _DevMsg:
         )
     rows = jnp.concatenate([msg.rows, jnp.full((w,), _PAD_ROW, jnp.int32)])
     weights = jnp.concatenate([msg.weights, jnp.zeros((w,), jnp.float32)])
-    return _DevMsg(rows, codes, weights, msg.cards, msg.folded)
+    return _DevMsg(
+        rows, codes, weights, msg.cards, msg.folded,
+        dense_rows=msg.dense_rows,
+    )
+
+
+def coo_shards() -> int:
+    """Default shard count for the device COO build (``REPRO_COO_SHARDS``).
+
+    ``1`` (the unset default) is the single-device build.  Like the other
+    env knobs, a malformed value fails loudly rather than silently running
+    unsharded.
+    """
+    raw = os.environ.get("REPRO_COO_SHARDS", "").strip()
+    if not raw:
+        return 1
+    try:
+        n = int(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"REPRO_COO_SHARDS must be an integer >= 1, got {raw!r}"
+        ) from e
+    if n < 1:
+        raise ValueError(f"REPRO_COO_SHARDS must be >= 1, got {n}")
+    return n
+
+
+def _shard_view(
+    db: RelationalDatabase, rel_name: str, lo: int, hi: int
+) -> RelationalDatabase:
+    """The star-schema split as a database view: one fact table row-sliced.
+
+    Entity (dimension) tables and every other relationship are shared by
+    reference — only the pivot relationship's columns are sliced, so S
+    shard views cost S slices of the fact columns and nothing else.
+    """
+    rel = db.relationships[rel_name]
+    sliced = RelationshipTable(
+        rel.name, hi - lo, rel.fk1[lo:hi], rel.fk2[lo:hi],
+        {a: c[lo:hi] for a, c in rel.attrs.items()},
+    )
+    return RelationalDatabase(
+        db.schema, db.catalog, db.entities,
+        {**db.relationships, rel_name: sliced},
+    )
+
+
+def _merge_shard_partials(parts: list[DeviceSparseCT]) -> DeviceSparseCT:
+    """Combine per-shard partial CTs: concatenate + ONE signed aggregate.
+
+    Conditional counts are sums over fact-table rows, so per-shard partials
+    over a disjoint row split add cell-wise.  Every partial count is an
+    exact integer-valued float32 (each is <= the merged cell, which the
+    2**24 precision contract bounds), the aggregation accumulates in
+    float64 and rounds once — hence the merged table is bit-identical to
+    the single-device build.  Empty-shard partials contribute only padding
+    and vanish in the merge.
+    """
+    first = parts[0]
+    assert all(p.rvs == first.rvs and p.cards == first.cards for p in parts), [
+        (p.rvs, p.cards) for p in parts
+    ]
+    with enable_x64():
+        codes = jnp.concatenate([p.codes for p in parts])
+        counts = jnp.concatenate([p.counts for p in parts])
+    return _compact_tail(
+        DeviceSparseCT.build(first.rvs, first.cards, codes, counts)
+    )
+
+
+def _shard_pivot(
+    db: RelationalDatabase, cond_true: tuple[str, ...]
+) -> str | None:
+    """The relationship to row-shard: the largest fact table of the query."""
+    if not cond_true:
+        return None
+    return max(cond_true, key=lambda r: (db.relationships[r].n_rows, r))
 
 
 def device_sparse_ct_conditional(
@@ -1108,6 +1233,7 @@ def device_sparse_ct_conditional(
     *,
     group_fovar: str | None = None,
     restrict: dict[str, int] | None = None,
+    shards: int = 1,
 ) -> DeviceSparseCT:
     """Device twin of :func:`sparse_ct_conditional` (same cells, no host COO).
 
@@ -1116,7 +1242,28 @@ def device_sparse_ct_conditional(
     ``ops.coo_join`` + one ``ops.coo_aggregate``, root contraction one more
     aggregate.  ``to_host()`` of the result is bit-identical to the host
     builder's table — the equivalence the device-build tests pin down.
+
+    ``shards > 1`` row-shards the query's largest fact table (the classic
+    star-schema split of ``core.distributed``, applied to the COO stream):
+    each shard runs the full contraction over its row slice and the
+    partials merge by one signed aggregate (:func:`_merge_shard_partials`).
+    Conditional counts are *multilinear* in the fact tables — every join
+    path crosses the pivot exactly once — so the disjoint row split sums
+    to the unsharded table, bit-identically (integer-exact float32
+    partials, float64 merge, one rounding).  Conditionals that touch no
+    fact table (``cond_true == ()``) are computed once, unsharded.
     """
+    pivot = _shard_pivot(db, cond_true) if shards > 1 else None
+    if pivot is not None:
+        n = db.relationships[pivot].n_rows
+        parts = [
+            device_sparse_ct_conditional(
+                _shard_view(db, pivot, lo, hi), attr_rvs, cond_true,
+                fovar_universe, group_fovar=group_fovar, restrict=restrict,
+            )
+            for lo, hi in bucketing.shard_ranges(n, shards)
+        ]
+        return _merge_shard_partials(parts)
     cat = db.catalog
     plan: QueryPlan = plan_conditional(
         db, attr_rvs, cond_true, fovar_universe,
@@ -1149,7 +1296,10 @@ def device_sparse_ct_conditional(
             # no data-dependent compaction needed
             r = plan.restrict[fid]
             rows, codes, weights = rows[r:r + 1], codes[r:r + 1], weights[r:r + 1]
-        return _pad_msg(_DevMsg(rows, codes, weights, cards, folded))
+        return _pad_msg(_DevMsg(
+            rows, codes, weights, cards, folded,
+            dense_rows=fid not in plan.restrict,
+        ))
 
     def eliminate_leaf(msg: _DevMsg, rname: str, leaf: str, other: str) -> _DevMsg:
         """Push a leaf's message through a relationship (device FK join)."""
@@ -1164,12 +1314,25 @@ def device_sparse_ct_conditional(
             rcode = jnp.zeros((int(fk_leaf.shape[0]),), jnp.int64)
             for rv, stride in zip(plan.rel_attrs[rname], radix_strides(r_cards)):
                 rcode = rcode + rel.attrs[rv.column].astype(jnp.int64) * jnp.int64(stride)
-        idx_m, idx_r, valid, _total = ops.coo_join(msg.rows, fk_leaf)
-        with enable_x64():
-            cm = jnp.where(valid, msg.codes[idx_m], 0)
-            codes = jnp.where(valid, cm * jnp.int64(d_r) + rcode[idx_r], _PAD_CODE)
-            weights = jnp.where(valid, msg.weights[idx_m], 0.0)
-            rows_j = jnp.where(valid, fk_other[idx_r].astype(jnp.int32), _PAD_ROW)
+        if msg.dense_rows and int(msg.codes.shape[0]) and int(fk_leaf.shape[0]):
+            # dense (un-restricted initial) message: entry index == entity
+            # row id, so the FK column IS the join — gather directly,
+            # skipping the sort-merge join and its scalar sync.  Output
+            # order is the relationship's row order; the aggregation below
+            # canonicalizes, so the result is bit-identical to the joined
+            # path (float64 accumulation of integer-valued weights is
+            # order-independent).
+            with enable_x64():
+                codes = msg.codes[fk_leaf] * jnp.int64(d_r) + rcode
+                weights = msg.weights[fk_leaf]
+            rows_j = fk_other.astype(jnp.int32)
+        else:
+            idx_m, idx_r, valid, _total = ops.coo_join(msg.rows, fk_leaf)
+            with enable_x64():
+                cm = jnp.where(valid, msg.codes[idx_m], 0)
+                codes = jnp.where(valid, cm * jnp.int64(d_r) + rcode[idx_r], _PAD_CODE)
+                weights = jnp.where(valid, msg.weights[idx_m], 0.0)
+                rows_j = jnp.where(valid, fk_other[idx_r].astype(jnp.int32), _PAD_ROW)
         rows, codes, weights = _dev_aggregate_pairs(
             rows_j, codes, weights,
             msg.code_space * d_r, fovar_n_rows(other),
@@ -1194,7 +1357,9 @@ def device_sparse_ct_conditional(
                 [fovar_n_rows(fid)] + msg.cards,
                 [GROUP_AXIS] + msg.folded,
             )
-        u, s = ops.coo_aggregate(msg.codes, msg.weights)
+        u, s = ops.coo_aggregate(
+            msg.codes, msg.weights, num_bins=msg.code_space
+        )
         if int(u.shape[0]):
             u, s = _trim_pad(u, s)
         return u, s, msg.cards, msg.folded
@@ -1272,7 +1437,7 @@ def _dev_sparse_sub(star: DeviceSparseCT, t_sum: DeviceSparseCT) -> DeviceSparse
     with enable_x64():
         codes = jnp.concatenate([star.codes, t_sum.codes])
         deltas = jnp.concatenate([star.counts, -t_sum.counts])
-    u, s = ops.coo_aggregate(codes, deltas)
+    u, s = ops.coo_aggregate(codes, deltas, num_bins=star.n_cells)
     return DeviceSparseCT(star.rvs, star.cards, u, s)
 
 
@@ -1283,6 +1448,7 @@ def device_sparse_contingency_table(
     group_fovar: str | None = None,
     restrict: dict[str, int] | None = None,
     fovar_universe: tuple[str, ...] | None = None,
+    shards: int | None = None,
 ) -> DeviceSparseCT:
     """Device twin of :func:`sparse_contingency_table` (Möbius on device).
 
@@ -1294,7 +1460,13 @@ def device_sparse_contingency_table(
     builder.  This is the default route of ``contingency_table(...,
     device_resident=True)`` on the sparse backend: the joint CT is built
     with zero host-side COO materialization.
+
+    ``shards`` (default: the ``REPRO_COO_SHARDS`` env knob via
+    :func:`coo_shards`) row-shards every fact-table-touching conditional of
+    the Möbius recursion — see :func:`device_sparse_ct_conditional`; the
+    result stays bit-identical to the single-device build.
     """
+    shards = coo_shards() if shards is None else int(shards)
     cat = db.catalog
     want, rel_names, added, attr_rvs, universe_t = mobius_setup(db, rvs, fovar_universe)
 
@@ -1313,7 +1485,7 @@ def device_sparse_contingency_table(
         if not remaining:
             return device_sparse_ct_conditional(
                 db, attrs, fixed_true, universe_t,
-                group_fovar=group_fovar, restrict=restrict,
+                group_fovar=group_fovar, restrict=restrict, shards=shards,
             )
         r, rest = remaining[0], remaining[1:]
         r_attr_vids = tuple(

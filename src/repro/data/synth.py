@@ -1,0 +1,254 @@
+"""Million-row synthetic star schemas: the scale leg's workload generator.
+
+:mod:`repro.data.relational` generates the six paper-analogue benchmark
+databases with a Python rejection loop over foreign-key pairs — fine at the
+paper's 10^3..10^6 tuple range, unusable at the 10^6..10^7+ fact rows the
+``launch/dryrun_factorbase.py`` workload model targets.  This module is the
+fully-vectorized generator for exactly that workload model: ONE relationship
+(fact) table over two entity (dimension) populations, two chained attributes
+of cardinality 3 per entity side, one relationship attribute of cardinality
+3 (4 with the ``n/a`` code) — the Fig. 3(c) CT shape the dry run lowers,
+``cards = [3, 3, 3, 3, 4]`` plus the relationship indicator.
+
+Design constraints, in order:
+
+  * **Determinism by seed.**  Every sample comes from one
+    ``np.random.default_rng(seed)`` stream through vectorized draws only;
+    the same ``(spec, seed)`` pair reproduces the database bit-for-bit on
+    any platform numpy supports (``tests/test_scale.py`` pins this).
+  * **Distinct foreign-key pairs.**  A relationship instance table stores a
+    *set* of true groundings; duplicate ``(fk1, fk2)`` pairs would double
+    count groundings and push the Möbius ``F = star − T`` negative.  Pairs
+    are sampled with replacement under a Zipf-like popularity skew and
+    deduplicated wholesale with ``np.unique`` over packed pair codes —
+    no per-row Python.
+  * **float32-exact counting.**  The count stack's precision contract
+    rounds every CT cell to float32, exact only below ``2**24``.  The
+    binding cells are the Möbius star products ``h_src[a] · h_dst[b]`` of
+    the entity config histograms, so entity attributes are drawn
+    near-uniform and :func:`generate_scale` asserts the realized
+    ``max(h_src) * max(h_dst)`` (and the max fact-table cell) stay under
+    the bound — a finer-grained guard than ``relational.generate``'s
+    wholesale ``n1 * n2 <= 2**24``, which would cap entity populations far
+    below what 10^7 distinct fact pairs need.
+
+Presets (``SCALE_PRESETS``) ride the same ``benchmarks/common.load`` path
+as the paper-analogue datasets; ``benchmarks/bench_scale.py`` is the
+consumer that earns the device COO path against these.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.database import EntityTable, RelationalDatabase, RelationshipTable
+from ..core.schema import RelationalSchema, analyze_schema, make_schema
+
+#: float32 exactly represents integers below this; every CT cell must fit.
+_F32_EXACT = 2 ** 24
+
+
+@dataclass(frozen=True)
+class ScaleSpec:
+    """One star-schema instance size (the dry-run workload model's knobs)."""
+
+    name: str
+    n_facts: int          # distinct true groundings of the fact relationship
+    n_src: int            # rows of the first (probe-side) entity population
+    n_dst: int            # rows of the second entity population
+    src_attrs: tuple[tuple[str, int], ...] = (("a1", 3), ("a2", 3))
+    dst_attrs: tuple[tuple[str, int], ...] = (("b1", 3), ("b2", 3))
+    rel_attrs: tuple[tuple[str, int], ...] = (("ra", 3),)
+    skew: float = 0.8     # FK popularity skew (rank^-skew weights), 0 = uniform
+
+    def scaled(self, scale: float) -> "ScaleSpec":
+        """Scale fact rows by ``scale`` and entity rows by ``sqrt(scale)``."""
+        if scale == 1.0:
+            return self
+        return replace(
+            self,
+            n_facts=max(1024, int(self.n_facts * scale)),
+            n_src=max(256, int(self.n_src * scale ** 0.5)),
+            n_dst=max(256, int(self.n_dst * scale ** 0.5)),
+        )
+
+    @property
+    def total_tuples(self) -> int:
+        return self.n_facts + self.n_src + self.n_dst
+
+    def schema(self) -> RelationalSchema:
+        dom = lambda k: tuple(str(i + 1) for i in range(k))
+        return make_schema(
+            entities={
+                "src": {a: dom(c) for a, c in self.src_attrs},
+                "dst": {a: dom(c) for a, c in self.dst_attrs},
+            },
+            relationships={
+                "fact": (("src", "dst"), {a: dom(c) for a, c in self.rel_attrs}),
+            },
+        )
+
+
+def _entity_codes(rng: np.random.Generator, n: int,
+                  attrs: tuple[tuple[str, int], ...]) -> dict[str, np.ndarray]:
+    """Chained attribute columns (attr_k | attr_{k-1}), near-uniform marginals.
+
+    The chain plants the same intra-entity dependence structure as the
+    paper-analogue generator; the high Dirichlet concentration keeps every
+    joint-config histogram cell close to ``n / prod(cards)`` so the Möbius
+    star products stay inside the float32-exact envelope at million-row
+    entity populations.
+    """
+    cols: dict[str, np.ndarray] = {}
+    prev: np.ndarray | None = None
+    for attr, card in attrs:
+        if prev is None:
+            p = rng.dirichlet(np.full(card, 24.0))
+            col = rng.choice(card, size=n, p=p)
+        else:
+            prev_card = int(prev.max(initial=0)) + 1
+            cpt = np.cumsum(
+                rng.dirichlet(np.full(card, 16.0), size=prev_card), axis=1
+            )
+            u = rng.random(n)
+            col = np.empty(n, np.int64)
+            for cfg in range(prev_card):
+                m = prev == cfg
+                col[m] = np.searchsorted(cpt[cfg], u[m], side="right")
+            np.clip(col, 0, card - 1, out=col)
+        cols[attr] = col.astype(np.int32)
+        prev = col
+    return cols
+
+
+def _distinct_pairs(rng: np.random.Generator, spec: ScaleSpec) -> np.ndarray:
+    """``n_facts`` distinct packed pair codes ``fk1 * n_dst + fk2``.
+
+    Popularity-skewed sampling with replacement, deduplicated in bulk; the
+    final trim runs through an rng permutation so the kept set is not
+    biased toward small row ids.  Purely vectorized — the paper-analogue
+    generator's per-pair rejection loop is the thing this replaces.
+    """
+    n1, n2, want = spec.n_src, spec.n_dst, spec.n_facts
+    if want > n1 * n2:
+        raise ValueError(
+            f"{spec.name}: n_facts={want} exceeds the {n1}x{n2} pair space"
+        )
+    # rank^-skew popularity, assigned to rows in rng-permuted order so row
+    # id carries no information
+    w1 = (np.arange(1, n1 + 1, dtype=np.float64) ** -spec.skew)[rng.permutation(n1)]
+    p1 = w1 / w1.sum()
+    w2 = (np.arange(1, n2 + 1, dtype=np.float64) ** -(spec.skew * 0.5))[
+        rng.permutation(n2)
+    ]
+    p2 = w2 / w2.sum()
+    have = np.empty(0, np.int64)
+    while have.size < want:
+        k = int((want - have.size) * 1.5) + 1024
+        i = rng.choice(n1, size=k, p=p1).astype(np.int64)
+        j = rng.choice(n2, size=k, p=p2).astype(np.int64)
+        have = np.unique(np.concatenate([have, i * n2 + j]))
+    return rng.permutation(have)[:want]
+
+
+def generate_scale(spec: ScaleSpec, seed: int = 7) -> RelationalDatabase:
+    """Sample one star-schema database instance (see module docstring)."""
+    rng = np.random.default_rng(seed)
+    schema = spec.schema()
+
+    src_cols = _entity_codes(rng, spec.n_src, spec.src_attrs)
+    dst_cols = _entity_codes(rng, spec.n_dst, spec.dst_attrs)
+
+    pair = _distinct_pairs(rng, spec)
+    fk1 = (pair // spec.n_dst).astype(np.int32)
+    fk2 = (pair % spec.n_dst).astype(np.int32)
+
+    # relationship attributes conditional on the first attribute of each
+    # side — the cross-table dependence structure learning should find
+    a1 = src_cols[spec.src_attrs[0][0]][fk1]
+    b1 = dst_cols[spec.dst_attrs[0][0]][fk2]
+    c1, c2 = spec.src_attrs[0][1], spec.dst_attrs[0][1]
+    cfg = a1.astype(np.int64) * c2 + b1
+    rel_cols: dict[str, np.ndarray] = {}
+    for attr, card in spec.rel_attrs:
+        cpt = np.cumsum(rng.dirichlet(np.full(card, 2.0), size=c1 * c2), axis=1)
+        u = rng.random(spec.n_facts)
+        col = np.empty(spec.n_facts, np.int64)
+        for c in range(c1 * c2):
+            m = cfg == c
+            col[m] = np.searchsorted(cpt[c], u[m], side="right")
+        np.clip(col, 0, card - 1, out=col)
+        rel_cols[attr] = (col + 1).astype(np.int32)  # +1: code 0 is n/a
+
+    # float32-exactness guards (finer-grained than relational.generate's
+    # wholesale n1*n2 bound — see module docstring)
+    def _config_hist(cols, attrs):
+        code = np.zeros(len(next(iter(cols.values()))), np.int64)
+        for (a, card) in attrs:
+            code = code * card + cols[a]
+        return np.bincount(code, minlength=math.prod(c for _, c in attrs))
+
+    h_src = _config_hist(src_cols, spec.src_attrs)
+    h_dst = _config_hist(dst_cols, spec.dst_attrs)
+    star_max = int(h_src.max(initial=0)) * int(h_dst.max(initial=0))
+    assert star_max < _F32_EXACT, (
+        f"{spec.name}: max Möbius star cell {star_max} exceeds the "
+        f"float32-exact bound {_F32_EXACT}; reduce entity populations"
+    )
+    fact_code = a1.astype(np.int64)
+    for a, card in spec.src_attrs[1:]:
+        fact_code = fact_code * card + src_cols[a][fk1]
+    for a, card in spec.dst_attrs:
+        fact_code = fact_code * card + dst_cols[a][fk2]
+    for a, card in spec.rel_attrs:
+        fact_code = fact_code * (card + 1) + rel_cols[a]
+    fact_max = int(np.bincount(fact_code).max(initial=0))
+    assert fact_max < _F32_EXACT, (
+        f"{spec.name}: max fact-table CT cell {fact_max} exceeds the "
+        f"float32-exact bound {_F32_EXACT}"
+    )
+
+    entities = {
+        "src": EntityTable(
+            "src", spec.n_src, {a: jnp.asarray(c) for a, c in src_cols.items()}
+        ),
+        "dst": EntityTable(
+            "dst", spec.n_dst, {a: jnp.asarray(c) for a, c in dst_cols.items()}
+        ),
+    }
+    relationships = {
+        "fact": RelationshipTable(
+            "fact", spec.n_facts, jnp.asarray(fk1), jnp.asarray(fk2),
+            {a: jnp.asarray(c) for a, c in rel_cols.items()},
+        )
+    }
+    return RelationalDatabase(
+        schema, analyze_schema(schema), entities, relationships
+    )
+
+
+# ---------------------------------------------------------------------------
+# Presets: the bench_scale ladder
+# ---------------------------------------------------------------------------
+# Entity populations are sized so the realized star products stay under the
+# float32-exact bound (near-uniform 9-config histograms: max cell ~ 1.2·n/9,
+# so n <= ~28k per side keeps max(h)^2 < 2^24) while the pair space leaves
+# ample room for distinct fact pairs.
+
+SCALE_PRESETS: dict[str, ScaleSpec] = {
+    s.name: s
+    for s in (
+        # CI smoke: big enough to exercise the sharded build, small enough
+        # for a PR-gate bench step
+        ScaleSpec("synth-smoke", n_facts=50_000, n_src=2_000, n_dst=2_000),
+        # the acceptance-bar dataset: >= 10^6 fact rows
+        ScaleSpec("synth-1m", n_facts=1_000_000, n_src=20_000, n_dst=20_000),
+        ScaleSpec("synth-4m", n_facts=4_000_000, n_src=24_000, n_dst=24_000),
+        # weekly slow schedule only
+        ScaleSpec("synth-10m", n_facts=10_000_000, n_src=27_000, n_dst=27_000),
+    )
+}

@@ -118,6 +118,26 @@ def bucket_rows(n: int) -> int:
     return rung
 
 
+def shard_ranges(n: int, n_shards: int) -> list[tuple[int, int]]:
+    """Split ``n`` rows into exactly ``n_shards`` contiguous ``(lo, hi)`` ranges.
+
+    The row-sharding rule of the sharded COO build: every shard except the
+    last gets the same ceil-divided size, so all leading shards share ONE
+    bucket rung (their per-shard streams compile a single program, not one
+    per shard) and only the tail shard can land on a different rung.  When
+    ``n < n_shards``, trailing ranges are empty ``(n, n)`` — legal shards
+    contributing no mass, which the partial merge must (and does) tolerate.
+    """
+    n, n_shards = int(n), int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    size = -(-n // n_shards) if n else 0
+    return [
+        (min(i * size, n), min((i + 1) * size, n)) if size else (n, n)
+        for i in range(n_shards)
+    ]
+
+
 # ---------------------------------------------------------------------------
 # Compile accounting
 # ---------------------------------------------------------------------------

@@ -314,6 +314,57 @@ _coo_aggregate_jit = jax.jit(_coo_aggregate_impl)
 #: ``bucketing.donate_buffers`` — caller buffers are never donated).
 _coo_aggregate_jit_donated = jax.jit(_coo_aggregate_impl, donate_argnums=(0, 1))
 
+#: Histogram-aggregation engages when the (bucketed) code space fits under
+#: this many dense accumulator bins (f64 accumulator: 32 MB at the default).
+#: Above it, the general sort path runs.  Overridable for experiments via
+#: ``REPRO_COO_HIST_BINS`` (0 disables the histogram path entirely).
+_HIST_BINS_BUDGET = 1 << 22
+_env_hist = os.environ.get("REPRO_COO_HIST_BINS", "").strip()
+if _env_hist:
+    try:
+        _HIST_BINS_BUDGET = int(_env_hist)
+    except ValueError as e:
+        raise ValueError(
+            f"REPRO_COO_HIST_BINS must be an integer, got {_env_hist!r}"
+        ) from e
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins",))
+def _coo_hist_jit(codes: jax.Array, weights: jax.Array, num_bins: int):
+    """Dense-accumulator aggregation: one unsorted segment-sum, no sort.
+
+    The O(n) twin of :func:`_coo_aggregate_impl` for streams whose code
+    space is statically known and small: scatter-accumulate the weights
+    into ``num_bins`` cells (float64 — exact for integer-valued counts,
+    order-independent) and round once to float32, exactly the host
+    aggregation's value.  Codes outside ``[0, num_bins)`` — the int-max
+    padding sentinel — are routed to a sacrificial overflow bin and
+    dropped.  Returns the dense per-bin counts plus the number of
+    realized (nonzero) bins.
+    """
+    in_range = (codes >= 0) & (codes < num_bins)
+    seg = jnp.where(in_range, codes, num_bins).astype(jnp.int32)
+    sums = jax.ops.segment_sum(
+        weights.astype(count_acc_dtype()), seg, num_bins + 1
+    )[:num_bins].astype(jnp.float32)
+    return sums, jnp.sum(sums != 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_keep",))
+def _hist_compact_jit(sums: jax.Array, n_keep: int):
+    """COO-compact a dense count vector: realized bins, ascending, pad tail.
+
+    ``jnp.nonzero`` with a static ``size`` keeps the program fixed-shape
+    (one compile per ladder rung); slots past the realized count get the
+    int-max / zero-count identity padding every COO consumer expects.
+    """
+    num_bins = sums.shape[0]
+    idx = jnp.nonzero(sums != 0.0, size=n_keep, fill_value=num_bins)[0]
+    valid = idx < num_bins
+    counts = jnp.where(valid, sums[jnp.minimum(idx, num_bins - 1)], 0.0)
+    codes = jnp.where(valid, idx, jnp.iinfo(jnp.int64).max)
+    return codes, counts
+
 
 def _pad_coo_stream(codes: jax.Array, weights: jax.Array, pad_code) -> tuple:
     """Bucket-pad a COO stream with identity padding; -> (codes, weights, padded?).
@@ -338,22 +389,41 @@ def _pad_coo_stream(codes: jax.Array, weights: jax.Array, pad_code) -> tuple:
     return codes, weights, True
 
 
-def coo_aggregate(codes: jax.Array, weights: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Sort-then-segment-sum COO canonicalization, entirely on device.
+def coo_aggregate(
+    codes: jax.Array,
+    weights: jax.Array,
+    *,
+    num_bins: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """COO canonicalization, entirely on device.
 
     The device-resident analogue of the sparse backend's host
-    ``aggregate_codes``: ONE fused sort + segment reduction instead of a
-    host ``np.argsort`` round-trip.  ``codes`` may be int64 (mixed-radix
-    composite keys run under a local ``enable_x64`` scope) or int32.
+    ``aggregate_codes``.  ``codes`` may be int64 (mixed-radix composite
+    keys run under a local ``enable_x64`` scope) or int32.
+
+    Two engines, same bit-exact result (float64 accumulation over
+    integer-valued float32 weights, one float32 rounding):
+
+      * **sort**: ONE fused sort + segment reduction — the general path,
+        any code space.  Returns ``(uniq_codes, sums)`` of the *bucketed*
+        input length: ascending unique codes first, int-max / zero-count
+        padding after (see :func:`_coo_aggregate_impl`).
+      * **histogram**: when the caller knows the code space (``num_bins``)
+        and its ladder rung fits :data:`_HIST_BINS_BUDGET`, an O(n)
+        unsorted segment-sum into a dense accumulator replaces the
+        O(n log n) sort — the big win of the million-row scale leg, where
+        streams are huge but code spaces tiny.  The result is compacted
+        to the realized-bin ladder rung (ascending codes, identity pad
+        tail — the same canonical layout the sort path's ``_trim_pad``
+        step produces), at the cost of one accounted scalar sync.
 
     Inputs are bucket-padded to the ``bucketing`` row ladder (int-max
     codes, zero weights — identity padding) so every aggregation of a
-    learning run compiles O(buckets) sort programs instead of one per
-    data-dependent stream length; when padding created fresh temporaries
-    and the donation policy allows, their buffers are donated to the
-    compiled program.  Returns ``(uniq_codes, sums)`` of the *bucketed*
-    length: ascending unique codes first, int-max / zero-count padding
-    after (see :func:`_coo_aggregate_impl`).
+    learning run compiles O(buckets) programs instead of one per
+    data-dependent stream length; ``num_bins`` is bucketed to the ladder
+    too, so the histogram programs are keyed by (row rung, bin rung).
+    When padding created fresh temporaries and the donation policy
+    allows, their buffers are donated to the compiled program.
     """
     _LAUNCHES["coo_aggregate"] += 1
     with enable_x64():
@@ -364,6 +434,21 @@ def coo_aggregate(codes: jax.Array, weights: jax.Array) -> tuple[jax.Array, jax.
             return codes, weights.astype(jnp.float32)
         pad_code = jnp.iinfo(codes.dtype).max
         codes, weights, padded = _pad_coo_stream(codes, weights, pad_code)
+        use_hist = (
+            num_bins is not None
+            and 0 < num_bins
+            and bucketing.bucket_rows(num_bins) <= _HIST_BINS_BUDGET
+        )
+        if use_hist:
+            bins = bucketing.bucket_rows(num_bins)
+            sums, n_valid_dev = _coo_hist_jit(codes, weights, bins)
+    if use_hist:
+        # sync outside the x64 scope, per the scoping contract
+        n_valid = sync_scalar(n_valid_dev)
+        n_keep = min(bins, bucketing.bucket_rows(max(n_valid, 1)))
+        with enable_x64():
+            return _hist_compact_jit(sums, n_keep)
+    with enable_x64():
         if padded and bucketing.donate_buffers():
             return _coo_aggregate_jit_donated(codes, weights)
         return _coo_aggregate_jit(codes, weights)

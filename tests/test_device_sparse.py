@@ -347,6 +347,7 @@ def test_device_score_batch_chunks_match_serial():
     """Forced chunking (tiny row budget) changes launches, not scores."""
     db = university_db()
     mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    mgr.batch_min_candidates = 0  # router off: this pins the fused launches
     ser = CountCache(db, mode="sparse")
     fams = [
         (UNIV_RVS[1], (UNIV_RVS[0],)),

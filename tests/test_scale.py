@@ -1,0 +1,309 @@
+"""Scale leg: the synthetic star-schema generator and the sharded COO build.
+
+Pins the three contracts the million-row engine rests on:
+
+  * the generator is deterministic by seed and respects the float32-exact
+    counting envelope (``repro.data.synth``);
+  * the sharded device build — fact rows split by
+    ``bucketing.shard_ranges``, per-shard contraction, one signed-aggregate
+    merge — is **bit-identical** (codes AND float32 counts) to the
+    single-device build for 1/2/4 shards, including empty and skewed
+    shards;
+  * the adaptive batch/serial router in ``ScoreManager.score_batch``
+    (the movielens batched<serial fix) routes small memo-missing batches
+    serially, honors ``REPRO_BATCH_MIN_CANDIDATES``, and both routes
+    produce identical scores and identical hill-climb edges.
+
+The multi-device leg (4 fake CPU devices via ``XLA_FLAGS``) runs in a
+subprocess like ``tests/test_sharding.py`` so the main process keeps one
+device.
+"""
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.sparse_counts import (
+    as_host,
+    device_sparse_contingency_table,
+    sparse_contingency_table,
+)
+from repro.core.structure import ScoreManager, hill_climb, learn_and_join
+from repro.data.synth import SCALE_PRESETS, ScaleSpec, generate_scale
+from repro.kernels.bucketing import shard_ranges
+
+# Small enough for the fast suite, big enough that 4 shards are non-trivial.
+SPEC = ScaleSpec("synth-test", n_facts=3_000, n_src=300, n_dst=300)
+# Fewer fact rows than shards: forces empty `(n, n)` tail ranges.
+TINY = ScaleSpec("synth-tiny", n_facts=3, n_src=16, n_dst=16)
+
+
+def _all_rvs(db):
+    return tuple(v.vid for v in db.catalog.par_rvs)
+
+
+def _host_coo(ct):
+    h = as_host(ct)
+    return h.rvs, np.asarray(h.codes), np.asarray(h.counts)
+
+
+# ---------------------------------------------------------------------------
+# generator
+# ---------------------------------------------------------------------------
+
+
+def test_generator_deterministic_by_seed():
+    a, b = generate_scale(SPEC, seed=11), generate_scale(SPEC, seed=11)
+    c = generate_scale(SPEC, seed=12)
+    ra, rb, rc = (d.relationships["fact"] for d in (a, b, c))
+    assert np.array_equal(np.asarray(ra.fk1), np.asarray(rb.fk1))
+    assert np.array_equal(np.asarray(ra.fk2), np.asarray(rb.fk2))
+    assert np.array_equal(np.asarray(ra.attrs["ra"]), np.asarray(rb.attrs["ra"]))
+    for ent in ("src", "dst"):
+        for attr, col in a.entities[ent].attrs.items():
+            assert np.array_equal(
+                np.asarray(col), np.asarray(b.entities[ent].attrs[attr])
+            )
+    # a different seed must actually change the draw
+    assert not np.array_equal(np.asarray(ra.fk1), np.asarray(rc.fk1))
+
+
+def test_generator_distinct_pairs_and_domains():
+    db = generate_scale(SPEC, seed=3)
+    rel = db.relationships["fact"]
+    pair = np.asarray(rel.fk1, np.int64) * SPEC.n_dst + np.asarray(rel.fk2)
+    assert len(np.unique(pair)) == SPEC.n_facts  # no duplicate groundings
+    ra = np.asarray(rel.attrs["ra"])
+    assert ra.min() >= 1  # code 0 is the n/a value, never sampled as true
+    assert ra.max() <= SPEC.rel_attrs[0][1]
+
+
+def test_presets_cover_the_acceptance_scale():
+    assert SCALE_PRESETS["synth-1m"].n_facts >= 10**6
+    assert SCALE_PRESETS["synth-10m"].n_facts >= 10**7
+    # .scaled() shrinks facts linearly, entities by sqrt
+    s = SCALE_PRESETS["synth-1m"].scaled(0.01)
+    assert s.n_facts == 10_000 and s.n_src == 2_000
+
+
+# ---------------------------------------------------------------------------
+# shard_ranges
+# ---------------------------------------------------------------------------
+
+
+def test_shard_ranges_cover_and_share_sizes():
+    for n, k in [(10, 3), (12, 4), (0, 3), (1, 4), (7, 1), (3, 4)]:
+        ranges = shard_ranges(n, k)
+        assert len(ranges) == k
+        # contiguous cover of [0, n)
+        assert ranges[0][0] == (0 if n else n)
+        assert ranges[-1][1] == n
+        for (lo, hi), (lo2, _) in zip(ranges, ranges[1:]):
+            assert hi == lo2 and lo <= hi
+        # all non-tail shards share one size (one bucket rung)
+        sizes = {hi - lo for lo, hi in ranges[:-1] if hi > lo}
+        assert len(sizes) <= 1
+
+
+def test_shard_ranges_rejects_zero_shards():
+    with pytest.raises(ValueError):
+        shard_ranges(10, 0)
+
+
+# ---------------------------------------------------------------------------
+# sharded device build: bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_sharded_build_bit_identical(shards):
+    db = generate_scale(SPEC, seed=5)
+    rvs = _all_rvs(db)
+    base = _host_coo(device_sparse_contingency_table(db, rvs, shards=1))
+    got = _host_coo(device_sparse_contingency_table(db, rvs, shards=shards))
+    assert base[0] == got[0]
+    assert np.array_equal(base[1], got[1])
+    assert np.array_equal(base[2], got[2])
+
+
+def test_sharded_build_matches_host_oracle():
+    db = generate_scale(SPEC, seed=5)
+    rvs = _all_rvs(db)
+    host = sparse_contingency_table(db, rvs)
+    dev = _host_coo(device_sparse_contingency_table(db, rvs, shards=3))
+    assert host.rvs == dev[0]
+    assert np.array_equal(np.asarray(host.codes), dev[1])
+    assert np.array_equal(np.asarray(host.counts), dev[2])
+
+
+def test_sharded_build_empty_and_skewed_shards():
+    # 3 fact rows over 4 shards: shard_ranges yields an empty tail range,
+    # and the leading shards are maximally skewed (1 row each)
+    db = generate_scale(TINY, seed=9)
+    rvs = _all_rvs(db)
+    base = _host_coo(device_sparse_contingency_table(db, rvs, shards=1))
+    for shards in (2, 4, 8):
+        got = _host_coo(device_sparse_contingency_table(db, rvs, shards=shards))
+        assert base[0] == got[0]
+        assert np.array_equal(base[1], got[1])
+        assert np.array_equal(base[2], got[2])
+
+
+def test_env_knob_coo_shards(monkeypatch):
+    from repro.core.sparse_counts import coo_shards
+
+    monkeypatch.delenv("REPRO_COO_SHARDS", raising=False)
+    assert coo_shards() == 1
+    monkeypatch.setenv("REPRO_COO_SHARDS", "4")
+    assert coo_shards() == 4
+    monkeypatch.setenv("REPRO_COO_SHARDS", "zero")
+    with pytest.raises(ValueError):
+        coo_shards()
+    monkeypatch.setenv("REPRO_COO_SHARDS", "0")
+    with pytest.raises(ValueError):
+        coo_shards()
+
+
+# ---------------------------------------------------------------------------
+# adaptive batch/serial router (the movielens batched<serial fix)
+# ---------------------------------------------------------------------------
+
+
+def test_router_small_batches_go_serial():
+    db = generate_scale(TINY, seed=2)
+    mgr = ScoreManager(db, mode="sparse")
+    assert mgr.batch_min_candidates == 8
+    rvs = _all_rvs(db)
+    fams = [(rvs[0], ()), (rvs[1], (rvs[0],))]
+    mgr.score_batch(fams)  # 2 < 8: movielens-shaped sweep -> serial route
+    assert mgr.n_serial_routed == len(fams)
+    assert mgr.n_batched_routed == 0
+    # memo-complete re-request costs nothing and routes nowhere
+    mgr.score_batch(fams)
+    assert mgr.n_serial_routed == len(fams)
+
+
+def test_router_threshold_env_knob(monkeypatch):
+    from repro.core.score_manager import batch_min_candidates
+
+    monkeypatch.setenv("REPRO_BATCH_MIN_CANDIDATES", "0")
+    assert batch_min_candidates() == 0
+    db = generate_scale(TINY, seed=2)
+    mgr = ScoreManager(db, mode="sparse")
+    rvs = _all_rvs(db)
+    mgr.score_batch([(rvs[0], ()), (rvs[1], (rvs[0],))])
+    assert mgr.n_serial_routed == 0  # 0 disables the serial route entirely
+    assert mgr.n_batched_routed == 2
+    monkeypatch.setenv("REPRO_BATCH_MIN_CANDIDATES", "many")
+    with pytest.raises(ValueError):
+        batch_min_candidates()
+    monkeypatch.setenv("REPRO_BATCH_MIN_CANDIDATES", "-1")
+    with pytest.raises(ValueError):
+        batch_min_candidates()
+
+
+def test_router_routes_are_score_identical():
+    db = generate_scale(TINY, seed=4)
+    serial_mgr = ScoreManager(db, mode="sparse")
+    batched_mgr = ScoreManager(db, mode="sparse")
+    batched_mgr.batch_min_candidates = 0  # force the set-oriented engine
+    rvs = _all_rvs(db)
+    fams = [(c, tuple(p for p in rvs[:2] if p != c)) for c in rvs]
+    a = serial_mgr.score_batch(fams)
+    b = batched_mgr.score_batch(fams)
+    assert serial_mgr.n_serial_routed == len(fams)
+    assert batched_mgr.n_batched_routed == len(fams)
+    for fa, fb in zip(a, b):
+        assert fa.n_params == fb.n_params
+        assert fa.loglik == pytest.approx(fb.loglik, rel=1e-6, abs=1e-6)
+
+
+def test_router_walks_identical_edges():
+    """The regression pin: movielens-shaped small sweeps take the serial
+    route and walk the same edges as the forced-batched engine."""
+    db = generate_scale(TINY, seed=8)
+    rvs = _all_rvs(db)
+    routed = ScoreManager(db, mode="sparse")
+    forced = ScoreManager(db, mode="sparse")
+    forced.batch_min_candidates = 0
+    # hill_climb directly (no lattice prefetch): the opening 6-family batch
+    # sits under the default threshold of 8, so the router must fire
+    res_r = hill_climb(rvs, routed, score="aic", max_parents=2)
+    res_f = hill_climb(rvs, forced, score="aic", max_parents=2)
+    assert sorted(res_r.bn.edges()) == sorted(res_f.bn.edges())
+    assert res_r.n_sweeps == res_f.n_sweeps
+    assert routed.n_serial_routed > 0  # small batches actually took the route
+    assert forced.n_serial_routed == 0
+    assert forced.n_batched_routed > 0
+
+    # and the full lattice search stays edge-identical across routes
+    res_lr = learn_and_join(
+        db, ScoreManager(db, mode="sparse"), score="aic",
+        max_parents=2, max_chain=1,
+    )
+    fmgr = ScoreManager(db, mode="sparse")
+    fmgr.batch_min_candidates = 0
+    res_lf = learn_and_join(db, fmgr, score="aic", max_parents=2, max_chain=1)
+    assert sorted(res_lr.bn.edges()) == sorted(res_lf.bn.edges())
+
+
+# ---------------------------------------------------------------------------
+# multi-device leg (forced 4-device CPU, subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_build_multidevice():
+    """Mesh-sharded COO aggregation + CT build under 4 fake CPU devices."""
+    code = """
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.core.distributed import (
+    pad_rows, sharded_coo_aggregate, sharded_sparse_contingency_table,
+)
+from repro.core.sparse_counts import as_host, device_sparse_contingency_table
+from repro.data.synth import ScaleSpec, generate_scale
+from repro.kernels import ops
+
+assert jax.device_count() == 4, jax.devices()
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+
+# raw stream aggregation: sharded vs single-device, bit-identical
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+rng = np.random.default_rng(0)
+codes = rng.integers(0, 97, size=1000).astype(np.int64)
+weights = rng.integers(1, 5, size=1000).astype(np.float32)
+with enable_x64():  # int64 codes must survive the device transfer
+    dc, dw = jnp.asarray(codes), jnp.asarray(weights)
+    pad_c = pad_rows(dc, 4, jnp.iinfo(jnp.int64).max)
+    pad_w = pad_rows(dw, 4, 0.0)
+u, s = sharded_coo_aggregate(pad_c, pad_w, mesh)
+u1, s1 = ops.coo_aggregate(dc, dw)
+n = int(np.searchsorted(np.asarray(u), np.iinfo(np.int64).max))
+n1 = int(np.searchsorted(np.asarray(u1), np.iinfo(np.int64).max))
+assert np.array_equal(np.asarray(u)[:n], np.asarray(u1)[:n1])
+assert np.array_equal(np.asarray(s)[:n], np.asarray(s1)[:n1])
+
+# full CT build through the mesh wrapper vs the single-device build
+db = generate_scale(ScaleSpec("t", n_facts=2000, n_src=200, n_dst=200), seed=1)
+rvs = tuple(v.vid for v in db.catalog.par_rvs)
+a = as_host(sharded_sparse_contingency_table(db, rvs, mesh))
+b = as_host(device_sparse_contingency_table(db, rvs, shards=1))
+assert a.rvs == b.rvs
+assert np.array_equal(np.asarray(a.codes), np.asarray(b.codes))
+assert np.array_equal(np.asarray(a.counts), np.asarray(b.counts))
+print("multidevice sharded build matches single-device: True")
+"""
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+             "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "matches single-device: True" in r.stdout

@@ -226,6 +226,7 @@ def test_batched_path_uses_fewer_kernel_launches():
     db = university_db()
     ser = CountCache(db, mode="precount", impl="ref")
     mgr = ScoreManager(db, mode="precount", impl="ref")
+    mgr.batch_min_candidates = 0  # router off: this pins the batched engine
     ops.reset_launch_counts()
     hill_climb(UNIV_RVS, ser, score="aic", impl="ref")
     serial_launches = ops.total_launches()

@@ -37,11 +37,24 @@ METRICS = [
     ("sparse_device_speedup", "device vs host-sparse (warm)", False),
 ]
 
+#: Scale-leg metrics (the ``bench_scale`` key: million-row synthetic star
+#: schemas, host vs sharded-device sparse joint builds), same format.
+SCALE_METRICS = [
+    ("sparse_device_speedup", "device vs host build (warm)", False),
+    ("host_build_ms", "host build ms", True),
+    ("device_build_ms_warm", "device build ms (warm)", True),
+    ("device_build_ms_cold", "device build ms (cold)", True),
+    ("sharded2_build_ms", "sharded build ms (2 shards)", True),
+    ("sharded4_build_ms", "sharded build ms (4 shards)", True),
+    ("compiles", "compiles (cold build)", True),
+]
+
 #: Wall-clock metrics whose >25% regressions emit ::warning annotations.
 WALL_CLOCK = {
     "sweep_ms_batched",
     "sparse_device_build_ms_warm",
     "sparse_device_seconds",
+    "device_build_ms_warm",
 }
 WALL_CLOCK_WARN_PCT = 25.0
 
@@ -66,20 +79,16 @@ def _delta_pct(base, head) -> float | None:
     return (head - base) / abs(base) * 100.0
 
 
-def diff_tables(base: dict, head: dict) -> tuple[str, list[str]]:
-    """-> (markdown, warnings): the per-dataset delta tables + regressions."""
-    lines: list[str] = ["## Bench trend: base vs this run", ""]
-    warnings: list[str] = []
-    names = [n for n in head.get("datasets", {}) if n in base.get("datasets", {})]
-    if not names:
-        lines.append("_No overlapping datasets between base and head runs._")
-        return "\n".join(lines) + "\n", warnings
+def _section(base: dict, head: dict, group: str, metrics,
+             lines: list[str], warnings: list[str]) -> int:
+    """Append one group's per-entry delta tables; -> entries rendered."""
+    names = [n for n in head.get(group, {}) if n in base.get(group, {})]
     for name in names:
-        b, h = base["datasets"][name], head["datasets"][name]
+        b, h = base[group][name], head[group][name]
         lines += [f"### {name}", "",
                   "| metric | base | head | delta |",
                   "|---|---:|---:|---:|"]
-        for key, label, lower_better in METRICS:
+        for key, label, lower_better in metrics:
             bv, hv = b.get(key), h.get(key)
             if bv is None and hv is None:
                 continue
@@ -103,6 +112,18 @@ def diff_tables(base: dict, head: dict) -> tuple[str, list[str]]:
                     f"({_fmt(bv)} -> {_fmt(hv)})"
                 )
         lines.append("")
+    return len(names)
+
+
+def diff_tables(base: dict, head: dict) -> tuple[str, list[str]]:
+    """-> (markdown, warnings): the per-dataset delta tables + regressions."""
+    lines: list[str] = ["## Bench trend: base vs this run", ""]
+    warnings: list[str] = []
+    n = _section(base, head, "datasets", METRICS, lines, warnings)
+    n += _section(base, head, "bench_scale", SCALE_METRICS, lines, warnings)
+    if not n:
+        lines.append("_No overlapping datasets between base and head runs._")
+        return "\n".join(lines) + "\n", warnings
     if warnings:
         lines += ["> ⚠️ wall-clock regressions over "
                   f"{WALL_CLOCK_WARN_PCT:.0f}% (warn-only):"]
