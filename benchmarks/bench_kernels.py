@@ -4,6 +4,12 @@ On CPU the production dispatch is the jnp oracle (Pallas interpret mode is a
 correctness harness, not a fast path); on TPU the same calls hit the Pallas
 kernels.  Reported numbers are steady-state (post-jit) per-call times of the
 production path at count-manager-realistic shapes.
+
+:func:`run_micro` adds the COO-primitive sweep (sort-aggregate, join probe,
+join expansion — the three "kernel endgame" hotspots) as rows-vs-ms curves
+with per-call launch counts, recorded under the ``bench_kernels`` key of
+``BENCH_structure.json`` and rendered into the README by
+``tools/render_bench.py``.
 """
 
 from __future__ import annotations
@@ -13,8 +19,9 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
-from repro.kernels import ops
+from repro.kernels import bucketing, ops
 
 from .common import emit
 
@@ -53,6 +60,108 @@ def run() -> None:
     secs = _bench(ops.block_predict, A, L)
     flops = 2 * 8192 * 1024 * 8
     emit("kernels/block_predict_8kx1kx8", secs, f"gflops={flops / secs / 1e9:.2f}")
+
+
+#: Row-count sweep of the COO primitive microbenches — ladder rungs, so the
+#: timed calls reuse exactly the programs the device build compiles.
+MICRO_ROWS = (4096, 65536, 524288)
+
+
+def run_micro() -> dict:
+    """COO primitive sweep: sort-aggregate / join probe / join expansion.
+
+    Times the *production* dispatch of each primitive (on CPU that is the
+    XLA sort and the jitted jnp expansion oracle; on TPU the Pallas
+    kernels) at bucket-ladder rungs, steady-state per-call.  Returns the
+    JSON-ready dict ``benchmarks.run`` stores under
+    ``payload["bench_kernels"]``: per primitive, a ``rows -> {ms,
+    rows_per_s, launches}`` curve (launches = accounted ops-layer
+    dispatches per call — the device-launch proxy the structure bench also
+    reports).
+    """
+    rng = np.random.default_rng(0)
+    out: dict[str, dict] = {"sort": {}, "join_probe": {}, "join_expand": {}}
+
+    def curve(kind, n, fn, *args, total_rows=None, launches=1, **kw):
+        # launches = compiled-program dispatches per timed call: the jitted
+        # probe/expansion phases are one program each by construction; the
+        # sort wrapper may add a padding launch on off-rung streams (not
+        # here — the sweep sits on exact rungs)
+        secs = _bench(fn, *args, **kw)
+        rows = total_rows or n
+        out[kind][str(n)] = {
+            "ms": secs * 1e3,
+            "rows_per_s": rows / secs,
+            "launches": launches,
+        }
+        emit(f"kernels/{kind}_{n}", secs, f"rows_per_s={rows / secs:.3g}")
+
+    for n in MICRO_ROWS:
+        # sort-aggregate: int64 composite codes with heavy duplication (the
+        # canonicalization workload of every build/marginal step)
+        codes = (rng.integers(0, max(n // 8, 2), n) * (1 << 32)
+                 + rng.integers(0, 1 << 16, n)).astype(np.int64)
+        weights = rng.integers(1, 4, n).astype(np.float32)
+        curve("sort", n, ops.coo_aggregate, codes, weights)
+
+        # join probe: FK column vs sorted entity-row column (two
+        # searchsorted passes + count mask, one fused program).  The x64
+        # scope matches production (coo_join traces the int64 pair total)
+        # so the timed program is the build's, not a fresh int32 twin.
+        sorted_keys = jnp.asarray(np.sort(rng.integers(0, n // 2, n)).astype(np.int32))
+        probe_keys = jnp.asarray(rng.integers(0, n // 2, n).astype(np.int32))
+
+        def probe(s, p):
+            with enable_x64():
+                return ops._coo_join_probe_jit(s, p)
+
+        curve("join_probe", n, probe, sorted_keys, probe_keys)
+
+        # join expansion: match table -> flat gather indices, ~2 matches
+        # per probe (the rank/gather kernel or its searchsorted oracle)
+        cnt = rng.integers(0, 4, n).astype(np.int32)
+        lo = np.concatenate([[0], np.cumsum(cnt)[:-1]]).astype(np.int32)
+        total = int(cnt.sum())
+        padded = bucketing.bucket_rows(total)
+        curve(
+            "join_expand", n,
+            ops._coo_join_expand_ref_jit,
+            jnp.asarray(lo), jnp.asarray(cnt), padded,
+            total_rows=total,
+        )
+
+    # pallas-vs-oracle sort bit-identity: the acceptance flag next to the
+    # host-vs-device and sharded ones (gated by benchmarks.run like every
+    # *_equal).  Interpret mode off-TPU, so the stream is small on purpose
+    # — identity pad tail included, the exact wrapper-fed layout.
+    from repro.kernels.coo_sort import coo_sort_aggregate
+
+    codes = (rng.integers(0, 40, 480) * (1 << 36)
+             + rng.integers(0, 1 << 12, 480)).astype(np.int64)
+    codes = np.concatenate([codes, np.full(32, np.iinfo(np.int64).max)])
+    weights = np.concatenate(
+        [rng.integers(1, 9, 480).astype(np.float32), np.zeros(32, np.float32)]
+    )
+    with enable_x64():
+        ku, ks = coo_sort_aggregate(
+            jnp.asarray(codes), jnp.asarray(weights),
+            interpret=jax.default_backend() != "tpu",
+            acc=ops.count_acc_dtype(),
+        )
+        ou, osum = ops._coo_aggregate_impl(
+            jnp.asarray(codes), jnp.asarray(weights)
+        )
+    out["sort_kernel"] = {
+        "pallas_oracle_sort_equal": bool(
+            np.array_equal(np.asarray(ku), np.asarray(ou))
+            and np.array_equal(np.asarray(ks), np.asarray(osum))
+        ),
+    }
+    emit(
+        "kernels/sort_pallas_vs_oracle", 0.0,
+        f"equal={out['sort_kernel']['pallas_oracle_sort_equal']}",
+    )
+    return out
 
 
 def main(argv=None) -> None:

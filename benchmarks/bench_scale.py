@@ -25,9 +25,15 @@ Results land under the ``bench_scale`` key of ``BENCH_structure.json``.
 
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
-from repro.core.counts import joint_contingency_table
+from repro.core.counts import (
+    device_min_rows,
+    joint_contingency_table,
+    set_device_min_rows,
+)
 from repro.core.sparse_counts import as_host
 from repro.kernels import ops
 
@@ -53,12 +59,56 @@ def _equal(host_ct, dev_ct) -> bool:
     )
 
 
+def _crossover_rows(out: dict[str, dict]) -> int | None:
+    """Log-log interpolated host/device break-even row count.
+
+    Fits ``log(speedup)`` linearly in ``log(total_tuples)`` through the
+    measured presets and solves for speedup = 1 — the row count below which
+    the host lexsort build wins, i.e. the measured value the
+    ``REPRO_DEVICE_MIN_ROWS`` default is calibrated against.  ``None``
+    when fewer than two presets ran or all sit on one side of 1x.
+    """
+    pts = sorted(
+        (math.log(m["total_tuples"]), math.log(m["sparse_device_speedup"]))
+        for m in out.values()
+        if m["total_tuples"] > 0 and m["sparse_device_speedup"] > 0
+    )
+    if len(pts) < 2:
+        return None
+    (x0, y0), (x1, y1) = pts[0], pts[-1]
+    if y1 == y0 or not (min(y0, y1) < 0.0 < max(y0, y1)):
+        return None
+    return int(round(math.exp(x0 - y0 * (x1 - x0) / (y1 - y0))))
+
+
 def run_scale(presets: list[str] | None = None) -> dict:
     """Build the scale presets' sparse joints host/device/sharded; -> metrics.
 
     Emits ``scale/<preset>/...`` CSV rows and returns the JSON-ready dict
-    ``benchmarks.run`` stores under ``payload["bench_scale"]``.
+    ``benchmarks.run`` stores under ``payload["bench_scale"]``.  Device legs
+    run with the ``REPRO_DEVICE_MIN_ROWS`` crossover forced to 0 (this leg
+    *measures* the device path — the routing would host-route the small
+    presets); each preset records whether production routing would have
+    taken the device path, and the ``_routing`` entry records the active
+    threshold next to the crossover interpolated from the measurements.
     """
+    old_min_rows = set_device_min_rows(0)
+    try:
+        out = _run_scale(presets)
+    finally:
+        set_device_min_rows(old_min_rows)
+    # routed flags use the PRODUCTION threshold (restored above), not the 0
+    # the measurement legs forced
+    for m in out.values():
+        m["device_routed"] = m["total_tuples"] >= device_min_rows()
+    out["_routing"] = {
+        "device_min_rows": device_min_rows(),
+        "measured_crossover_rows": _crossover_rows(out),
+    }
+    return out
+
+
+def _run_scale(presets: list[str] | None = None) -> dict:
     out: dict[str, dict] = {}
     for name in presets or FULL_PRESETS:
         bdb, gen_secs = timed(load, name)

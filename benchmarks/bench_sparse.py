@@ -74,6 +74,18 @@ def chain_db(depth: int, card: int, n_attrs: int, n_rows: int = 40, seed: int = 
 
 def run(configs=None) -> list[dict]:
     """Sweep (depth, cardinality, n_attrs); returns the measured rows."""
+    from repro.core.counts import set_device_min_rows
+
+    # measure the device build even on configs below the production
+    # REPRO_DEVICE_MIN_ROWS crossover (the chain DBs are tiny on purpose)
+    old_min_rows = set_device_min_rows(0)
+    try:
+        return _run(configs)
+    finally:
+        set_device_min_rows(old_min_rows)
+
+
+def _run(configs=None) -> list[dict]:
     configs = configs or [
         # scale attribute cardinality at fixed shallow chain
         (1, 4, 2), (1, 8, 2), (1, 16, 2),

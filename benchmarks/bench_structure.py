@@ -26,14 +26,18 @@ BASELINE_OK = {"uw-cse", "mutagenesis", "mondial", "hepatitis"}
 
 #: CI compile budget: max XLA backend compiles any dataset's cold device
 #: leg (build + search, counted by the kernels.bucketing probe) may record
-#: before the bench smoke FAILS.  The shape-bucket ladder keeps the cold
-#: pass at O(op-kinds x rungs) programs (~230 measured on the smoke
-#: dataset, lower for every later dataset of a run because rungs are
-#: shared); the budget adds headroom for backend drift but fails long
-#: before a per-join-shape recompile regression (which lands in the
-#: thousands).  Committed here so a regression fails the PR that caused
-#: it, not the next profiling session.
-COMPILE_BUDGET = 320
+#: before the bench smoke FAILS.  With the build folded into jitted
+#: super-programs (sparse_counts), the per-build ladder floor collapsing
+#: small-stream shape diversity, and the fused histogram/sort aggregation
+#: programs, the cold pass measures ~87 programs on the smoke dataset
+#: (build ~45 + search ~42; lower for every later dataset of a run because
+#: rungs are shared — was ~230 before the super-program fold).  The budget
+#: adds ~40% headroom for backend drift but fails long before a
+#: per-join-shape recompile regression (which lands in the thousands) or a
+#: de-fusion regression (which lands in the hundreds).  Committed here so
+#: a regression fails the PR that caused it, not the next profiling
+#: session.
+COMPILE_BUDGET = 120
 
 #: Warm-leg compile budget: a second same-shape build + search must hit
 #: the jit cache everywhere.  Zero in a healthy run; tiny headroom only
@@ -126,6 +130,23 @@ def run_batched(
     adaptive batch/serial router's split is reported as
     ``batch_router_serial`` / ``batch_router_batched``.
     """
+    from repro.core.counts import set_device_min_rows
+
+    out: dict[str, dict] = {}
+    # The device legs MEASURE the device path — force it even on datasets
+    # below the REPRO_DEVICE_MIN_ROWS production crossover (uw-cse is), or
+    # every device metric would silently re-measure the host builder.
+    old_min_rows = set_device_min_rows(0)
+    try:
+        out.update(_run_batched(datasets, scale, max_chain))
+    finally:
+        set_device_min_rows(old_min_rows)
+    return out
+
+
+def _run_batched(
+    datasets: list[str], scale: float | None = None, max_chain: int = 1
+) -> dict:
     out: dict[str, dict] = {}
     for name in datasets:
         bdb = load(name, scale)

@@ -42,7 +42,7 @@ def main(argv: list[str] | None = None) -> None:
     if a.json is not None:
         import json
 
-        from . import bench_scale, bench_structure
+        from . import bench_kernels, bench_scale, bench_structure
 
         datasets = ["uw-cse"] if a.smoke else ["uw-cse", "mutagenesis", "movielens"]
         scale = 0.05 if a.smoke else None
@@ -50,6 +50,10 @@ def main(argv: list[str] | None = None) -> None:
         payload = bench_structure.json_payload(
             datasets, scale, max_chain=1, smoke=a.smoke
         )
+        # COO primitive microbenches (sort / join probe / join expansion):
+        # rows-vs-ms curves of the kernel-endgame hotspots, per-primitive
+        # metric layout, so they keep their own top-level key too.
+        payload["bench_kernels"] = bench_kernels.run_micro()
         # The scale leg: host vs (sharded) device sparse joint builds on the
         # synthetic star schemas.  Its per-preset metric keys differ from
         # the structure bench's, so it lives under its own top-level key.
@@ -70,7 +74,7 @@ def main(argv: list[str] | None = None) -> None:
         # sharded-merge regression cannot land silently.
         failed = [
             f"{name}:{key}"
-            for group in ("datasets", "bench_scale")
+            for group in ("datasets", "bench_scale", "bench_kernels")
             for name, metrics in payload[group].items()
             for key, val in sorted(metrics.items())
             if key.endswith("_equal") and val is False

@@ -72,14 +72,24 @@ def sparse_device_demo(db) -> None:
     sweep is then scored by ONE fused ``sparse_family_score`` launch
     (device sort + segment totals + the SUM(count * log cp) contraction)
     with no host sort and nothing but the per-family score row coming back.
+
+    The University toy DB sits far below the measured host/device build
+    crossover, so production routing (``REPRO_DEVICE_MIN_ROWS``) would
+    quietly serve it from the host builder; the demo zeroes the threshold
+    to show the device build itself.
     """
     from repro.core import DeviceSparseCT
+    from repro.core.counts import set_device_min_rows
     from repro.kernels import ops
 
     print("\n== Device-resident sparse counting (COO joint on device) ==")
     ops.reset_launch_counts()
     ops.reset_transfer_counts()
-    mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    old_min_rows = set_device_min_rows(0)
+    try:
+        mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    finally:
+        set_device_min_rows(old_min_rows)
     assert isinstance(mgr.joint, DeviceSparseCT)
     build_tr = ops.transfer_bytes()
     print(f"  joint: #SS={mgr.joint.n_nonzero()} of {mgr.joint.n_cells} dense cells, "

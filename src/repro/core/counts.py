@@ -52,6 +52,7 @@ paper's metaqueries reading the VDB.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass, field
 from typing import Protocol, runtime_checkable
 
@@ -83,6 +84,60 @@ def set_dense_cell_budget(n_cells: int) -> int:
     """Set the global dense/sparse auto-switch budget; returns the old value."""
     global DENSE_CELL_BUDGET
     old, DENSE_CELL_BUDGET = DENSE_CELL_BUDGET, int(n_cells)
+    return old
+
+
+#: Minimum ``db.total_tuples`` for ``device_resident=True`` to actually run
+#: the device build.  Below it the host COO builder (numpy lexsort +
+#: reduceat) wins outright — ``bench_scale`` measures synth-smoke (54k
+#: tuples) at <1x device-vs-host while synth-1m is >2x — so small requests
+#: fall back to :func:`~repro.core.sparse_counts.sparse_contingency_table`
+#: with identical cells.  The default is calibrated from the committed
+#: ``bench_scale`` numbers: the log-log interpolated host/device crossover
+#: lands in the 2-4 * 10^5 tuple range run-to-run, so the default sits at
+#: the power of two inside it (the bench JSON records the re-measured
+#: crossover under ``bench_scale._routing`` on every refresh).
+_DEVICE_MIN_ROWS_DEFAULT = 1 << 18
+
+
+def _env_device_min_rows() -> int:
+    raw = os.environ.get("REPRO_DEVICE_MIN_ROWS", "").strip()
+    if not raw:
+        return _DEVICE_MIN_ROWS_DEFAULT
+    try:
+        rows = int(raw)
+    except ValueError as e:
+        # fail loudly, like REPRO_BUCKET_BASE: a typo'd value would silently
+        # fall back to the default and defeat the knob
+        raise ValueError(
+            f"REPRO_DEVICE_MIN_ROWS must parse as int, got {raw!r}"
+        ) from e
+    if rows < 0:
+        raise ValueError(f"REPRO_DEVICE_MIN_ROWS must be >= 0, got {rows}")
+    return rows
+
+
+_DEVICE_MIN_ROWS = _env_device_min_rows()
+
+
+def device_min_rows() -> int:
+    """Current device-build row threshold (``0`` = always honor the flag)."""
+    return _DEVICE_MIN_ROWS
+
+
+def set_device_min_rows(rows: int) -> int:
+    """Set the device-build row threshold; returns the previous value.
+
+    Benchmarks and device tests pass ``0`` to force the device path on
+    small databases; production tuning moves the crossover measured by
+    ``bench_scale``.
+    """
+    global _DEVICE_MIN_ROWS
+    old = _DEVICE_MIN_ROWS
+    rows = int(rows)
+    if rows < 0:
+        raise ValueError(f"device min rows must be >= 0, got {rows}")
+    _DEVICE_MIN_ROWS = rows
     return old
 
 
@@ -844,17 +899,25 @@ def contingency_table(
     :class:`~repro.core.sparse_counts.DeviceSparseCT` (bit-identical cells,
     zero host-side COO materialization — all subsequent CT algebra runs
     through ``jax.lax.sort``-based device aggregation); dense tables are
-    jax arrays already, so the flag is a no-op for them.  ``shards``
+    jax arrays already, so the flag is a no-op for them.  Databases with
+    fewer than :func:`device_min_rows` total tuples (``REPRO_DEVICE_MIN_ROWS``)
+    ignore the flag and use the host builder — below the measured crossover
+    the device build's launch overhead loses to numpy outright, and the
+    cells are identical either way.  ``shards``
     row-shards the device build's fact-table scans (default: the
     ``REPRO_COO_SHARDS`` env knob) — bit-identical result, only relevant
     with ``device_resident=True``.
     """
     if _pick_backend(db, rvs, impl, group_fovar, dense_cell_budget) == "sparse":
-        if device_resident:
+        if device_resident and db.total_tuples >= _DEVICE_MIN_ROWS:
             # Device-side build: the join-tree contraction and Möbius
             # recursion run as COO code algebra over jax.Arrays — no host
             # COO column is ever materialized, so there is no bulk h2d copy
-            # of the result (ROADMAP "device-side builds").
+            # of the result (ROADMAP "device-side builds").  Databases below
+            # the REPRO_DEVICE_MIN_ROWS crossover skip it: at small N the
+            # host lexsort build beats device launch + compile overhead
+            # (bench_scale's measured crossover), so they fall through to
+            # the host builder with identical cells.
             from .sparse_counts import device_sparse_contingency_table
 
             return device_sparse_contingency_table(

@@ -76,6 +76,8 @@ code never observes a flipped global flag.
 
 from __future__ import annotations
 
+import contextlib
+import functools
 import math
 import os
 from dataclasses import dataclass
@@ -468,51 +470,71 @@ class DeviceSparseCT:
         up to 2**24-count totals — because float64 cannot lower there).
         """
         with enable_x64():
-            t = jnp.sum(self.counts, dtype=ops.count_acc_dtype())
+            t = _sp_total(self.counts)
         return np.float32(float(t))
 
     def n_nonzero(self) -> int:
         """Number of realized sufficient statistics (the paper's #SS)."""
-        return int(jnp.sum(self.counts != 0.0))
+        return int(_sp_n_nonzero(self.counts))
 
     def card_of(self, rv: str) -> int:
         return self.cards[self.rvs.index(rv)]
 
     def _reencode(self, order: tuple[str, ...]):
-        """Device codes of the kept axes, re-encoded row-major in ``order``.
+        """Kept axes re-encoded row-major in ``order`` -> (cards, codes, counts).
 
         Padding / zero-count entries are pinned to :data:`_PAD_CODE` so
         their (meaningless) digit arithmetic never lands on a real cell.
+        The program is de-diversified on BOTH axes of its jit key: the
+        input is bucket-padded up front (under a device build's stream
+        floor, every sub-floor CT re-encode shares one length rung — the
+        returned counts column is the padded twin, aligned with the
+        codes), and the axis dimension is padded to :data:`_REENC_ARITY`
+        identity axes (stride 1, card 1, new-stride 0: digit identically
+        0, contributing nothing) so arity drops out of the key too.  CTs
+        wider than the pad width (not seen in practice — FactorBase
+        families are a child plus a handful of parents) fall back to
+        their natural arity.
         """
         new_cards = tuple(self.card_of(v) for v in order)
         strides = radix_strides(list(self.cards))
+        idxs = [self.rvs.index(v) for v in order]
+        sel_strides = [strides[i] for i in idxs]
+        sel_cards = [self.cards[i] for i in idxs]
+        sel_new = radix_strides(list(new_cards))
+        if (pad := _REENC_ARITY - len(idxs)) > 0:
+            sel_strides += [1] * pad
+            sel_cards += [1] * pad
+            sel_new += [0] * pad
         with enable_x64():
-            valid = self.counts != 0.0
-            code = jnp.zeros(self.codes.shape, jnp.int64)
-            for v, s in zip(order, radix_strides(list(new_cards))):
-                i = self.rvs.index(v)
-                digit = (self.codes // strides[i]) % self.cards[i]
-                code = code + digit * jnp.int64(s)
-            code = jnp.where(valid, code, _PAD_CODE)
-        return new_cards, code
+            codes, counts, _ = ops._pad_coo_stream(
+                self.codes, self.counts, _PAD_CODE
+            )
+            code = _sp_reencode(
+                codes, counts,
+                jnp.asarray(sel_strides, jnp.int64),
+                jnp.asarray(sel_cards, jnp.int64),
+                jnp.asarray(sel_new, jnp.int64),
+            )
+        return new_cards, code, counts
 
     def marginal(self, keep: tuple[str, ...]) -> "DeviceSparseCT":
         """GROUP BY a subset of the par-RVs — one device sort+segment-sum."""
         missing = [v for v in keep if v not in self.rvs]
         if missing:
             raise KeyError(f"par-RVs {missing} not in this CT {self.rvs}")
-        new_cards, new_codes = self._reencode(tuple(keep))
-        return DeviceSparseCT.build(tuple(keep), new_cards, new_codes, self.counts)
+        new_cards, new_codes, counts = self._reencode(tuple(keep))
+        return DeviceSparseCT.build(tuple(keep), new_cards, new_codes, counts)
 
     def transpose(self, order: tuple[str, ...]) -> "DeviceSparseCT":
         if tuple(order) == self.rvs:
             return self
         if sorted(order) != sorted(self.rvs):
             raise ValueError(f"transpose order {order} != axes {self.rvs}")
-        new_cards, new_codes = self._reencode(tuple(order))
+        new_cards, new_codes, counts = self._reencode(tuple(order))
         # permutation is a bijection on valid codes: the aggregation step of
         # build() only merges the zero-count padding entries
-        return DeviceSparseCT.build(tuple(order), new_cards, new_codes, self.counts)
+        return DeviceSparseCT.build(tuple(order), new_cards, new_codes, counts)
 
     def marginal_batch(self, keeps: list[tuple[str, ...]]) -> list["DeviceSparseCT"]:
         """Batched GROUP BY, device end-to-end (no host sort).
@@ -526,29 +548,31 @@ class DeviceSparseCT:
             return []
         offsets, all_cards, total_space = plan_marginal_batch(self, keeps)
         strides_self = radix_strides(list(self.cards))
+        # (B, m_max) traced stride/card matrices, short keeps padded with
+        # (stride 1, card 1, new-stride 0) — the padded digit is 0 and
+        # contributes nothing, so ONE _sp_marginal_batch_encode program
+        # serves every batch of this (#SS, B, m_max) signature.
+        m_max = max((len(k) for k in keeps), default=1) or 1
+        sel_s, sel_c, new_s = [], [], []
+        for keep, cards in zip(keeps, all_cards):
+            idxs = [self.rvs.index(v) for v in keep]
+            pad = m_max - len(keep)
+            sel_s.append([strides_self[i] for i in idxs] + [1] * pad)
+            sel_c.append([self.cards[i] for i in idxs] + [1] * pad)
+            new_s.append(list(radix_strides(list(cards))) + [0] * pad)
         with enable_x64():
-            valid = self.counts != 0.0
-            digit_cache: dict[str, jax.Array] = {}
-
-            def digit(rv: str) -> jax.Array:
-                if rv not in digit_cache:
-                    i = self.rvs.index(rv)
-                    digit_cache[rv] = (self.codes // strides_self[i]) % self.cards[i]
-                return digit_cache[rv]
-
-            chunks = []
-            for keep, cards, off in zip(keeps, all_cards, offsets):
-                code = jnp.full(self.codes.shape, off, jnp.int64)
-                for v, s in zip(keep, radix_strides(list(cards))):
-                    code = code + digit(v) * jnp.int64(s)
-                chunks.append(jnp.where(valid, code, _PAD_CODE))
-            big_codes = jnp.concatenate(chunks)
-            big_counts = jnp.tile(self.counts, len(keeps))
+            big_codes, big_counts = _sp_marginal_batch_encode(
+                self.codes, self.counts,
+                jnp.asarray(sel_s, jnp.int64),
+                jnp.asarray(sel_c, jnp.int64),
+                jnp.asarray(new_s, jnp.int64),
+                jnp.asarray(list(offsets), jnp.int64),
+            )
         codes, counts = ops.coo_aggregate(
             big_codes, big_counts, num_bins=total_space
         )
         with enable_x64():
-            bounds_dev = jnp.searchsorted(
+            bounds_dev = _sp_bounds(
                 codes, jnp.asarray(list(offsets) + [total_space], dtype=jnp.int64)
             )
         bounds = [int(b) for b in ops.to_host(bounds_dev)]
@@ -556,9 +580,11 @@ class DeviceSparseCT:
         for i, keep in enumerate(keeps):
             lo, hi = bounds[i], bounds[i + 1]
             with enable_x64():
-                fam_codes = codes[lo:hi] - jnp.int64(offsets[i])
+                fam_codes, fam_counts = _sp_slice_shift(
+                    codes, counts, lo, hi, jnp.int64(offsets[i])
+                )
             out.append(
-                DeviceSparseCT(tuple(keep), all_cards[i], fam_codes, counts[lo:hi])
+                DeviceSparseCT(tuple(keep), all_cards[i], fam_codes, fam_counts)
             )
         return out
 
@@ -953,8 +979,10 @@ class _DevMsg:
     and aggregated — except for **shape-bucket padding**: every column is
     padded up to the ``kernels.bucketing`` row ladder with an identity
     suffix (``rows = _PAD_ROW``, ``codes = _PAD_CODE``, ``weights = 0``),
-    so the whole build hits O(buckets) compiled programs instead of one
-    per data-dependent message length.  Valid entries form a prefix
+    so the whole build flows through the small set of jitted per-rung
+    super-programs below — one compiled program per (ladder rung, arity)
+    signature, not one per data-dependent message length or per radix
+    constant.  Valid entries form a prefix
     (weights strictly positive — messages never subtract), pads a suffix
     that sorts last, so ``rows`` is still ready to be the sorted side of
     the next ``ops.coo_join`` (pad rows are never matched: every valid
@@ -979,65 +1007,377 @@ class _DevMsg:
         return math.prod(self.cards) if self.cards else 1
 
 
-def _trim_pad(codes, counts):
-    """Slice a device aggregation result down to a bucket past its pad tail.
+# ---------------------------------------------------------------------------
+# Build super-programs: one traced function per (shape, arity) signature
+# ---------------------------------------------------------------------------
+#
+# Every step of the device build used to run as an *eager* chain of jnp
+# ops — correct, but each distinct chain backend-compiles its own set of
+# one-off programs, and the radix constants baked into the chains (strides,
+# code spaces, arity offsets) multiplied the count into the hundreds.  The
+# functions below are the same arithmetic folded into a small set of jitted
+# **super-programs**.  Two rules keep their compile count flat:
+#
+#   1. All radix constants are passed as *traced* int64 scalars/vectors.
+#      jit keys its cache on (shape, dtype, weak_type) — never on traced
+#      values — so one compiled program serves every stride/cardinality
+#      combination of a given arity.  Calls happen inside ``enable_x64``
+#      so the int64 arithmetic contract is unchanged.
+#   2. Arity and ladder rung are the ONLY cache keys (argument counts and
+#      shapes), both bounded: arity by the schema, shapes by the
+#      ``kernels.bucketing`` row ladder.
+#
+# ``REPRO_FUSED_BUILD=0`` (or :func:`set_fused_build`) drops every
+# super-program back to its eager body — same source, same results — as a
+# bisection aid when a fusion is suspected.
 
-    The shared compaction step of every device-build canonicalization: pad
-    entries are a contiguous int-max tail of the sorted result, so one
-    accounted scalar sync (the non-pad count) fixes the slice.  The slice
-    target is the ``bucketing`` row-ladder rung of the valid count — NOT
-    the exact count — so downstream shapes stay on the ladder and the
-    slice itself is one of a bounded set of (rung, rung) programs; the
-    residual tail (< one growth factor) keeps its ``_PAD_CODE``/zero-count
-    identity padding.  The dtype comparison runs under ``enable_x64`` (the
-    sentinel is an int64 literal); the blocking sync itself happens
-    *outside* the scope, per the module's scoping contract.
-    """
-    with enable_x64():
-        n_valid_dev = jnp.sum(codes != _PAD_CODE)
-    n_valid = ops.sync_scalar(n_valid_dev)
-    n_keep = min(int(codes.shape[0]), bucketing.bucket_rows(max(n_valid, 1)))
-    return codes[:n_keep], counts[:n_keep]
-
-
-def _dev_aggregate_pairs(rows, codes, weights, code_space: int, n_rows: int):
-    """Canonicalize a device COO message: one fused aggregate + compaction.
-
-    The device twin of :func:`_aggregate_pairs`: the ``(row, code)`` pair is
-    packed into one int64 composite (row-major), canonicalized by a single
-    ``ops.coo_aggregate`` launch, compacted past the int-max padding tail
-    (:func:`_trim_pad`, to a ladder rung), and unpacked.  Zero-weight
-    entries (bucket padding of the inputs — message weights proper are
-    strictly positive) are pinned to :data:`_PAD_CODE` *before* packing so
-    their garbage row/code values can neither overflow the packing nor
-    land on a real cell, and pinned back to the ``_PAD_ROW``/``_PAD_CODE``
-    message padding after unpacking.  Packing needs ``n_rows * code_space``
-    headroom in int64 — raise rather than wrap.
-    """
-    if int(rows.shape[0]) == 0:
-        return rows, codes, weights
-    if n_rows * code_space >= _MAX_CODE_SPACE:
-        raise OverflowError(
-            f"device message packs {n_rows} rows x {code_space:.3g} codes; "
-            "overflows int64 — use the host builder for this query"
-        )
-    with enable_x64():
-        valid = weights != 0.0
-        comp = jnp.where(
-            valid,
-            jnp.where(valid, rows, 0).astype(jnp.int64) * jnp.int64(code_space)
-            + jnp.where(valid, codes, 0),
-            _PAD_CODE,
-        )
-    u, s = _trim_pad(
-        *ops.coo_aggregate(comp, weights, num_bins=n_rows * code_space)
+_FUSED_MODES = ("0", "1")
+_FUSED = os.environ.get("REPRO_FUSED_BUILD", "1").strip() or "1"
+if _FUSED not in _FUSED_MODES:
+    # fail loudly, like the other REPRO_* knobs
+    raise ValueError(
+        f"REPRO_FUSED_BUILD must be one of {_FUSED_MODES}, got {_FUSED!r}"
     )
+
+
+def fused_build() -> bool:
+    """Whether the device build runs its jitted super-programs (default)."""
+    return _FUSED == "1"
+
+
+def set_fused_build(on: bool) -> bool:
+    """Toggle the super-program fusion; returns the previous setting."""
+    global _FUSED
+    old = _FUSED == "1"
+    _FUSED = "1" if on else "0"
+    return old
+
+
+def _maybe_jit(fn=None, *, static_argnums=()):
+    """jit a build super-program behind the ``REPRO_FUSED_BUILD`` knob.
+
+    The decorated function dispatches per call: jitted when fusion is on,
+    the plain eager body when it is off — one source of truth either way.
+    """
+    if fn is None:
+        return functools.partial(_maybe_jit, static_argnums=static_argnums)
+    jitted = jax.jit(fn, static_argnums=static_argnums)
+
+    @functools.wraps(fn)
+    def wrapper(*args):
+        return (jitted if fused_build() else fn)(*args)
+
+    return wrapper
+
+
+@_maybe_jit
+def _sp_encode(strides, *cols):
+    """Mixed-radix encode of attribute columns: ``sum(col_i * stride_i)``."""
+    code = jnp.zeros(cols[0].shape, jnp.int64)
+    for i, col in enumerate(cols):
+        code = code + col.astype(jnp.int64) * strides[i]
+    return code
+
+
+def _pad_cols_to(rows, codes, weights, n_pad: int):
+    """(traced helper) top message columns up to ``n_pad`` with the identity
+    suffix ``(_PAD_ROW, _PAD_CODE, 0)``."""
+    n = int(codes.shape[0])
+    if n_pad <= n:
+        return rows, codes, weights
+    w = n_pad - n
+    rows = jnp.concatenate([rows, jnp.full((w,), _PAD_ROW, jnp.int32)])
+    codes = jnp.concatenate([codes, jnp.full((w,), _PAD_CODE, jnp.int64)])
+    weights = jnp.concatenate([weights, jnp.zeros((w,), jnp.float32)])
+    return rows, codes, weights
+
+
+@_maybe_jit(static_argnums=(1, 2))
+def _sp_initial_dense(strides, n: int, n_pad: int, *cols):
+    """Un-restricted initial message: encode + arange rows + unit weights +
+    bucket pad, one program per (entity size, arity)."""
+    codes = jnp.zeros((n,), jnp.int64)
+    for i, col in enumerate(cols):
+        codes = codes + col.astype(jnp.int64) * strides[i]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    weights = jnp.ones((n,), jnp.float32)
+    return _pad_cols_to(rows, codes, weights, n_pad)
+
+
+@_maybe_jit(static_argnums=(2, 3))
+def _sp_initial_restrict(strides, r, n: int, n_pad: int, *cols):
+    """Restricted initial message: the single kept entity row, selected by a
+    *traced* ``dynamic_slice`` so the program is independent of which row —
+    the restrict value changes per group sweep, the program must not."""
+    codes = jnp.zeros((n,), jnp.int64)
+    for i, col in enumerate(cols):
+        codes = codes + col.astype(jnp.int64) * strides[i]
+    r = r.astype(jnp.int32)
+    codes1 = jax.lax.dynamic_slice(codes, (r,), (1,))
+    rows1 = jnp.full((1,), r, jnp.int32)
+    weights1 = jnp.ones((1,), jnp.float32)
+    return _pad_cols_to(rows1, codes1, weights1, n_pad)
+
+
+def _pack_inline(rows, codes, weights, code_space):
+    """(traced helper) pack ``(row, code)`` into one int64 composite,
+    row-major.  Zero-weight entries (bucket padding — message weights
+    proper are strictly positive) are pinned to :data:`_PAD_CODE` before
+    packing so their garbage row/code values can neither overflow the
+    packing nor land on a real cell."""
+    valid = weights != 0.0
+    return jnp.where(
+        valid,
+        jnp.where(valid, rows, 0).astype(jnp.int64) * code_space
+        + jnp.where(valid, codes, 0),
+        _PAD_CODE,
+    )
+
+
+_sp_pack = _maybe_jit(_pack_inline)
+
+
+@_maybe_jit
+def _sp_elim_dense_pack(codes_m, weights_m, fk_leaf, fk_other, rcode, d_r, cs_out):
+    """Dense-message leaf elimination + pack, fused: the FK column gathers
+    the message directly (entry index == entity row id), relationship
+    attributes splice in at radix ``d_r``, and the result is packed against
+    the receiving fovar's rows in the same program."""
+    codes = codes_m[fk_leaf] * d_r + rcode
+    weights = weights_m[fk_leaf]
+    rows_j = fk_other.astype(jnp.int32)
+    return _pack_inline(rows_j, codes, weights, cs_out), weights
+
+
+@_maybe_jit
+def _sp_elim_join_pack(
+    codes_m, weights_m, rcode, fk_other, idx_m, idx_r, valid, d_r, cs_out
+):
+    """Sort-merge leaf elimination + pack, fused: gather both join sides
+    through the validity mask (garbage-slot gathers may surface
+    :data:`_PAD_CODE` values whose radix shift would overflow int64),
+    splice relationship attributes, pack against the receiving fovar."""
+    cm = jnp.where(valid, codes_m[idx_m], 0)
+    codes = jnp.where(valid, cm * d_r + rcode[idx_r], _PAD_CODE)
+    weights = jnp.where(valid, weights_m[idx_m], 0.0)
+    rows_j = jnp.where(valid, fk_other[idx_r].astype(jnp.int32), _PAD_ROW)
+    return _pack_inline(rows_j, codes, weights, cs_out), weights
+
+
+@_maybe_jit(static_argnums=(3,))
+def _sp_unpack(u, s, code_space, n_keep: int):
+    """Slice an aggregation result to its compaction rung and unpack the
+    row/code composite — one program per (rung in, rung out) pair.  Dead
+    cells are pinned back to the ``_PAD_ROW``/``_PAD_CODE`` identity."""
+    u, s = u[:n_keep], s[:n_keep]
+    ok = s != 0.0
+    u_safe = jnp.where(ok, u, 0)
+    rows = jnp.where(ok, u_safe // code_space, _PAD_ROW).astype(jnp.int32)
+    codes = jnp.where(ok, u_safe % code_space, _PAD_CODE)
+    return rows, codes, s
+
+
+#: Tail-compaction slice of a (codes, counts) pair.  Aliases the ops-side
+#: dispatcher's program so build- and dispatcher-side compactions of the
+#: same (width, keep) signature share ONE compiled slice instead of two.
+_sp_slice2 = ops._slice2_jit
+
+
+@_maybe_jit
+def _sp_count_valid(codes):
+    """Non-pad entry count of a canonicalized code column."""
+    return jnp.sum(codes != _PAD_CODE)
+
+
+@_maybe_jit(static_argnums=(6,))
+def _sp_combine_dense(sp_rows, sp_codes, sp_weights, dn_codes, dn_weights, cb, b_dense: bool):
+    """Message combine against a dense side: the sparse side's row column
+    IS the gather index.  ``b_dense`` fixes which factor is code-major."""
+    valid = sp_weights != 0.0
+    idx = jnp.where(valid, sp_rows, 0)
+    # mask codes through validity first: pad-lane _PAD_CODE values would
+    # overflow the int64 radix shift
+    cs = jnp.where(valid, sp_codes, 0)
+    cd = jnp.where(valid, dn_codes[idx], 0)
+    ca_, cb_ = (cs, cd) if b_dense else (cd, cs)
+    codes = jnp.where(valid, ca_ * cb + cb_, _PAD_CODE)
+    weights = jnp.where(valid, sp_weights * dn_weights[idx], 0.0)
+    return codes, weights
+
+
+@_maybe_jit
+def _sp_combine_join(a_rows, a_codes, a_weights, b_codes, b_weights, idx_b, idx_a, valid, cb):
+    """Message combine through a sort-merge join's match indices."""
+    ca = jnp.where(valid, a_codes[idx_a], 0)
+    codes = jnp.where(valid, ca * cb + b_codes[idx_b], _PAD_CODE)
+    rows = jnp.where(valid, a_rows[idx_a], _PAD_ROW)
+    weights = jnp.where(valid, a_weights[idx_a] * b_weights[idx_b], 0.0)
+    return rows, codes, weights
+
+
+@_maybe_jit
+def _sp_cross(vec_codes, vec_counts, c_codes, c_counts, c):
+    """Cross product of two component count vectors (codes a-major)."""
+    new_counts = (vec_counts[:, None] * c_counts[None, :]).reshape(-1)
+    # pad entries of either factor (count 0, code _PAD_CODE) would overflow
+    # the radix shift — zero them through the mask, then re-pin the
+    # product's dead cells to the padding identity
+    va = jnp.where(vec_counts != 0.0, vec_codes, 0)
+    vb = jnp.where(c_counts != 0.0, c_codes, 0)
+    new_codes = jnp.where(
+        new_counts != 0.0,
+        (va[:, None] * c + vb[None, :]).reshape(-1),
+        _PAD_CODE,
+    )
+    return new_codes, new_counts
+
+
+def _concat_pad(codes_a, counts_a, codes_b, counts_b, n_pad: int):
+    """Concatenate two COO streams and bucket-pad in the same program.
+
+    The concatenated length ``len(a) + len(b)`` is almost never a ladder
+    rung, so emitting it raw forces the downstream aggregation to run a
+    separate pad program per odd length; fusing the identity padding
+    (:data:`_PAD_CODE` / count 0) here keeps the whole subtract/assemble →
+    aggregate chain at two programs per signature instead of three.
+    """
+    fill = n_pad - codes_a.shape[0] - codes_b.shape[0]
+    return (
+        jnp.concatenate(
+            [codes_a, codes_b, jnp.full((fill,), _PAD_CODE, codes_a.dtype)]
+        ),
+        jnp.concatenate(
+            [counts_a, counts_b, jnp.zeros((fill,), counts_a.dtype)]
+        ),
+    )
+
+
+@_maybe_jit(static_argnums=(4,))
+def _sp_signed_concat(codes_a, counts_a, codes_b, counts_b, n_pad: int):
+    """Concatenate ``(a, -b)`` for the Möbius don't-care subtraction,
+    bucket-padded to ``n_pad`` in the same program."""
+    return _concat_pad(codes_a, counts_a, codes_b, -counts_b, n_pad)
+
+
+@_maybe_jit(static_argnums=(6,))
+def _sp_mobius_assemble(f_codes, f_counts, t_codes, t_counts, d_r, d_rest, n_pad: int):
+    """F/T block assembly of one Möbius level: the F block embeds at the
+    ``n/a`` (code 0) relationship-attribute cells, the T block shifts past
+    the F half by the indicator digit.  Padding/zero cells are pinned to
+    :data:`_PAD_CODE` *before* the shift so garbage codes can't wrap into
+    range.  Output is bucket-padded to ``n_pad`` in the same program."""
+    f_valid = f_counts != 0.0
+    f_c = jnp.where(f_valid, jnp.where(f_valid, f_codes, 0) * d_r, _PAD_CODE)
+    t_valid = t_counts != 0.0
+    t_c = jnp.where(t_valid, jnp.where(t_valid, t_codes, 0) + d_rest, _PAD_CODE)
+    return _concat_pad(f_c, f_counts, t_c, t_counts, n_pad)
+
+
+#: Fixed axis width for :meth:`DeviceSparseCT._reencode`'s program: selection
+#: vectors are padded to this many identity axes so the re-encode compiles
+#: once per length rung instead of once per (length, arity) pair.  Group-by
+#: re-encodes carry the group axis plus every attribute (10-14 axes on the
+#: benchmark schemas), so the width must clear that, not just family arity.
+_REENC_ARITY = 16
+
+
+@_maybe_jit
+def _sp_reencode(codes, counts, sel_strides, sel_cards, new_strides):
+    """Digit-extract + re-encode the kept axes of a CT code column.
+    Keyed by length rung only — strides and cardinalities ride along as
+    traced vectors, padded to :data:`_REENC_ARITY` identity axes."""
+    valid = counts != 0.0
+    code = jnp.zeros(codes.shape, jnp.int64)
+    for i in range(sel_strides.shape[0]):
+        digit = (codes // sel_strides[i]) % sel_cards[i]
+        code = code + digit * new_strides[i]
+    return jnp.where(valid, code, _PAD_CODE)
+
+
+@_maybe_jit
+def _sp_marginal_batch_encode(codes, counts, sel_strides, sel_cards, new_strides, offsets):
+    """Concatenated-code-space encode of a whole marginal batch, fused.
+
+    ``sel_strides``/``sel_cards``/``new_strides`` are (B, m_max) matrices,
+    short keeps padded with (stride 1, card 1, new-stride 0) — the padded
+    digit is identically 0 and contributes nothing.  One program per
+    (#SS, B, m_max), replacing the per-family eager encode chains of the
+    search phase.
+    """
+    valid = counts != 0.0
+    n_b = offsets.shape[0]
+    chunks = []
+    for b in range(n_b):
+        code = jnp.full(codes.shape, offsets[b], jnp.int64)
+        for j in range(sel_strides.shape[1]):
+            digit = (codes // sel_strides[b, j]) % sel_cards[b, j]
+            code = code + digit * new_strides[b, j]
+        chunks.append(jnp.where(valid, code, _PAD_CODE))
+    return jnp.concatenate(chunks), jnp.tile(counts, n_b)
+
+
+@_maybe_jit
+def _sp_bounds(codes, offsets):
+    """Split bounds of a concatenated-code-space aggregation result."""
+    return jnp.searchsorted(codes, offsets)
+
+
+@_maybe_jit(static_argnums=(2, 3))
+def _sp_slice_shift(codes, counts, lo: int, hi: int, offset):
+    """One family's slice of a batched marginal, shifted back to its own
+    code space — slice + subtract as a single program."""
+    return codes[lo:hi] - offset, counts[lo:hi]
+
+
+@_maybe_jit
+def _sp_total(counts):
+    """Grand total: exact accumulation, rounded to float32 in-program (the
+    one rounding every consumer applies anyway — fused so no caller pays a
+    separate eager convert)."""
+    return jnp.sum(counts, dtype=ops.count_acc_dtype()).astype(jnp.float32)
+
+
+@_maybe_jit
+def _sp_n_nonzero(counts):
+    return jnp.sum(counts != 0.0)
+
+
+def _aggregate_packed(comp, weights, pack_space: int, code_space: int):
+    """Canonicalize a packed device COO message: aggregate + compact + unpack.
+
+    The device twin of :func:`_aggregate_pairs` from the packed composite
+    on: one ``ops.coo_aggregate_counted`` launch (the non-pad count comes
+    back fused with the aggregation — no separate count-and-sync pass),
+    then one :func:`_sp_unpack` program slicing to the valid count's ladder
+    rung and splitting the row/code composite.
+    """
+    if int(comp.shape[0]) == 0:
+        return (
+            jnp.zeros((0,), jnp.int32), comp,
+            weights.astype(jnp.float32),
+        )
+    u, s, n_valid = ops.coo_aggregate_counted(comp, weights, num_bins=pack_space)
+    n_keep = min(int(u.shape[0]), bucketing.bucket_rows(max(n_valid, 1), tight=True))
     with enable_x64():
-        ok = s != 0.0
-        u_safe = jnp.where(ok, u, 0)
-        rows_u = jnp.where(ok, u_safe // code_space, _PAD_ROW).astype(jnp.int32)
-        codes_u = jnp.where(ok, u_safe % code_space, _PAD_CODE)
-        return rows_u, codes_u, s
+        return _sp_unpack(u, s, jnp.int64(code_space), n_keep)
+
+
+def _build_compact(rvs, cards, codes, counts) -> DeviceSparseCT:
+    """``DeviceSparseCT.build`` + tail compaction, as ONE aggregation pass.
+
+    ``ops.coo_aggregate_counted`` returns the non-pad count alongside the
+    canonicalized result, so the compaction slice costs no extra launch or
+    sync.  Interior zero-count cells (exact Möbius cancellations) stay —
+    they are "absent" by the :class:`DeviceSparseCT` contract; only the
+    contiguous int-max tail is dropped, to the valid count's ladder rung.
+    """
+    n_cells = math.prod(cards) if cards else 1
+    u, s, n_valid = ops.coo_aggregate_counted(codes, counts, num_bins=n_cells)
+    n_keep = min(int(u.shape[0]), bucketing.bucket_rows(max(n_valid, 1), tight=True))
+    if n_keep < int(u.shape[0]):
+        with enable_x64():
+            u, s = _sp_slice2(u, s, n_keep)
+    return DeviceSparseCT(tuple(rvs), tuple(cards), u, s)
 
 
 def _compact_tail(ct: DeviceSparseCT) -> DeviceSparseCT:
@@ -1047,13 +1387,20 @@ def _compact_tail(ct: DeviceSparseCT) -> DeviceSparseCT:
     :data:`_PAD_CODE` / count-0 entries; trimming it once at the end keeps
     every downstream per-sweep re-encode proportional to the real #SS.
     Interior zero-count cells (exact Möbius cancellations) stay — they are
-    "absent" by the :class:`DeviceSparseCT` contract.
+    "absent" by the :class:`DeviceSparseCT` contract.  Prefer
+    :func:`_build_compact` when an aggregation happens anyway — it gets
+    the count for free; this standalone probe is for already-built tables.
     """
     if int(ct.codes.shape[0]) == 0:
         return ct
-    codes, counts = _trim_pad(ct.codes, ct.counts)
-    if int(codes.shape[0]) == int(ct.codes.shape[0]):
+    with enable_x64():
+        n_valid_dev = _sp_count_valid(ct.codes)
+    n_valid = ops.sync_scalar(n_valid_dev)
+    n_keep = min(int(ct.codes.shape[0]), bucketing.bucket_rows(max(n_valid, 1), tight=True))
+    if n_keep == int(ct.codes.shape[0]):
         return ct
+    with enable_x64():
+        codes, counts = _sp_slice2(ct.codes, ct.counts, n_keep)
     return DeviceSparseCT(ct.rvs, ct.cards, codes, counts)
 
 
@@ -1083,16 +1430,11 @@ def _dev_combine(a: _DevMsg, b: _DevMsg) -> _DevMsg:
         else:
             sp, dn = b, a
         with enable_x64():
-            valid = sp.weights != 0.0
-            idx = jnp.where(valid, sp.rows, 0)
-            # mask codes through validity first: pad-lane _PAD_CODE values
-            # would overflow the int64 radix shift
-            cs = jnp.where(valid, sp.codes, 0)
-            cd = jnp.where(valid, dn.codes[idx], 0)
             # code composition is always a-major: a.codes * cb + b.codes
-            ca_, cb_ = (cs, cd) if b.dense_rows else (cd, cs)
-            codes = jnp.where(valid, ca_ * jnp.int64(cb) + cb_, _PAD_CODE)
-            weights = jnp.where(valid, sp.weights * dn.weights[idx], 0.0)
+            codes, weights = _sp_combine_dense(
+                sp.rows, sp.codes, sp.weights, dn.codes, dn.weights,
+                jnp.int64(cb), b.dense_rows,
+            )
         return _DevMsg(
             rows=sp.rows,
             codes=codes,
@@ -1103,12 +1445,10 @@ def _dev_combine(a: _DevMsg, b: _DevMsg) -> _DevMsg:
         )
     idx_b, idx_a, valid, _total = ops.coo_join(b.rows, a.rows)
     with enable_x64():
-        # gather through the mask first: garbage-slot gathers may surface
-        # _PAD_CODE values whose radix shift would overflow int64
-        ca = jnp.where(valid, a.codes[idx_a], 0)
-        codes = jnp.where(valid, ca * jnp.int64(cb) + b.codes[idx_b], _PAD_CODE)
-        rows = jnp.where(valid, a.rows[idx_a], _PAD_ROW)
-        weights = jnp.where(valid, a.weights[idx_a] * b.weights[idx_b], 0.0)
+        rows, codes, weights = _sp_combine_join(
+            a.rows, a.codes, a.weights, b.codes, b.weights,
+            idx_b, idx_a, valid, jnp.int64(cb),
+        )
     return _DevMsg(
         rows=rows,
         codes=codes,
@@ -1125,31 +1465,55 @@ def _dev_fold_all(msgs: list[_DevMsg]) -> _DevMsg:
     return out
 
 
-def _pad_msg(msg: _DevMsg) -> _DevMsg:
-    """Bucket-pad a device message's columns with the identity suffix.
+#: Cap on the per-build stream floor (rows).  A 16k-lane stream costs a few
+#: milliseconds per aggregation on any backend, so flooring every sub-16k
+#: stream of a build to one rung trades invisible compute for a collapse of
+#: the build's compiled-program count.
+_FLOOR_CAP = 1 << 14
 
-    The entry point of the shape-bucket discipline: entity-table-sized
-    initial messages (and the ``restrict`` path's single-row message) are
-    topped up to the ``kernels.bucketing`` row ladder so every downstream
-    join, gather and aggregation sees ladder shapes.  Pad entries are
-    ``(_PAD_ROW, _PAD_CODE, 0)`` — sorted after every valid entry, matched
-    by no probe, carrying no mass.
+
+@contextlib.contextmanager
+def _build_ladder_floor(db: RelationalDatabase):
+    """Pin all transient COO streams of a build to one per-database rung.
+
+    Small databases are where the compile tax bites hardest: their streams
+    land on many *tiny* ladder rungs (128..4096), and every distinct rung
+    multiplies the per-rung super-program count — for a few-thousand-row
+    schema the cold build spends seconds compiling programs whose compute
+    is microseconds.  This scope raises :func:`bucketing.set_stream_floor`
+    to the rung covering the database's largest table times a fan-out
+    margin (capped at :data:`_FLOOR_CAP`), so *every* sub-floor stream of
+    the build — initial messages, join expansions, elimination packs,
+    aggregation inputs — shares ONE shape and the program count stops
+    scaling with rung diversity.  Streams above the floor (large
+    databases, fat join expansions) climb the normal ladder, unchanged.
+
+    The floor pads only *streams*: compaction sites size their results
+    with ``bucket_rows(..., tight=True)``, so materialized CTs keep their
+    natural rung.  That split is load-bearing — the attribute-component
+    cross product materializes ``n1 * n2`` entries and the scorer sweeps
+    every CT it is handed, so flooring *results* (an earlier iteration
+    raised the ladder base itself) turns microsecond crosses into
+    gigabyte outer products and slows every downstream scoring pass.
+
+    The floor is an existing ladder rung (computed via ``bucket_rows``),
+    so floored and tight shapes form one consistent set, and a warm
+    rebuild re-derives the identical floor — zero recompiles.  Results
+    are unaffected everywhere: padding is identity.
     """
-    n = int(msg.rows.shape[0])
-    n_pad = bucketing.bucket_rows(n)
-    if n_pad <= n:
-        return msg
-    w = n_pad - n
-    with enable_x64():
-        codes = jnp.concatenate(
-            [msg.codes, jnp.full((w,), _PAD_CODE, jnp.int64)]
-        )
-    rows = jnp.concatenate([msg.rows, jnp.full((w,), _PAD_ROW, jnp.int32)])
-    weights = jnp.concatenate([msg.weights, jnp.zeros((w,), jnp.float32)])
-    return _DevMsg(
-        rows, codes, weights, msg.cards, msg.folded,
-        dense_rows=msg.dense_rows,
+    n_max = max(
+        [t.n_rows for t in db.entities.values()]
+        + [r.n_rows for r in db.relationships.values()],
+        default=1,
     )
+    floor = bucketing.bucket_rows(
+        min(max(64 * n_max, 1), _FLOOR_CAP), tight=True
+    )
+    old = bucketing.set_stream_floor(floor)
+    try:
+        yield
+    finally:
+        bucketing.set_stream_floor(old)
 
 
 def coo_shards() -> int:
@@ -1211,9 +1575,7 @@ def _merge_shard_partials(parts: list[DeviceSparseCT]) -> DeviceSparseCT:
     with enable_x64():
         codes = jnp.concatenate([p.codes for p in parts])
         counts = jnp.concatenate([p.counts for p in parts])
-    return _compact_tail(
-        DeviceSparseCT.build(first.rvs, first.cards, codes, counts)
-    )
+    return _build_compact(first.rvs, first.cards, codes, counts)
 
 
 def _shard_pivot(
@@ -1252,12 +1614,34 @@ def device_sparse_ct_conditional(
     to the unsharded table, bit-identically (integer-exact float32
     partials, float64 merge, one rounding).  Conditionals that touch no
     fact table (``cond_true == ()``) are computed once, unsharded.
+
+    The whole contraction runs under :func:`_build_ladder_floor`: every
+    sub-floor stream of the build shares one ladder rung, keeping the
+    per-rung super-program count flat.
     """
+    with _build_ladder_floor(db):
+        return _device_ct_conditional(
+            db, attr_rvs, cond_true, fovar_universe,
+            group_fovar=group_fovar, restrict=restrict, shards=shards,
+        )
+
+
+def _device_ct_conditional(
+    db: RelationalDatabase,
+    attr_rvs: tuple[str, ...],
+    cond_true: tuple[str, ...],
+    fovar_universe: tuple[str, ...] | None = None,
+    *,
+    group_fovar: str | None = None,
+    restrict: dict[str, int] | None = None,
+    shards: int = 1,
+) -> DeviceSparseCT:
+    """:func:`device_sparse_ct_conditional` body, run under the ladder floor."""
     pivot = _shard_pivot(db, cond_true) if shards > 1 else None
     if pivot is not None:
         n = db.relationships[pivot].n_rows
         parts = [
-            device_sparse_ct_conditional(
+            _device_ct_conditional(
                 _shard_view(db, pivot, lo, hi), attr_rvs, cond_true,
                 fovar_universe, group_fovar=group_fovar, restrict=restrict,
             )
@@ -1284,22 +1668,26 @@ def device_sparse_ct_conditional(
         n = fovar_n_rows(fid)
         cards = [rv.cardinality for rv in plan.ent_attrs[fid]]
         folded = [rv.vid for rv in plan.ent_attrs[fid]]
+        cols = [
+            db.entities[rv.table].attrs[rv.column] for rv in plan.ent_attrs[fid]
+        ]
         with enable_x64():
-            codes = jnp.zeros((n,), jnp.int64)
-            for rv, stride in zip(plan.ent_attrs[fid], radix_strides(cards)):
-                col = db.entities[rv.table].attrs[rv.column]
-                codes = codes + col.astype(jnp.int64) * jnp.int64(stride)
-        rows = jnp.arange(n, dtype=jnp.int32)
-        weights = jnp.ones((n,), jnp.float32)
-        if fid in plan.restrict:
-            # the restriction keeps exactly one entity row — a static slice,
-            # no data-dependent compaction needed
-            r = plan.restrict[fid]
-            rows, codes, weights = rows[r:r + 1], codes[r:r + 1], weights[r:r + 1]
-        return _pad_msg(_DevMsg(
+            strides = jnp.asarray(radix_strides(cards), jnp.int64)
+            if fid in plan.restrict:
+                # the restriction keeps exactly one entity row, selected by
+                # a traced dynamic_slice (one program per entity size)
+                rows, codes, weights = _sp_initial_restrict(
+                    strides, jnp.int32(plan.restrict[fid]),
+                    n, bucketing.bucket_rows(1), *cols,
+                )
+            else:
+                rows, codes, weights = _sp_initial_dense(
+                    strides, n, bucketing.bucket_rows(n), *cols,
+                )
+        return _DevMsg(
             rows, codes, weights, cards, folded,
             dense_rows=fid not in plan.restrict,
-        ))
+        )
 
     def eliminate_leaf(msg: _DevMsg, rname: str, leaf: str, other: str) -> _DevMsg:
         """Push a leaf's message through a relationship (device FK join)."""
@@ -1310,10 +1698,21 @@ def device_sparse_ct_conditional(
         r_cards = [rv.cardinality for rv in plan.rel_attrs[rname]]
         r_names = [rv.vid for rv in plan.rel_attrs[rname]]
         d_r = math.prod(r_cards, start=1)
+        cs_out = msg.code_space * d_r
+        n_other = fovar_n_rows(other)
+        if n_other * cs_out >= _MAX_CODE_SPACE:
+            raise OverflowError(
+                f"device message packs {n_other} rows x {cs_out:.3g} codes; "
+                "overflows int64 — use the host builder for this query"
+            )
+        rcols = [rel.attrs[rv.column] for rv in plan.rel_attrs[rname]]
         with enable_x64():
-            rcode = jnp.zeros((int(fk_leaf.shape[0]),), jnp.int64)
-            for rv, stride in zip(plan.rel_attrs[rname], radix_strides(r_cards)):
-                rcode = rcode + rel.attrs[rv.column].astype(jnp.int64) * jnp.int64(stride)
+            if rcols:
+                rcode = _sp_encode(
+                    jnp.asarray(radix_strides(r_cards), jnp.int64), *rcols
+                )
+            else:
+                rcode = jnp.zeros((int(fk_leaf.shape[0]),), jnp.int64)
         if msg.dense_rows and int(msg.codes.shape[0]) and int(fk_leaf.shape[0]):
             # dense (un-restricted initial) message: entry index == entity
             # row id, so the FK column IS the join — gather directly,
@@ -1323,19 +1722,19 @@ def device_sparse_ct_conditional(
             # path (float64 accumulation of integer-valued weights is
             # order-independent).
             with enable_x64():
-                codes = msg.codes[fk_leaf] * jnp.int64(d_r) + rcode
-                weights = msg.weights[fk_leaf]
-            rows_j = fk_other.astype(jnp.int32)
+                comp, weights = _sp_elim_dense_pack(
+                    msg.codes, msg.weights, fk_leaf, fk_other, rcode,
+                    jnp.int64(d_r), jnp.int64(cs_out),
+                )
         else:
             idx_m, idx_r, valid, _total = ops.coo_join(msg.rows, fk_leaf)
             with enable_x64():
-                cm = jnp.where(valid, msg.codes[idx_m], 0)
-                codes = jnp.where(valid, cm * jnp.int64(d_r) + rcode[idx_r], _PAD_CODE)
-                weights = jnp.where(valid, msg.weights[idx_m], 0.0)
-                rows_j = jnp.where(valid, fk_other[idx_r].astype(jnp.int32), _PAD_ROW)
-        rows, codes, weights = _dev_aggregate_pairs(
-            rows_j, codes, weights,
-            msg.code_space * d_r, fovar_n_rows(other),
+                comp, weights = _sp_elim_join_pack(
+                    msg.codes, msg.weights, rcode, fk_other, idx_m, idx_r,
+                    valid, jnp.int64(d_r), jnp.int64(cs_out),
+                )
+        rows, codes, weights = _aggregate_packed(
+            comp, weights, n_other * cs_out, cs_out
         )
         return _DevMsg(rows, codes, weights, msg.cards + r_cards, msg.folded + r_names)
 
@@ -1344,30 +1743,30 @@ def device_sparse_ct_conditional(
         msg = _dev_fold_all(msgs)
         if fid == plan.group_fovar:
             with enable_x64():
-                ok = msg.weights != 0.0
-                codes = jnp.where(
-                    ok,
-                    jnp.where(ok, msg.rows, 0).astype(jnp.int64)
-                    * jnp.int64(msg.code_space)
-                    + jnp.where(ok, msg.codes, 0),
-                    _PAD_CODE,
-                )  # lexsorted => still sorted (padding is a suffix)
+                # lexsorted => still sorted (padding is a suffix)
+                codes = _sp_pack(
+                    msg.rows, msg.codes, msg.weights, jnp.int64(msg.code_space)
+                )
             return (
                 codes, msg.weights,
                 [fovar_n_rows(fid)] + msg.cards,
                 [GROUP_AXIS] + msg.folded,
             )
-        u, s = ops.coo_aggregate(
+        u, s, n_valid = ops.coo_aggregate_counted(
             msg.codes, msg.weights, num_bins=msg.code_space
         )
         if int(u.shape[0]):
-            u, s = _trim_pad(u, s)
+            n_keep = min(int(u.shape[0]), bucketing.bucket_rows(max(n_valid, 1), tight=True))
+            if n_keep < int(u.shape[0]):
+                with enable_x64():
+                    u, s = _sp_slice2(u, s, n_keep)
         return u, s, msg.cards, msg.folded
 
     # Contract each component; cross product of device count vectors.
-    with enable_x64():
-        vec_codes = jnp.zeros((1,), jnp.int64)
-    vec_counts = jnp.ones((1,), jnp.float32)
+    # (numpy seeds: jnp.zeros/ones here would each compile a trivial
+    # broadcast program; downstream jits device_put them for free)
+    vec_codes = np.zeros((1,), np.int64)
+    vec_counts = np.ones((1,), np.float32)
     all_cards: list[int] = []
     all_folded: list[str] = []
     n_attr_comps = 0
@@ -1381,26 +1780,15 @@ def device_sparse_ct_conditional(
             # Attribute-less component: a scalar multiplier (its population
             # count), float64-accumulated then rounded like the host path.
             with enable_x64():
-                scalar = jnp.sum(
-                    c_counts, dtype=ops.count_acc_dtype()
-                ).astype(jnp.float32)
+                scalar = _sp_total(c_counts)
             vec_counts = vec_counts * scalar
             continue
         c = math.prod(cards)
         n_attr_comps += 1
-        new_counts = (vec_counts[:, None] * c_counts[None, :]).reshape(-1)
         with enable_x64():
-            # pad entries of either factor (count 0, code _PAD_CODE) would
-            # overflow the radix shift — zero them through the mask, then
-            # re-pin the product's dead cells to the padding identity
-            va = jnp.where(vec_counts != 0.0, vec_codes, 0)
-            vb = jnp.where(c_counts != 0.0, c_codes, 0)
-            vec_codes = jnp.where(
-                new_counts != 0.0,
-                (va[:, None] * jnp.int64(c) + vb[None, :]).reshape(-1),
-                _PAD_CODE,
+            vec_codes, vec_counts = _sp_cross(
+                vec_codes, vec_counts, c_codes, c_counts, jnp.int64(c)
             )
-        vec_counts = new_counts
         all_cards += cards
         all_folded += folded
         if n_attr_comps > 1:
@@ -1408,13 +1796,11 @@ def device_sparse_ct_conditional(
             # suffixes into the interior AND multiplies their lengths —
             # left alone, the ladder's base floor would compound across
             # components (base^3 rows for a 3-component query of tiny
-            # factors).  One aggregate + compaction after each multiply
-            # keeps the running vector at its #SS bucket, so every product
+            # factors).  One counted aggregate after each multiply keeps
+            # the running vector at its #SS bucket, so every product
             # stays #SS x bucket and the final transpose re-encodes at #SS.
-            tmp = _compact_tail(
-                DeviceSparseCT.build(
-                    tuple(all_folded), tuple(all_cards), vec_codes, vec_counts
-                )
+            tmp = _build_compact(
+                tuple(all_folded), tuple(all_cards), vec_codes, vec_counts
             )
             vec_codes, vec_counts = tmp.codes, tmp.counts
 
@@ -1422,7 +1808,10 @@ def device_sparse_ct_conditional(
     out_order = tuple(attr_rvs)
     if group_fovar is not None:
         out_order = (GROUP_AXIS,) + out_order
-    return _compact_tail(ct.transpose(out_order))
+    if tuple(out_order) == ct.rvs:
+        return _compact_tail(ct)
+    new_cards, new_codes, new_counts = ct._reencode(out_order)
+    return _build_compact(out_order, new_cards, new_codes, new_counts)
 
 
 def _dev_sparse_sub(star: DeviceSparseCT, t_sum: DeviceSparseCT) -> DeviceSparseCT:
@@ -1434,9 +1823,12 @@ def _dev_sparse_sub(star: DeviceSparseCT, t_sum: DeviceSparseCT) -> DeviceSparse
     keeps the subtraction bit-identical to the host :func:`_sparse_sub`.
     """
     assert star.rvs == t_sum.rvs, (star.rvs, t_sum.rvs)
+    n_cat = int(star.codes.shape[0]) + int(t_sum.codes.shape[0])
     with enable_x64():
-        codes = jnp.concatenate([star.codes, t_sum.codes])
-        deltas = jnp.concatenate([star.counts, -t_sum.counts])
+        codes, deltas = _sp_signed_concat(
+            star.codes, star.counts, t_sum.codes, t_sum.counts,
+            bucketing.bucket_rows(n_cat),
+        )
     u, s = ops.coo_aggregate(codes, deltas, num_bins=star.n_cells)
     return DeviceSparseCT(star.rvs, star.cards, u, s)
 
@@ -1483,7 +1875,7 @@ def device_sparse_contingency_table(
         remaining: tuple[str, ...], fixed_true: tuple[str, ...], attrs: tuple[str, ...]
     ) -> DeviceSparseCT:
         if not remaining:
-            return device_sparse_ct_conditional(
+            return _device_ct_conditional(
                 db, attrs, fixed_true, universe_t,
                 group_fovar=group_fovar, restrict=restrict, shards=shards,
             )
@@ -1507,40 +1899,35 @@ def device_sparse_contingency_table(
         d_rest = math.prod(shared_cards, start=1) * d_r
 
         # F block at the n/a (code 0) r-attribute cells, T block shifted
-        # past the F half; padding/zero cells are pinned to _PAD_CODE
-        # *before* the shift so their garbage codes can't wrap into range.
+        # past the F half (one fused program; padding/zero cells pinned to
+        # _PAD_CODE before the shift so garbage codes can't wrap into range)
+        n_cat = int(f_count.codes.shape[0]) + int(t_ct.codes.shape[0])
         with enable_x64():
-            f_valid = f_count.counts != 0.0
-            f_codes = jnp.where(
-                f_valid,
-                jnp.where(f_valid, f_count.codes, 0) * jnp.int64(d_r),
-                _PAD_CODE,
+            codes, counts = _sp_mobius_assemble(
+                f_count.codes, f_count.counts, t_ct.codes, t_ct.counts,
+                jnp.int64(d_r), jnp.int64(d_rest),
+                bucketing.bucket_rows(n_cat),
             )
-            t_valid = t_ct.counts != 0.0
-            t_codes = jnp.where(
-                t_valid,
-                jnp.where(t_valid, t_ct.codes, 0) + jnp.int64(d_rest),
-                _PAD_CODE,
-            )
-            codes = jnp.concatenate([f_codes, t_codes])
-            counts = jnp.concatenate([f_count.counts, t_ct.counts])
         rel_vid = cat.rel_var_of(r).vid
-        # compact each recursion level back to its #SS bucket (one scalar
-        # sync) so branch concatenations can't snowball padding through
-        # the Möbius levels
-        return _compact_tail(
-            DeviceSparseCT.build(
-                (rel_vid,) + shared + r_attr_vids,
-                (2,) + shared_cards + r_cards,
-                codes, counts,
-            )
+        # compact each recursion level back to its #SS bucket (the counted
+        # aggregation's free scalar sync) so branch concatenations can't
+        # snowball padding through the Möbius levels
+        return _build_compact(
+            (rel_vid,) + shared + r_attr_vids,
+            (2,) + shared_cards + r_cards,
+            codes, counts,
         )
 
-    full = recurse(tuple(rel_names), (), attr_rvs)
-    if added:
-        keep = g_prefix + tuple(v.vid for v in want)
-        full = full.marginal(keep)
-    return _compact_tail(full.transpose(g_prefix + tuple(rvs)))
+    with _build_ladder_floor(db):
+        full = recurse(tuple(rel_names), (), attr_rvs)
+        if added:
+            keep = g_prefix + tuple(v.vid for v in want)
+            full = full.marginal(keep)
+        out_order = g_prefix + tuple(rvs)
+        if tuple(out_order) == full.rvs:
+            return _compact_tail(full)
+        new_cards, new_codes, new_counts = full._reencode(out_order)
+        return _build_compact(out_order, new_cards, new_codes, new_counts)
 
 
 # ---------------------------------------------------------------------------

@@ -101,13 +101,46 @@ def set_bucket_ladder(
     return old
 
 
-def bucket_rows(n: int) -> int:
+#: Temporary minimum rung for *stream* padding (0 = off).  Raised by the
+#: device build for its duration (``sparse_counts._build_ladder_floor``) so
+#: every transient COO stream of a small build shares one shape; compaction
+#: sites pass ``tight=True`` to keep *materialized* results — CTs that feed
+#: quadratic cross products and every scoring sweep — at their natural rung.
+_STREAM_FLOOR = 0
+
+
+def stream_floor() -> int:
+    """Current stream-padding floor in rows (``0`` = no floor)."""
+    return _STREAM_FLOOR
+
+
+def set_stream_floor(rows: int) -> int:
+    """Set the stream-padding floor; returns the previous value.
+
+    Callers should pass an existing ladder rung (``bucket_rows(n,
+    tight=True)`` of their target) so floored and unfloored shape sets
+    stay one consistent ladder.
+    """
+    global _STREAM_FLOOR
+    old = _STREAM_FLOOR
+    rows = int(rows)
+    if rows < 0:
+        raise ValueError(f"stream floor must be >= 0, got {rows}")
+    _STREAM_FLOOR = rows
+    return old
+
+
+def bucket_rows(n: int, *, tight: bool = False) -> int:
     """Smallest ladder rung >= ``n`` (``0`` stays ``0``: empties never pad).
 
     Rungs are generated iteratively (``next = ceil(rung * growth)``) so the
     ladder is a single consistent set of sizes regardless of which ``n``
     asks — no floating-point boundary can put two callers on different
     rungs for the same count.
+
+    When a stream floor is active (device builds), the result is raised to
+    it — unless ``tight=True``, which compaction sites use to size
+    *results* by their realized row count rather than the padding floor.
     """
     n = int(n)
     if n <= 0:
@@ -115,6 +148,35 @@ def bucket_rows(n: int) -> int:
     rung = _BASE
     while rung < n:
         rung = max(rung + 1, math.ceil(rung * _GROWTH))
+    if not tight:
+        rung = max(rung, _STREAM_FLOOR)
+    return rung
+
+
+#: Ladder for histogram-accumulator *bin* counts — deliberately much coarser
+#: than the row ladder (growth 8 vs 2).  Bin rungs only size a dense scratch
+#: accumulator, so over-allocating by up to 8x costs a few MB of device
+#: memory at worst; what they DO multiply is the compiled-program count
+#: (histogram aggregation compiles one program per (row rung, bin rung)
+#: pair), which is exactly the cold-start tax the super-program build is
+#: trying to kill.
+_BIN_BASE = 256
+_BIN_GROWTH = 8
+
+
+def bucket_bins(n: int) -> int:
+    """Smallest bin-ladder rung >= ``n`` (``0`` stays ``0``).
+
+    The bin twin of :func:`bucket_rows`: used by ``ops.coo_aggregate`` to
+    key its dense-accumulator (histogram) programs, trading accumulator
+    over-allocation for ~3x fewer distinct compiled histogram programs.
+    """
+    n = int(n)
+    if n <= 0:
+        return 0
+    rung = _BIN_BASE
+    while rung < n:
+        rung *= _BIN_GROWTH
     return rung
 
 

@@ -15,13 +15,28 @@ The output length ``total = sum(cnt)`` is data-dependent; the caller syncs
 it to host (one accounted scalar d2h) and pads it to a power-of-two bucket
 so launch shapes stabilize.
 
-Kernel formulation (TPU-native, no data-dependent control flow): with
-``cum = cumsum(cnt)``, output slot ``p`` belongs to the probe key with
-``rank[p] = #{k : cum[k] <= p}`` (a vectorized binary-search-by-counting
-over probe chunks on the VPU), and the within-run offset is ``p -
-start[rank[p]]`` where ``start = cum - cnt``.  The ``lo``/``start`` gathers
-by ``rank`` are one-hot masked reductions over the same probe chunks —
-gathers as compares+reduces, the same trick as ``ct_count``'s scatter.
+Kernel formulation (TPU-native, no gathers, no data-dependent shapes):
+with ``cum = cumsum(cnt)``, output slot ``p`` belongs to the probe with
+``rank[p] = #{k : cum[k] <= p}``.  The wrapper first *compresses* the
+match table to its nonzero-count probes — that makes ``cum`` strictly
+increasing over real entries, so the ranks covered by one ``bm``-wide
+output tile span at most ``bm`` consecutive probes.  Each grid step then:
+
+  1. **binary-searches** the cumulative table for its first rank — log2
+     (n_pad) *scalar* probes of the table (a traced-index element read per
+     step), instead of the old counting sweep's O(n_pad / 128)
+     compare-reduces per tile;
+  2. loads the ``bm``-wide window of compressed probes at that base (one
+     dynamic slice) and ranks all ``bm`` output slots against it with
+     chunked compare-reduces — work per tile now depends only on the tile
+     width, not on the probe-table size;
+  3. gathers the per-probe offset and original probe index through the
+     same window as one-hot masked reductions (gathers as compares+
+     reduces, the same trick as ``ct_count``'s scatter).
+
+``idx_sorted`` needs no second gather at all: the wrapper pre-folds
+``lo - start`` into a single per-probe offset, so ``idx_sorted[p] =
+off[rank[p]] + p``.
 
 The jnp oracle (`kernels.ref.coo_join_expand_ref`) computes the identical
 indices with ``jnp.searchsorted`` + gathers; dispatch and accounting live
@@ -39,7 +54,7 @@ from jax.experimental import pallas as pl
 #: Output elements per grid step (lane-tile of the expanded join stream).
 _BM = 1024
 
-#: Probe-table chunk width for the rank/gather sweeps (one VPU lane row).
+#: Window-chunk width for the rank/gather compare-reduces (one VPU lane row).
 _BK = 128
 
 #: Padding value for the cumulative-count table: larger than any valid
@@ -48,49 +63,67 @@ _BK = 128
 _CUM_PAD = jnp.iinfo(jnp.int32).max
 
 
-def _coo_join_expand_kernel(cum_ref, lo_ref, start_ref, ia_ref, ib_ref):
+def _coo_join_expand_kernel(ccum_ref, off_ref, cidx_ref, ia_ref, ib_ref):
     i = pl.program_id(0)
     bm = ia_ref.shape[1]
-    n_pad = cum_ref.shape[1]
-    n_chunks = n_pad // _BK
+    n_pad = ccum_ref.shape[1]
+    nbits = n_pad.bit_length() - 1  # n_pad is a power of two
+    p0 = i * bm  # first output position of this tile
 
-    pos = i * bm + jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
+    # 1. scalar binary search: base = #{m : ccum[m] <= p0}, the rank of the
+    #    tile's first slot.  Branchless power-of-two descent plus one final
+    #    correction probe; each step is a single traced-index element read.
+    def bs_body(s, base):
+        half = jnp.int32(n_pad) >> (s + 1)
+        v = ccum_ref[0, base + half - 1]
+        return jnp.where(v <= p0, base + half, base)
+
+    base = jax.lax.fori_loop(
+        jnp.int32(0), jnp.int32(nbits), bs_body, jnp.int32(0)
+    )
+    base = jnp.where(ccum_ref[0, base] <= p0, base + 1, base)
+    # Window start: the tile's ranks span < bm probes (strictly increasing
+    # compressed ccum), clamped so the window stays in bounds.
+    r0 = jnp.clip(base, 0, n_pad - bm)
+
+    pos = p0 + jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
     pos_col = jnp.swapaxes(pos, 0, 1)  # (bm, 1)
+    n_chunks = bm // _BK
 
-    # rank[p] = #{k : cum[k] <= p} — counting formulation of searchsorted
-    # (cum is non-decreasing), accumulated chunk by chunk on the VPU.
+    # 2. rank every slot against the window: rank[p] = r0 + #{k in window :
+    #    ccum[r0+k] <= p}, accumulated in _BK-wide chunks.
     def rank_body(k, rank):
-        chunk = cum_ref[:, pl.ds(k * _BK, _BK)]  # (1, BK)
+        chunk = ccum_ref[:, pl.ds(r0 + k * _BK, _BK)]  # (1, BK)
         return rank + jnp.sum(
             (chunk <= pos_col).astype(jnp.int32), axis=1, keepdims=True
         )
 
-    rank = jax.lax.fori_loop(
+    rank_rel = jax.lax.fori_loop(
         0, n_chunks, rank_body, jnp.zeros((bm, 1), jnp.int32)
     )
 
-    # Gather lo[rank] and start[rank] as one-hot masked reductions over the
-    # same chunks (rank beyond the real probe count only occurs on output
-    # padding slots, which the wrapper slices off).
+    # 3. gather off[rank] and cidx[rank] through the same window as one-hot
+    #    masked reductions (rank_rel lands outside [0, bm) only on output
+    #    padding slots, which gather 0 and are sliced off by the wrapper).
     def gather_body(k, carry):
-        lo_g, st_g = carry
+        off_g, ci_g = carry
         ids = k * _BK + jax.lax.broadcasted_iota(jnp.int32, (1, _BK), 1)
-        onehot = rank == ids  # (bm, BK)
-        lo_chunk = lo_ref[:, pl.ds(k * _BK, _BK)]
-        st_chunk = start_ref[:, pl.ds(k * _BK, _BK)]
-        lo_g = lo_g + jnp.sum(
-            jnp.where(onehot, lo_chunk, 0), axis=1, keepdims=True
+        onehot = rank_rel == ids  # (bm, BK)
+        off_chunk = off_ref[:, pl.ds(r0 + k * _BK, _BK)]
+        ci_chunk = cidx_ref[:, pl.ds(r0 + k * _BK, _BK)]
+        off_g = off_g + jnp.sum(
+            jnp.where(onehot, off_chunk, 0), axis=1, keepdims=True
         )
-        st_g = st_g + jnp.sum(
-            jnp.where(onehot, st_chunk, 0), axis=1, keepdims=True
+        ci_g = ci_g + jnp.sum(
+            jnp.where(onehot, ci_chunk, 0), axis=1, keepdims=True
         )
-        return lo_g, st_g
+        return off_g, ci_g
 
     zeros = jnp.zeros((bm, 1), jnp.int32)
-    lo_g, st_g = jax.lax.fori_loop(0, n_chunks, gather_body, (zeros, zeros))
+    off_g, ci_g = jax.lax.fori_loop(0, n_chunks, gather_body, (zeros, zeros))
 
-    ia_ref[...] = jnp.swapaxes(lo_g + (pos_col - st_g), 0, 1)
-    ib_ref[...] = jnp.swapaxes(rank, 0, 1)
+    ia_ref[...] = jnp.swapaxes(off_g + pos_col, 0, 1)
+    ib_ref[...] = jnp.swapaxes(ci_g, 0, 1)
 
 
 @functools.partial(jax.jit, static_argnames=("total", "interpret", "bm"))
@@ -111,15 +144,31 @@ def coo_join_expand_pallas(
     must be discarded.  Output ``idx_sorted[p]``/``idx_probe[p]`` index the
     sorted and probe sides of pair ``p``, probe-major.
     """
-    n = lo.shape[0]
-    n_pad = max(_BK, -(-n // _BK) * _BK)
-    cum = jnp.cumsum(cnt.astype(jnp.int32))
-    start = cum - cnt.astype(jnp.int32)
-    cum = jnp.pad(cum, (0, n_pad - n), constant_values=_CUM_PAD).reshape(1, -1)
-    lo2 = jnp.pad(lo.astype(jnp.int32), (0, n_pad - n)).reshape(1, -1)
-    start = jnp.pad(start, (0, n_pad - n)).reshape(1, -1)
+    n = int(lo.shape[0])
+    cnt = cnt.astype(jnp.int32)
+
+    # Compress to nonzero-count probes (fixed shape: value compression
+    # only).  This is what licenses the kernel's windowed rank sweep: the
+    # compressed cumulative table is strictly increasing over real entries,
+    # so one bm-wide output tile can only span bm consecutive probes —
+    # with zero-count probes left in, a single tile could straddle
+    # arbitrarily many of them.
+    nz = jnp.nonzero(cnt > 0, size=n, fill_value=n)[0].astype(jnp.int32)
+    safe = jnp.minimum(nz, n - 1)
+    real = nz < n
+    ccnt = jnp.where(real, cnt[safe], 0)
+    clo = jnp.where(real, lo.astype(jnp.int32)[safe], 0)
+    ccum = jnp.cumsum(ccnt)
+    # idx_sorted[p] = lo[j] + (p - start[j]): fold into one offset so the
+    # kernel gathers a single value per output slot
+    coff = clo - (ccum - ccnt)
 
     bm = min(bm, max(128, -(-total // 128) * 128))
+    n_pad = max(bm, 1 << (n - 1).bit_length()) if n > 1 else bm
+    ccum = jnp.pad(ccum, (0, n_pad - n), constant_values=_CUM_PAD).reshape(1, -1)
+    coff = jnp.pad(coff, (0, n_pad - n)).reshape(1, -1)
+    cidx = jnp.pad(jnp.where(real, nz, 0), (0, n_pad - n)).reshape(1, -1)
+
     n_tiles = -(-total // bm)
 
     ia, ib = pl.pallas_call(
@@ -129,5 +178,5 @@ def coo_join_expand_pallas(
         out_specs=[pl.BlockSpec((1, bm), lambda i: (i, 0))] * 2,
         out_shape=[jax.ShapeDtypeStruct((n_tiles, bm), jnp.int32)] * 2,
         interpret=interpret,
-    )(cum, lo2, start)
+    )(ccum, coff, cidx)
     return ia.reshape(-1)[:total], ib.reshape(-1)[:total]

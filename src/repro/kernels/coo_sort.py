@@ -1,0 +1,231 @@
+"""Pallas TPU kernel: fused bitonic COO sort + segment-sum + compaction.
+
+``ops.coo_aggregate``'s general engine canonicalizes a COO stream by
+*sort-then-segment-sum*.  The XLA path (`ops._coo_aggregate_impl`) is three
+device ops — ``sort_key_val``, ``segment_sum``, ``segment_min``; this
+module is the on-chip twin that makes the whole canonicalization ONE
+launch (ROADMAP "kernel endgame"):
+
+  1. **Split.**  int64 mixed-radix codes don't exist on the TPU VPU, so the
+     wrapper splits each code into two int32 lanes: ``hi = code >> 32`` and
+     ``lo = (code & 0xFFFFFFFF) - 2**31`` (the sign-bias trick: the biased
+     low word compares as *signed* int32 in exactly unsigned-low-word
+     order, so lexicographic ``(hi, lo)`` order == int64 code order).
+  2. **Bitonic key-value sort** of ``(hi, lo)`` carrying the float weight —
+     a compare-exchange network over the power-of-two padded stream.
+     Partner lanes are circular shifts, direction bits come from a
+     broadcasted iota: no gathers, no data-dependent control flow.
+  3. **Segmented Hillis–Steele scan** of the weights over equal-key runs
+     (log2 n steps), accumulated in ``acc`` dtype — float64 off-TPU (exact
+     for integer-valued counts, matching the host aggregation bit-for-bit),
+     float32 on TPU per ``ops.count_acc_dtype``.
+  4. **Compaction by a second bitonic sort** on ``key2 = where(run_end,
+     run_index, n)``: run totals travel to an ascending prefix (one slot
+     per unique code, in code order) and every non-end element parks at the
+     tail — the exact fixed-shape layout of the XLA path (ascending unique
+     prefix, int-max / zero-count padding after).
+
+**Compile discipline.**  The network is *loop-structured*, not unrolled:
+``fori_loop`` over the (block, distance) stage schedule, so the compiled
+program holds ONE compare-exchange body regardless of rung size (an
+unrolled network is O(log^2 n) stage bodies and sends XLA's optimizer
+superlinear — minutes of compile at even 128 lanes).  The loop makes the
+shift distance a *traced* value; since every bitonic distance is a power
+of two, the dynamic roll is a select over the log2(n) static single-bit
+rolls (:func:`_select_roll`) — static rotates are the one shift Mosaic
+lowers everywhere, and the select chain is branch-free VPU code.
+
+The wrapper recombines ``(hi, lo)`` back to int64 *outside* the kernel (the
+kernel body is pure int32/float — TPU-lowerable), masks the tail to the
+``int64-max / 0`` identity padding, and slices back to the caller's length.
+
+Dispatch and the XLA oracle live in :func:`repro.kernels.ops.coo_aggregate`
+(``REPRO_SORT_IMPL = auto|xla|pallas``); equivalence is pinned by
+``tests/test_coo_sort.py`` across duplicates, all-equal keys, pre-sorted /
+reversed inputs and rung boundaries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Lane floor of the kernel's power-of-two internal stream (one VPU row).
+_MIN_LANES = 128
+
+#: Rung cap for the ``auto`` dispatch policy: above this many rows the
+#: working set (7 int32/float lanes plus compare-exchange temporaries)
+#: stops fitting VMEM comfortably and the XLA sort takes over.
+PALLAS_SORT_MAX_ROWS = 1 << 18
+
+
+def _roll(x, shift: int):
+    """Circular lane shift (static ``shift``; Mosaic lowers to a rotate)."""
+    return jnp.roll(x, shift, axis=1)
+
+
+def _select_roll(x, dist, sign: int, nbits: int):
+    """Roll ``x`` by ``sign * dist`` lanes where ``dist`` is a *traced*
+    power of two below ``2**nbits``: a branch-free select over the static
+    single-bit rotates (exactly one arm matches)."""
+    out = x
+    for b in range(nbits):
+        out = jnp.where(dist == (1 << b), _roll(x, sign * (1 << b)), out)
+    return out
+
+
+def _compare_exchange(idx, k, j, nbits: int, key_hi, key_lo, *payload):
+    """One bitonic stage: exchange with the lane ``j`` away, direction by
+    ``k`` (both traced int32 scalars).
+
+    Keys compare lexicographically on ``(key_hi, key_lo)``.  The keep/swap
+    decision uses ``<=`` on the low lane and ``<`` on the high side of each
+    pair so the two partners always make *complementary* choices — equal
+    keys keep their own payloads instead of duplicating one side's (the
+    classic key-value bitonic tie bug).
+    """
+    bit0 = (idx & j) == 0
+    up = (idx & k) == 0
+
+    def partner(v):
+        return jnp.where(
+            bit0,
+            _select_roll(v, j, -1, nbits),
+            _select_roll(v, j, 1, nbits),
+        )
+
+    ph, plo = partner(key_hi), partner(key_lo)
+    lt = (key_hi < ph) | ((key_hi == ph) & (key_lo < plo))
+    le = (key_hi < ph) | ((key_hi == ph) & (key_lo <= plo))
+    take_self = jnp.where(bit0 == up, le, ~lt)
+    out = [jnp.where(take_self, key_hi, ph), jnp.where(take_self, key_lo, plo)]
+    for v in payload:
+        out.append(jnp.where(take_self, v, partner(v)))
+    return out
+
+
+def _bitonic_sort(idx, nbits: int, key_hi, key_lo, *payload):
+    """Full bitonic sort network as two nested ``fori_loop``s over the
+    (block ``k`` = 2^(p+1), distance ``j`` = 2^(p-q)) stage schedule —
+    one compiled compare-exchange body, O(log^2 n) runtime steps."""
+
+    def outer(p, carry):
+        k = jnp.int32(2) << p
+
+        def inner(q, carry):
+            j = jnp.int32(1) << (p - q)
+            return tuple(_compare_exchange(idx, k, j, nbits, *carry))
+
+        return jax.lax.fori_loop(jnp.int32(0), p + 1, inner, carry)
+
+    return jax.lax.fori_loop(
+        jnp.int32(0), jnp.int32(nbits), outer, (key_hi, key_lo, *payload)
+    )
+
+
+def _sort_agg_kernel(hi_ref, lo_ref, w_ref, ohi_ref, olo_ref, osum_ref, okey_ref):
+    n = hi_ref.shape[1]
+    nbits = n.bit_length() - 1  # n is a power of two
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    hi, lo, w = hi_ref[...], lo_ref[...], w_ref[...]
+
+    # 1. bitonic key-value sort by (hi, lo), weights riding along
+    hi, lo, w = _bitonic_sort(idx, nbits, hi, lo, w)
+
+    # 2. run boundaries + segmented inclusive scan of the weights: after
+    #    the scan, the LAST element of every equal-key run holds its total
+    b = (idx == 0) | (hi != _roll(hi, 1)) | (lo != _roll(lo, 1))
+
+    def scan_body(i, carry):
+        s, f, c = carry
+        d = jnp.int32(1) << i
+        live = idx >= d
+        s_sh = jnp.where(live, _select_roll(s, d, 1, nbits), jnp.zeros_like(s))
+        f_sh = jnp.where(live, _select_roll(f, d, 1, nbits), True)
+        c_sh = jnp.where(live, _select_roll(c, d, 1, nbits), 0)
+        return (
+            jnp.where(f, s, s + s_sh),
+            f | f_sh,
+            c + c_sh,
+        )
+
+    s, _, c = jax.lax.fori_loop(
+        jnp.int32(0), jnp.int32(nbits), scan_body, (w, b, b.astype(jnp.int32))
+    )
+    # run index = inclusive prefix count of boundaries, minus one
+    seg = c - 1
+    is_end = _roll(b, -1) | (idx == n - 1)
+
+    # 3. compaction: run totals bitonic-sort to an ascending prefix keyed
+    #    by run index; non-end elements park at the tail under key n
+    key2 = jnp.where(is_end, seg, n)
+    khi, klo, hi, lo, s = _bitonic_sort(
+        idx, nbits, key2, jnp.zeros_like(key2), hi, lo, s
+    )
+
+    ohi_ref[...] = hi
+    olo_ref[...] = lo
+    osum_ref[...] = s
+    okey_ref[...] = khi
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "acc"))
+def coo_sort_aggregate(
+    codes: jax.Array,
+    weights: jax.Array,
+    *,
+    interpret: bool = False,
+    acc=jnp.float32,
+):
+    """Fused COO canonicalization: ONE kernel launch, XLA-path contract.
+
+    Same output as ``ops._coo_aggregate_impl``: ``(uniq, sums)`` at the
+    input length, ascending unique codes (including the int-max pad run,
+    if the input carries one) as a prefix and ``int64-max / 0`` identity
+    padding after.  ``acc`` is the weight accumulation dtype — float64 off
+    TPU reproduces the host aggregation bit-for-bit for integer-valued
+    counts; int64 codes only (the mixed-radix composite key dtype).
+
+    Must run under the caller's ``enable_x64`` scope (the int64 split /
+    recombine arithmetic); the kernel body itself is pure int32/float.
+    """
+    n = int(codes.shape[0])
+    n2 = max(_MIN_LANES, 1 << (n - 1).bit_length())
+    pad_code = jnp.iinfo(jnp.int64).max
+    if n2 > n:
+        codes = jnp.concatenate(
+            [codes, jnp.full((n2 - n,), pad_code, codes.dtype)]
+        )
+        weights = jnp.concatenate([weights, jnp.zeros((n2 - n,), weights.dtype)])
+
+    # int64 -> two int32 lanes; the sign-biased low word keeps (hi, lo)
+    # lexicographic order == int64 order (module docstring)
+    hi = (codes >> 32).astype(jnp.int32).reshape(1, n2)
+    lo = ((codes & 0xFFFFFFFF) - (1 << 31)).astype(jnp.int32).reshape(1, n2)
+    w = weights.astype(acc).reshape(1, n2)
+
+    ohi, olo, osum, okey = pl.pallas_call(
+        _sort_agg_kernel,
+        in_specs=[pl.BlockSpec((1, n2), lambda: (0, 0))] * 3,
+        out_specs=[pl.BlockSpec((1, n2), lambda: (0, 0))] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n2), jnp.int32),
+            jax.ShapeDtypeStruct((1, n2), jnp.int32),
+            jax.ShapeDtypeStruct((1, n2), w.dtype),
+            jax.ShapeDtypeStruct((1, n2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hi, lo, w)
+
+    valid = (okey < n2).reshape(-1)
+    low_word = olo.astype(jnp.int64).reshape(-1) + jnp.int64(1 << 31)
+    uniq = jnp.where(
+        valid,
+        (ohi.astype(jnp.int64).reshape(-1) << 32) | low_word,
+        pad_code,
+    )
+    sums = jnp.where(valid, osum.reshape(-1).astype(jnp.float32), 0.0)
+    return uniq[:n], sums[:n]

@@ -34,6 +34,7 @@ from .bucketing import (  # noqa: F401  (re-exported next to launch/transfer cou
     total_compiles,
 )
 from .coo_join import coo_join_expand_pallas
+from .coo_sort import PALLAS_SORT_MAX_ROWS, coo_sort_aggregate
 from .ct_count import ct_count_pallas
 from .factor_loglik import factor_loglik_batched_pallas, factor_loglik_pallas
 from .mle_cpt import mle_cpt_batched_pallas, mle_cpt_pallas
@@ -51,6 +52,52 @@ if _ENV_IMPL not in ("", "pallas", "ref"):
         f"REPRO_KERNEL_IMPL must be 'pallas' or 'ref' (or unset), "
         f"got {_ENV_IMPL!r}"
     )
+
+#: Engine policy for ``coo_aggregate``'s general (sort) path.  ``auto``
+#: picks the fused Pallas bitonic sort+segment-sum kernel on TPU for rungs
+#: it can hold in VMEM and the XLA ``sort_key_val`` path everywhere else;
+#: ``xla`` forces the oracle, ``pallas`` forces the kernel (interpret mode
+#: off-TPU — the CI sort-dispatch leg).  Same fail-loudly rule as
+#: ``REPRO_KERNEL_IMPL``.
+_SORT_IMPLS = ("auto", "xla", "pallas")
+_SORT_IMPL = os.environ.get("REPRO_SORT_IMPL", "auto").strip().lower() or "auto"
+if _SORT_IMPL not in _SORT_IMPLS:
+    raise ValueError(
+        f"REPRO_SORT_IMPL must be one of {_SORT_IMPLS}, got {_SORT_IMPL!r}"
+    )
+
+
+def set_sort_impl(mode: str) -> str:
+    """Set the sort-engine policy (``auto|xla|pallas``); returns the old one."""
+    global _SORT_IMPL
+    if mode not in _SORT_IMPLS:
+        raise ValueError(f"sort impl must be one of {_SORT_IMPLS}, got {mode!r}")
+    old, _SORT_IMPL = _SORT_IMPL, mode
+    return old
+
+
+def sort_impl() -> str:
+    """Current ``coo_aggregate`` sort-engine policy (``auto|xla|pallas``)."""
+    return _SORT_IMPL
+
+
+def _use_pallas_sort(n: int, code_dtype) -> tuple[bool, bool]:
+    """-> (use_pallas_sort, interpret) for an ``n``-row aggregation.
+
+    The kernel sorts int64 codes as split int32 lanes, so int32 streams
+    stay on XLA under EVERY policy (including forced ``pallas`` — the CI
+    dispatch leg covers the composite-key streams the kernel exists for);
+    under ``auto`` on TPU, rungs past the VMEM cap fall back to XLA too.
+    """
+    if code_dtype != jnp.int64:
+        return False, False
+    if _SORT_IMPL == "pallas":
+        return True, jax.default_backend() != "tpu"
+    if _SORT_IMPL == "xla":
+        return False, False
+    on_tpu = jax.default_backend() == "tpu"
+    eligible = code_dtype == jnp.int64 and n <= PALLAS_SORT_MAX_ROWS
+    return on_tpu and eligible, False
 
 
 def count_acc_dtype():
@@ -309,16 +356,57 @@ def _coo_aggregate_impl(codes: jax.Array, weights: jax.Array):
     return uniq, sums.astype(jnp.float32)
 
 
+def _coo_aggregate_counted_impl(codes: jax.Array, weights: jax.Array):
+    """Aggregation plus the fused non-pad count (one program, no extra op
+    chain): ``n_valid`` is the number of output slots holding a real unique
+    code — the scalar every build-side compaction needs, computed inside
+    the same compiled program instead of by a separate eager reduction."""
+    uniq, sums = _coo_aggregate_impl(codes, weights)
+    return uniq, sums, jnp.sum(uniq != jnp.iinfo(codes.dtype).max)
+
+
 _coo_aggregate_jit = jax.jit(_coo_aggregate_impl)
 #: Donating twin: only ever fed the wrapper-owned padded temporaries (see
 #: ``bucketing.donate_buffers`` — caller buffers are never donated).
 _coo_aggregate_jit_donated = jax.jit(_coo_aggregate_impl, donate_argnums=(0, 1))
+_coo_aggregate_counted_jit = jax.jit(_coo_aggregate_counted_impl)
+_coo_aggregate_counted_jit_donated = jax.jit(
+    _coo_aggregate_counted_impl, donate_argnums=(0, 1)
+)
+
+
+def _pallas_agg_impl(codes: jax.Array, weights: jax.Array, interpret: bool):
+    """The fused Pallas sort+segment-sum engine (same contract, one launch)."""
+    return coo_sort_aggregate(
+        codes, weights, interpret=interpret, acc=count_acc_dtype()
+    )
+
+
+def _pallas_agg_counted_impl(codes, weights, interpret: bool):
+    uniq, sums = _pallas_agg_impl(codes, weights, interpret)
+    return uniq, sums, jnp.sum(uniq != jnp.iinfo(codes.dtype).max)
+
+
+_pallas_agg_jit = jax.jit(_pallas_agg_impl, static_argnums=(2,))
+_pallas_agg_counted_jit = jax.jit(_pallas_agg_counted_impl, static_argnums=(2,))
 
 #: Histogram-aggregation engages when the (bucketed) code space fits under
 #: this many dense accumulator bins (f64 accumulator: 32 MB at the default).
 #: Above it, the general sort path runs.  Overridable for experiments via
 #: ``REPRO_COO_HIST_BINS`` (0 disables the histogram path entirely).
 _HIST_BINS_BUDGET = 1 << 22
+
+#: Streams below this many (bucketed) rows always take the sort path.  Two
+#: reasons, both measured on XLA:CPU.  Compile diversity: every distinct
+#: (row rung, bin rung) histogram signature costs a fixed ~0.2 s backend
+#: compile (scatter machinery) however small the arrays, while ALL
+#: sub-threshold sorts share one ~0.2 s program per row rung — and the
+#: per-build ladder floor pins small builds to a single rung.  Runtime: a
+#: sub-64k sort is ~5 ms, so hist's O(n) advantage over O(n log n) cannot
+#: pay for even one extra compile at this scale.  The companion rule
+#: ``bins <= rows`` (below) keeps hist off streams whose O(bins)
+#: accumulator + compaction would dwarf the sort it replaces.
+_HIST_MIN_ROWS = 1 << 16
 _env_hist = os.environ.get("REPRO_COO_HIST_BINS", "").strip()
 if _env_hist:
     try:
@@ -331,39 +419,57 @@ if _env_hist:
 
 @functools.partial(jax.jit, static_argnames=("num_bins",))
 def _coo_hist_jit(codes: jax.Array, weights: jax.Array, num_bins: int):
-    """Dense-accumulator aggregation: one unsorted segment-sum, no sort.
+    """Dense-accumulator aggregation + compaction, ONE fused program.
 
     The O(n) twin of :func:`_coo_aggregate_impl` for streams whose code
     space is statically known and small: scatter-accumulate the weights
     into ``num_bins`` cells (float64 — exact for integer-valued counts,
-    order-independent) and round once to float32, exactly the host
-    aggregation's value.  Codes outside ``[0, num_bins)`` — the int-max
-    padding sentinel — are routed to a sacrificial overflow bin and
-    dropped.  Returns the dense per-bin counts plus the number of
-    realized (nonzero) bins.
+    order-independent), round once to float32 (exactly the host
+    aggregation's value), then COO-compact the dense vector in the same
+    program — realized bins ascending, int-max / zero-count identity
+    padding after.  Codes outside ``[0, num_bins)`` — the int-max padding
+    sentinel — are routed to a sacrificial overflow bin and dropped.
+
+    The compaction is cumsum + ``searchsorted`` rather than ``jnp.nonzero``
+    — identical indices, but it lowers to compare/scan ops instead of the
+    scatter machinery whose XLA:CPU compile alone cost ~0.2s per (bins,
+    keep-rung) signature; fused here it also stops multiplying program
+    count by the keep rung.  Returns ``(uniq, sums, n_realized)`` at full
+    ``num_bins`` width; the dispatcher slices to the realized ladder rung
+    after its one scalar sync.
     """
     in_range = (codes >= 0) & (codes < num_bins)
     seg = jnp.where(in_range, codes, num_bins).astype(jnp.int32)
     sums = jax.ops.segment_sum(
         weights.astype(count_acc_dtype()), seg, num_bins + 1
     )[:num_bins].astype(jnp.float32)
-    return sums, jnp.sum(sums != 0.0)
+    nz = (sums != 0.0).astype(jnp.int32)
+    cum = jnp.cumsum(nz)
+    idx = jnp.searchsorted(
+        cum, jnp.arange(1, num_bins + 1, dtype=jnp.int32), side="left"
+    )
+    valid = jnp.arange(num_bins, dtype=jnp.int32) < cum[-1]
+    safe = jnp.minimum(idx, num_bins - 1)
+    uniq = jnp.where(
+        valid, safe.astype(codes.dtype), jnp.iinfo(codes.dtype).max
+    )
+    counts = jnp.where(valid, sums[safe], 0.0)
+    return uniq, counts, cum[-1]
 
 
 @functools.partial(jax.jit, static_argnames=("n_keep",))
-def _hist_compact_jit(sums: jax.Array, n_keep: int):
-    """COO-compact a dense count vector: realized bins, ascending, pad tail.
+def _slice2_jit(codes: jax.Array, counts: jax.Array, n_keep: int):
+    """Tail-trim an aggregation result to its realized ladder rung."""
+    return codes[:n_keep], counts[:n_keep]
 
-    ``jnp.nonzero`` with a static ``size`` keeps the program fixed-shape
-    (one compile per ladder rung); slots past the realized count get the
-    int-max / zero-count identity padding every COO consumer expects.
-    """
-    num_bins = sums.shape[0]
-    idx = jnp.nonzero(sums != 0.0, size=n_keep, fill_value=num_bins)[0]
-    valid = idx < num_bins
-    counts = jnp.where(valid, sums[jnp.minimum(idx, num_bins - 1)], 0.0)
-    codes = jnp.where(valid, idx, jnp.iinfo(jnp.int64).max)
-    return codes, counts
+
+@functools.partial(jax.jit, static_argnames=("n_pad",))
+def _pad2_jit(codes: jax.Array, weights: jax.Array, pad_code: jax.Array, n_pad: int):
+    """Pad a COO stream to ``n_pad`` rows in one program (not two eager concats)."""
+    n = codes.shape[0]
+    codes = jnp.concatenate([codes, jnp.full((n_pad - n,), pad_code, codes.dtype)])
+    weights = jnp.concatenate([weights, jnp.zeros((n_pad - n,), weights.dtype)])
+    return codes, weights
 
 
 def _pad_coo_stream(codes: jax.Array, weights: jax.Array, pad_code) -> tuple:
@@ -374,17 +480,16 @@ def _pad_coo_stream(codes: jax.Array, weights: jax.Array, pad_code) -> tuple:
     ``segment_min``'s fill, merges into the dead tail); the fused scorer
     passes 0 (codes must stay inside the family code space — zero-weight
     duplicates add exactly nothing to its segment sums).  Must run inside
-    the caller's ``enable_x64`` scope when codes are int64.
+    the caller's ``enable_x64`` scope when codes are int64.  The pad value
+    rides in as a traced scalar so both pad flavors share one compiled
+    program per (shape, rung) signature.
     """
     n = int(codes.shape[0])
     n_pad = bucketing.bucket_rows(n)
     if n_pad <= n:
         return codes, weights, False
-    codes = jnp.concatenate(
-        [codes, jnp.full((n_pad - n,), pad_code, codes.dtype)]
-    )
-    weights = jnp.concatenate(
-        [weights, jnp.zeros((n_pad - n,), weights.dtype)]
+    codes, weights = _pad2_jit(
+        codes, weights, jnp.asarray(pad_code, codes.dtype), n_pad
     )
     return codes, weights, True
 
@@ -408,14 +513,16 @@ def coo_aggregate(
         any code space.  Returns ``(uniq_codes, sums)`` of the *bucketed*
         input length: ascending unique codes first, int-max / zero-count
         padding after (see :func:`_coo_aggregate_impl`).
-      * **histogram**: when the caller knows the code space (``num_bins``)
-        and its ladder rung fits :data:`_HIST_BINS_BUDGET`, an O(n)
-        unsorted segment-sum into a dense accumulator replaces the
-        O(n log n) sort — the big win of the million-row scale leg, where
-        streams are huge but code spaces tiny.  The result is compacted
+      * **histogram**: when the caller knows the code space (``num_bins``),
+        the stream is large (>= :data:`_HIST_MIN_ROWS` bucketed rows) and
+        its bin rung fits both :data:`_HIST_BINS_BUDGET` and the stream's
+        own row count, an O(n) unsorted segment-sum into a dense
+        accumulator replaces the O(n log n) sort — the big win of the
+        million-row scale leg, where streams are huge but code spaces
+        tiny.  The result is compacted
         to the realized-bin ladder rung (ascending codes, identity pad
-        tail — the same canonical layout the sort path's ``_trim_pad``
-        step produces), at the cost of one accounted scalar sync.
+        tail — the sort path's canonical layout), at the cost of one
+        accounted scalar sync.
 
     Inputs are bucket-padded to the ``bucketing`` row ladder (int-max
     codes, zero weights — identity padding) so every aggregation of a
@@ -425,33 +532,83 @@ def coo_aggregate(
     When padding created fresh temporaries and the donation policy
     allows, their buffers are donated to the compiled program.
     """
+    return _aggregate_dispatch(codes, weights, num_bins, with_count=False)
+
+
+def coo_aggregate_counted(
+    codes: jax.Array,
+    weights: jax.Array,
+    *,
+    num_bins: int | None = None,
+) -> tuple[jax.Array, jax.Array, int]:
+    """:func:`coo_aggregate` plus the synced count of realized unique codes.
+
+    ``(uniq, sums, n_valid)`` where ``n_valid`` is the number of leading
+    non-pad slots — the scalar every build-side compaction step needs.
+    The count is computed *inside* the aggregation program (histogram:
+    reusing the nonzero-bin count that engine syncs anyway; sort: one
+    fused reduction over the output), so callers that previously ran a
+    separate eager count-plus-sync pay zero extra launches here.
+    """
+    return _aggregate_dispatch(codes, weights, num_bins, with_count=True)
+
+
+def _aggregate_dispatch(codes, weights, num_bins, *, with_count: bool):
+    """Shared engine router behind the two public aggregation wrappers."""
     _LAUNCHES["coo_aggregate"] += 1
     with enable_x64():
         codes, weights = to_device(codes), to_device(weights)
         if int(codes.shape[0]) == 0:
             # empty stream: nothing to canonicalize (the fixed-shape
             # program below needs n >= 1), mirror the host guard
-            return codes, weights.astype(jnp.float32)
+            out = codes, weights.astype(jnp.float32)
+            return (*out, 0) if with_count else out
         pad_code = jnp.iinfo(codes.dtype).max
         codes, weights, padded = _pad_coo_stream(codes, weights, pad_code)
+        n_pad = int(codes.shape[0])
         use_hist = (
             num_bins is not None
             and 0 < num_bins
-            and bucketing.bucket_rows(num_bins) <= _HIST_BINS_BUDGET
+            and n_pad >= _HIST_MIN_ROWS
+            and bucketing.bucket_bins(num_bins) <= min(_HIST_BINS_BUDGET, n_pad)
         )
         if use_hist:
-            bins = bucketing.bucket_rows(num_bins)
-            sums, n_valid_dev = _coo_hist_jit(codes, weights, bins)
+            bins = bucketing.bucket_bins(num_bins)
+            uniq_full, sums_full, n_valid_dev = _coo_hist_jit(codes, weights, bins)
     if use_hist:
         # sync outside the x64 scope, per the scoping contract
         n_valid = sync_scalar(n_valid_dev)
-        n_keep = min(bins, bucketing.bucket_rows(max(n_valid, 1)))
-        with enable_x64():
-            return _hist_compact_jit(sums, n_keep)
+        n_keep = min(bins, bucketing.bucket_rows(max(n_valid, 1), tight=True))
+        if n_keep >= bins:
+            # realized rung fills the whole accumulator: the slice would be
+            # a no-op program — skip the launch (and its compile) entirely
+            uniq, sums = uniq_full, sums_full
+        else:
+            with enable_x64():
+                uniq, sums = _slice2_jit(uniq_full, sums_full, n_keep)
+        return (uniq, sums, n_valid) if with_count else (uniq, sums)
+    use_kernel, interpret = _use_pallas_sort(int(codes.shape[0]), codes.dtype)
+    # both wrappers run the *counted* program — the fused count is one
+    # extra reduction, and sharing a single compiled program per rung
+    # beats keeping a count-free twin alive (it would double the sort-path
+    # program count for no runtime win); the count scalar stays on device
+    # unless the caller asked for it, so no extra sync either
     with enable_x64():
-        if padded and bucketing.donate_buffers():
-            return _coo_aggregate_jit_donated(codes, weights)
-        return _coo_aggregate_jit(codes, weights)
+        if use_kernel:
+            _LAUNCHES["coo_sort"] += 1
+            out = _pallas_agg_counted_jit(codes, weights, interpret)
+        else:
+            donate = padded and bucketing.donate_buffers()
+            fn = (
+                _coo_aggregate_counted_jit_donated
+                if donate
+                else _coo_aggregate_counted_jit
+            )
+            out = fn(codes, weights)
+    uniq, sums, n_valid_dev = out
+    if with_count:
+        return uniq, sums, sync_scalar(n_valid_dev)
+    return uniq, sums
 
 
 #: Key-column pad sentinel for bucketed joins: int32-max never collides with
@@ -485,13 +642,20 @@ def _prefix_mask_jit(total: jax.Array, n: int) -> jax.Array:
     return jnp.arange(n, dtype=jnp.int32) < total
 
 
+@functools.partial(jax.jit, static_argnames=("n_pad",))
+def _pad_keys_jit(keys: jax.Array, n_pad: int) -> jax.Array:
+    return jnp.concatenate(
+        [keys, jnp.full((n_pad - keys.shape[0],), PAD_KEY, jnp.int32)]
+    )
+
+
 def _pad_keys(keys: jax.Array) -> jax.Array:
     """Bucket-pad an int32 key column with the :data:`PAD_KEY` sentinel."""
     n = int(keys.shape[0])
     n_pad = bucketing.bucket_rows(n)
     if n_pad <= n:
         return keys
-    return jnp.concatenate([keys, jnp.full((n_pad - n,), PAD_KEY, jnp.int32)])
+    return _pad_keys_jit(keys, n_pad)
 
 
 #: Jitted oracle expansion (the Pallas twin jits internally): without this,
@@ -535,8 +699,10 @@ def coo_join(
     """
     sorted_keys = jnp.asarray(sorted_keys, jnp.int32)
     probe_keys = jnp.asarray(probe_keys, jnp.int32)
-    empty = jnp.zeros((0,), jnp.int32)
-    no_match = (empty, empty, jnp.zeros((0,), bool), 0)
+    # host constants: a jnp.zeros here would compile a fresh (trivial)
+    # program on the first empty join of every process
+    empty = np.zeros((0,), np.int32)
+    no_match = (empty, empty, np.zeros((0,), bool), 0)
     if int(probe_keys.shape[0]) == 0 or int(sorted_keys.shape[0]) == 0:
         # no device work dispatched: keep the launch tally honest (it is
         # the bench's build-launch headline number)
@@ -561,7 +727,7 @@ def coo_join(
         ia, ib = coo_join_expand_pallas(lo, cnt, padded, interpret=interp)
     else:
         ia, ib = _coo_join_expand_ref_jit(lo, cnt, padded)
-    valid = _prefix_mask_jit(jnp.int32(total), padded)
+    valid = _prefix_mask_jit(np.int32(total), padded)
     return ia, ib, valid, total
 
 

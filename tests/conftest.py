@@ -16,6 +16,15 @@ except ModuleNotFoundError:
 import jax
 import pytest
 
+from repro.core import counts as _counts
+
+# Device-build tests use deliberately tiny databases; the
+# REPRO_DEVICE_MIN_ROWS crossover would silently host-route every one of
+# them (and their DeviceSparseCT type assertions would fail for the wrong
+# reason).  Zero the threshold for the whole test session — the routing
+# itself is covered by explicit tests that set it and restore.
+_counts.set_device_min_rows(0)
+
 
 @pytest.fixture(scope="session")
 def rng_key():

@@ -1,0 +1,152 @@
+"""The fused Pallas COO sort kernel vs its XLA oracle.
+
+``kernels/coo_sort.py`` must reproduce ``ops._coo_aggregate_impl``'s output
+bit-for-bit on every stream shape the device build can produce: ascending
+unique codes as a prefix, int64-max / zero-count identity padding after,
+float32 sums rounded from the same accumulation dtype.  Runs in interpret
+mode on CPU (the CI pallas-dispatch leg re-runs it the same way), so the
+streams here are deliberately small — the bitonic network is O(log^2 n)
+compare-exchange stages and interpret mode executes them op by op.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.kernels import ops
+from repro.kernels.coo_sort import coo_sort_aggregate
+
+PAD = np.iinfo(np.int64).max
+
+
+def _oracle(codes, weights):
+    """The XLA sort + segment-sum path, same local x64 scope as dispatch."""
+    with enable_x64():
+        uniq, sums = ops._coo_aggregate_impl(
+            jnp.asarray(codes, jnp.int64), jnp.asarray(weights, jnp.float32)
+        )
+        return np.asarray(uniq), np.asarray(sums)
+
+
+def _kernel(codes, weights):
+    with enable_x64():
+        uniq, sums = coo_sort_aggregate(
+            jnp.asarray(codes, jnp.int64),
+            jnp.asarray(weights, jnp.float32),
+            interpret=True,
+            acc=ops.count_acc_dtype(),
+        )
+        return np.asarray(uniq), np.asarray(sums)
+
+
+def _assert_matches_oracle(codes, weights):
+    ou, os_ = _oracle(codes, weights)
+    ku, ks = _kernel(codes, weights)
+    np.testing.assert_array_equal(ku, ou)
+    np.testing.assert_array_equal(ks, os_)  # bitwise, not allclose
+
+
+def _stream(n, n_codes, seed=0, hi_bits=False):
+    """Integer-count stream with many duplicate codes."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, n_codes, n).astype(np.int64)
+    if hi_bits:
+        # push codes past 32 bits so the hi/lo split carries real weight
+        codes = codes * (1 << 40) + rng.integers(0, 1 << 20, n)
+    weights = rng.integers(0, 50, n).astype(np.float32)
+    return codes, weights
+
+
+def test_duplicates_match_oracle():
+    _assert_matches_oracle(*_stream(200, 17, seed=1))
+
+
+def test_all_equal_keys():
+    codes = np.full(160, 12345, np.int64)
+    weights = np.arange(160, dtype=np.float32)
+    ku, ks = _kernel(codes, weights)
+    assert ku[0] == 12345 and ks[0] == weights.sum()
+    assert (ku[1:] == PAD).all() and (ks[1:] == 0).all()
+    _assert_matches_oracle(codes, weights)
+
+
+def test_already_sorted_and_reversed():
+    codes, weights = _stream(150, 40, seed=2)
+    order = np.argsort(codes, kind="stable")
+    _assert_matches_oracle(codes[order], weights[order])
+    _assert_matches_oracle(codes[order][::-1], weights[order][::-1])
+
+
+def test_empty_stream():
+    ku, ks = _kernel(np.zeros(0, np.int64), np.zeros(0, np.float32))
+    assert ku.shape == (0,) and ks.shape == (0,)
+
+
+@pytest.mark.parametrize("n", [1, 127, 128, 129, 255, 256])
+def test_rung_boundary_streams(n):
+    """Exact power-of-two rungs (no internal padding) and one-off-the-edge
+    lengths (max internal padding) — the shapes the bucket ladder feeds."""
+    _assert_matches_oracle(*_stream(n, max(2, n // 3), seed=n))
+
+
+def test_identity_padded_input_keeps_pad_run():
+    """Bucket-padded streams (int64-max codes, zero weights) aggregate the
+    pad run to a single zero-count cell, exactly like the oracle."""
+    codes, weights = _stream(100, 10, seed=3)
+    codes = np.concatenate([codes, np.full(28, PAD, np.int64)])
+    weights = np.concatenate([weights, np.zeros(28, np.float32)])
+    _assert_matches_oracle(codes, weights)
+    ku, ks = _kernel(codes, weights)
+    assert (ku == PAD).sum() >= 1 and ks[ku == PAD].sum() == 0
+
+
+def test_int64_hi_lo_split_round_trip():
+    """Codes straddling the int32 lane split — low words around the sign
+    bias, high words far above 32 bits — survive split + sort + recombine."""
+    codes = np.array(
+        [0, 1, (1 << 31) - 1, 1 << 31, (1 << 32) - 1, 1 << 32,
+         (1 << 40) + 7, (1 << 62) + 5, PAD - 1, 3, 1 << 31, (1 << 40) + 7],
+        np.int64,
+    )
+    weights = np.ones(len(codes), np.float32)
+    ku, ks = _kernel(codes, weights)
+    uniq, counts = np.unique(codes, return_counts=True)
+    np.testing.assert_array_equal(ku[: len(uniq)], uniq)
+    np.testing.assert_array_equal(ks[: len(uniq)], counts.astype(np.float32))
+    assert (ku[len(uniq):] == PAD).all()
+    _assert_matches_oracle(codes, weights)
+
+
+def test_dispatch_forced_pallas_matches_xla():
+    """ops.coo_aggregate under REPRO_SORT_IMPL=pallas (interpret on CPU)
+    == the same call under =xla, and the launch counter attributes it."""
+    codes, weights = _stream(180, 25, seed=4, hi_bits=True)
+    old = ops.set_sort_impl("xla")
+    try:
+        xu, xs = ops.coo_aggregate(codes, weights)
+        ops.set_sort_impl("pallas")
+        ops.reset_launch_counts()
+        pu, ps = ops.coo_aggregate(codes, weights)
+        assert ops.launch_counts().get("coo_sort") == 1
+    finally:
+        ops.set_sort_impl(old)
+    np.testing.assert_array_equal(np.asarray(pu), np.asarray(xu))
+    np.testing.assert_array_equal(np.asarray(ps), np.asarray(xs))
+
+
+def test_dispatch_int32_streams_stay_on_xla():
+    """int32 code streams never route to the kernel (it exists for the
+    int64 composite keys) even under a forced pallas policy."""
+    codes = np.array([3, 1, 3, 2, 1, 3], np.int32)
+    weights = np.ones(6, np.float32)
+    old = ops.set_sort_impl("pallas")
+    try:
+        ops.reset_launch_counts()
+        uniq, sums = ops.coo_aggregate(codes, weights)
+        assert "coo_sort" not in ops.launch_counts()
+    finally:
+        ops.set_sort_impl(old)
+    u = np.asarray(uniq)
+    np.testing.assert_array_equal(u[:3], [1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(sums)[:3], [2.0, 1.0, 3.0])

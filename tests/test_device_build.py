@@ -295,3 +295,61 @@ def test_device_build_marginals_match_host_build():
         dm = dev.marginal(tuple(keep)).to_host()
         np.testing.assert_array_equal(dm.codes, hm.codes)
         np.testing.assert_array_equal(dm.counts, hm.counts)
+
+
+# ---------------------------------------------------------------------------
+# Small-stream crossover routing (REPRO_DEVICE_MIN_ROWS)
+# ---------------------------------------------------------------------------
+
+
+def test_device_min_rows_routes_small_db_to_host():
+    """Below the crossover, device_resident=True silently uses the host
+    builder: same cells, host SparseCT type, no accounted device launches."""
+    db = university_db()
+    old = counts.set_device_min_rows(db.total_tuples + 1)
+    try:
+        ct = joint_contingency_table(db, impl="sparse", device_resident=True)
+        assert isinstance(ct, SparseCT) and not isinstance(ct, DeviceSparseCT)
+    finally:
+        counts.set_device_min_rows(old)
+    host = joint_contingency_table(db, impl="sparse")
+    np.testing.assert_array_equal(ct.codes, host.codes)
+    np.testing.assert_array_equal(ct.counts, host.counts)
+
+
+def test_device_min_rows_honors_flag_at_threshold():
+    """At/above the threshold the device build runs (>= comparison)."""
+    db = university_db()
+    old = counts.set_device_min_rows(db.total_tuples)
+    try:
+        ct = joint_contingency_table(db, impl="sparse", device_resident=True)
+        assert isinstance(ct, DeviceSparseCT)
+    finally:
+        counts.set_device_min_rows(old)
+
+
+def test_device_min_rows_setter_contract():
+    old = counts.set_device_min_rows(123)
+    try:
+        assert counts.device_min_rows() == 123
+        with pytest.raises(ValueError):
+            counts.set_device_min_rows(-1)
+        assert counts.device_min_rows() == 123  # failed set leaves it alone
+    finally:
+        counts.set_device_min_rows(old)
+
+
+def test_host_routed_joint_serves_score_manager():
+    """ScoreManager(device_resident=True) over a host-routed (small-DB)
+    joint still scores — and picks the same model as the device path."""
+    db = university_db()
+    old = counts.set_device_min_rows(db.total_tuples + 1)
+    try:
+        mgr = ScoreManager(db, mode="sparse", device_resident=True)
+        assert isinstance(mgr.joint, SparseCT)
+        res_host = learn_and_join(db, mgr, score="aic", max_parents=2, max_chain=1)
+    finally:
+        counts.set_device_min_rows(old)
+    dev_mgr = ScoreManager(db, mode="sparse", device_resident=True)
+    res_dev = learn_and_join(db, dev_mgr, score="aic", max_parents=2, max_chain=1)
+    assert sorted(res_host.bn.edges()) == sorted(res_dev.bn.edges())

@@ -82,7 +82,12 @@ def _delta_pct(base, head) -> float | None:
 def _section(base: dict, head: dict, group: str, metrics,
              lines: list[str], warnings: list[str]) -> int:
     """Append one group's per-entry delta tables; -> entries rendered."""
-    names = [n for n in head.get(group, {}) if n in base.get(group, {})]
+    # "_"-prefixed entries are run-level records (routing summaries), not
+    # per-dataset metric dicts
+    names = [
+        n for n in head.get(group, {})
+        if n in base.get(group, {}) and not n.startswith("_")
+    ]
     for name in names:
         b, h = base[group][name], head[group][name]
         lines += [f"### {name}", "",
