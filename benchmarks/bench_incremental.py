@@ -1,0 +1,213 @@
+"""Incremental maintenance: O(Δ) signed-delta apply vs full joint rebuilds.
+
+The ROADMAP's "live database" item: after a handful of relationship rows
+change, the pre-counted device-resident joint should be *maintained*, not
+rebuilt.  This leg measures exactly that trade on a ``ScoreManager`` with a
+``mode="sparse", device_resident=True`` joint:
+
+  * **rebuild baseline** — a warm from-scratch device build of the current
+    joint (what every delta pays with ``REPRO_INCREMENTAL=0``);
+  * **delta applies** — :meth:`ScoreManager.apply_delta` with random insert
+    batches of 1 / 10^2 / 10^4 rows into the largest relationship table.
+    Each size runs cold (pays any new delta-view bucket rungs) then warm;
+    the warm pass is compile-counted — the bucket ladder must make repeat
+    deltas of a seen shape **zero**-compile (gated for the single-row size
+    by ``benchmarks/run.py``).
+
+After *every* apply the maintained joint is checked **bit-identical** in
+canonical host form (codes AND float32 counts) against a from-scratch device
+rebuild of the mutated database — ``incremental_equal`` is the AND over all
+checks and gates the run the same way the scale leg's flags do.  On the
+paper-analogue dataset the leg also populates the score memo with a full
+``learn_and_join`` first, so the dirty-set refresh counters
+(``n_dirty_families`` / ``n_preserved_families``) measure how much scoring
+work a single-table delta actually preserves.
+
+Results land under the ``bench_incremental`` key of ``BENCH_structure.json``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.counts import joint_contingency_table, set_device_min_rows
+from repro.core.score_manager import ScoreManager
+from repro.core.sparse_counts import as_host
+from repro.core.structure import learn_and_join
+from repro.kernels import bucketing
+
+from .common import emit, load, timed
+
+#: CI smoke artifact vs the committed full document (mirrors bench_scale).
+SMOKE_PRESETS = ["uw-cse"]
+FULL_PRESETS = ["uw-cse", "synth-1m"]
+
+#: Insert-batch sizes per delta apply (the ISSUE's 1 / 10^2 / 10^4 ladder).
+DELTA_SIZES = (1, 100, 10_000)
+
+
+def _equal(oracle_ct, live_ct) -> bool:
+    """Bit-identity of the maintained joint against a from-scratch rebuild."""
+    h, d = as_host(oracle_ct), as_host(live_ct)
+    return (
+        h.rvs == d.rvs
+        and np.array_equal(np.asarray(h.codes), np.asarray(d.codes))
+        and np.array_equal(np.asarray(h.counts), np.asarray(d.counts))
+    )
+
+
+def _random_inserts(db, table: str, size: int, rng) -> dict:
+    """A ``database.apply_delta`` insert spec of ``size`` random rows."""
+    decl = next(d for d in db.schema.relationships if d.name == table)
+    n1 = db.entities[decl.entities[0]].n_rows
+    n2 = db.entities[decl.entities[1]].n_rows
+    return {
+        "fk1": rng.integers(0, n1, size=size, dtype=np.int32),
+        "fk2": rng.integers(0, n2, size=size, dtype=np.int32),
+        # stored groundings are true: codes in the n/a-augmented [1, |dom|]
+        "attrs": {
+            attr: rng.integers(1, len(dom) + 1, size=size, dtype=np.int32)
+            for attr, dom in decl.attributes
+        },
+    }
+
+
+def _device_rebuild(db):
+    """From-scratch device joint of ``db`` (the equality oracle)."""
+    old = set_device_min_rows(0)
+    try:
+        return joint_contingency_table(db, impl="sparse", device_resident=True)
+    finally:
+        set_device_min_rows(old)
+
+
+def run_incremental(presets: list[str] | None = None) -> dict:
+    """Delta-apply vs rebuild on each preset; -> metrics dict.
+
+    Emits ``incremental/<preset>/...`` CSV rows and returns the JSON-ready
+    dict ``benchmarks.run`` stores under ``payload["bench_incremental"]``.
+    The joint *build* forces the device route (this leg measures maintenance
+    of a device-resident joint); the delta applies run under **production**
+    routing, so small delta views take the host contraction and only the
+    signed merge touches the device — that routing *is* the fast path.
+    """
+    out: dict[str, dict] = {}
+    for name in presets or FULL_PRESETS:
+        bdb, _ = timed(load, name)
+        table = max(
+            bdb.db.relationships,
+            key=lambda t: bdb.db.relationships[t].n_rows,
+        )
+        rng = np.random.default_rng(11)
+
+        old = set_device_min_rows(0)
+        try:
+            mgr, build_secs = timed(
+                ScoreManager, bdb.db, mode="sparse", device_resident=True
+            )
+            # warm full-rebuild baseline: what REPRO_INCREMENTAL=0 pays on
+            # every delta (second run so compile time stays out of it)
+            timed(
+                joint_contingency_table, mgr.db, impl="sparse",
+                device_resident=True,
+            )
+            _, rebuild_secs = timed(
+                joint_contingency_table, mgr.db, impl="sparse",
+                device_resident=True,
+            )
+        finally:
+            set_device_min_rows(old)
+
+        metrics: dict = {
+            "total_tuples": int(bdb.db.total_tuples),
+            "table": table,
+            "build_ms": build_secs * 1e3,
+            "rebuild_warm_ms": rebuild_secs * 1e3,
+        }
+
+        # populate the score memo so the dirty-set refresh has families to
+        # preserve (paper-analogue datasets only — the synth star schemas
+        # measure raw delta latency, not structure search)
+        if not name.startswith("synth"):
+            _, learn_secs = timed(
+                learn_and_join, mgr.db, mgr, score="aic", max_parents=2
+            )
+            metrics["learn_ms"] = learn_secs * 1e3
+
+        all_equal = True
+        for d in DELTA_SIZES:
+            # cold apply: pays any delta-view bucket rungs not yet compiled
+            cold_stats, cold_secs = timed(
+                mgr.apply_delta, table, _random_inserts(mgr.db, table, d, rng)
+            )
+            eq_cold = _equal(_device_rebuild(mgr.db), mgr.joint)
+            # transition apply: the cold one may have grown the live joint
+            # across a ladder rung, so the second still sees a new merge
+            # shape — only from the third on is the shape set closed
+            mgr.apply_delta(table, _random_inserts(mgr.db, table, d, rng))
+            # warm apply of the same delta shape: must be compile-free
+            bucketing.reset_compile_counts()
+            warm_stats, warm_secs = timed(
+                mgr.apply_delta, table, _random_inserts(mgr.db, table, d, rng)
+            )
+            compiles_warm = bucketing.compile_counts()["compiles"]
+            eq_warm = _equal(_device_rebuild(mgr.db), mgr.joint)
+
+            metrics[f"delta{d}_apply_ms_cold"] = cold_secs * 1e3
+            metrics[f"delta{d}_apply_ms"] = warm_secs * 1e3
+            metrics[f"delta{d}_compiles_warm"] = compiles_warm
+            metrics[f"delta{d}_equal"] = eq_cold and eq_warm
+            all_equal = all_equal and eq_cold and eq_warm
+            if d == DELTA_SIZES[0]:
+                # dirty-set refresh split of the first (post-learn) apply
+                metrics["n_dirty_families"] = cold_stats["n_dirty_families"]
+                metrics["n_preserved_families"] = cold_stats[
+                    "n_preserved_families"
+                ]
+                metrics["delta1_incremental"] = bool(warm_stats["incremental"])
+
+        metrics["incremental_equal"] = all_equal
+        metrics["delta1_speedup"] = rebuild_secs / max(
+            metrics["delta1_apply_ms"] / 1e3, 1e-9
+        )
+        if mgr._msg_cache is not None:
+            metrics["msg_cache_hits"] = mgr._msg_cache.hits
+            metrics["msg_cache_misses"] = mgr._msg_cache.misses
+
+        out[name] = metrics
+        emit(
+            f"incremental/{name}/rebuild_warm", rebuild_secs,
+            f"total_tuples={metrics['total_tuples']};table={table}",
+        )
+        for d in DELTA_SIZES:
+            emit(
+                f"incremental/{name}/delta{d}_apply",
+                metrics[f"delta{d}_apply_ms"] / 1e3,
+                f"cold={metrics[f'delta{d}_apply_ms_cold']:.2f}ms;"
+                f"compiles_warm={metrics[f'delta{d}_compiles_warm']};"
+                f"equal={metrics[f'delta{d}_equal']}",
+            )
+        emit(
+            f"incremental/{name}/summary",
+            metrics["delta1_apply_ms"] / 1e3,
+            f"speedup={metrics['delta1_speedup']:.1f}x;"
+            f"dirty={metrics['n_dirty_families']};"
+            f"preserved={metrics['n_preserved_families']};"
+            f"equal={all_equal}",
+        )
+    return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--presets", nargs="*", default=None,
+                   help=f"presets (default: {FULL_PRESETS})")
+    a = p.parse_args(argv)
+    print("name,us_per_call,derived")
+    run_incremental(a.presets)
+
+
+if __name__ == "__main__":
+    main()

@@ -42,7 +42,12 @@ def main(argv: list[str] | None = None) -> None:
     if a.json is not None:
         import json
 
-        from . import bench_kernels, bench_scale, bench_structure
+        from . import (
+            bench_incremental,
+            bench_kernels,
+            bench_scale,
+            bench_structure,
+        )
 
         datasets = ["uw-cse"] if a.smoke else ["uw-cse", "mutagenesis", "movielens"]
         scale = 0.05 if a.smoke else None
@@ -63,6 +68,13 @@ def main(argv: list[str] | None = None) -> None:
             else bench_scale.FULL_PRESETS
         )
         payload["bench_scale"] = bench_scale.run_scale(presets)
+        # The incremental leg: O(Δ) signed-delta maintenance of the
+        # device-resident joint vs warm full rebuilds, every apply gated
+        # bit-identical against a from-scratch oracle.
+        payload["bench_incremental"] = bench_incremental.run_incremental(
+            bench_incremental.SMOKE_PRESETS if a.smoke
+            else bench_incremental.FULL_PRESETS
+        )
         with open(a.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
@@ -74,7 +86,9 @@ def main(argv: list[str] | None = None) -> None:
         # sharded-merge regression cannot land silently.
         failed = [
             f"{name}:{key}"
-            for group in ("datasets", "bench_scale", "bench_kernels")
+            for group in (
+                "datasets", "bench_scale", "bench_kernels", "bench_incremental",
+            )
             for name, metrics in payload[group].items()
             for key, val in sorted(metrics.items())
             if key.endswith("_equal") and val is False
@@ -97,11 +111,21 @@ def main(argv: list[str] | None = None) -> None:
             for name, metrics in payload["datasets"].items()
             if metrics["compiles_warm"] > bench_structure.WARM_COMPILE_BUDGET
         ]
-        if over or over_warm:
+        # Warm delta applies must be cache-complete: a repeat single-row
+        # delta rides the bucket ladder end-to-end, so a nonzero compile
+        # count here means a delta-view shape escaped the ladder.
+        over_delta = [
+            f"{name}:delta1_compiles_warm={metrics['delta1_compiles_warm']}"
+            for name, metrics in payload["bench_incremental"].items()
+            if metrics["delta1_compiles_warm"] > 0
+        ]
+        if over or over_warm or over_delta:
             print(
-                f"# COMPILE BUDGET EXCEEDED: {', '.join(over + over_warm)} "
+                f"# COMPILE BUDGET EXCEEDED: "
+                f"{', '.join(over + over_warm + over_delta)} "
                 f"(budget={bench_structure.COMPILE_BUDGET}, "
-                f"warm_budget={bench_structure.WARM_COMPILE_BUDGET})",
+                f"warm_budget={bench_structure.WARM_COMPILE_BUDGET}, "
+                f"warm_delta_budget=0)",
                 file=sys.stderr,
             )
             sys.exit(1)

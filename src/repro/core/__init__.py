@@ -21,11 +21,20 @@ from .counts import (
     set_dense_cell_budget,
 )
 from .cpt import FactorTable, learn_parameters, mle_factor
-from .sparse_counts import DeviceSparseCT, SparseCT, as_host
+from .sparse_counts import (
+    DeviceSparseCT,
+    LeafMessageCache,
+    SparseCT,
+    apply_ct_delta,
+    as_host,
+    sparse_ct_delta,
+)
 from .database import (
     EntityTable,
     RelationalDatabase,
     RelationshipTable,
+    TableDelta,
+    apply_delta,
     from_labels,
     university_db,
 )
@@ -41,17 +50,25 @@ from .schema import (
 )
 from .score_manager import ScoreManager
 from .scores import ScoreTable, score_family, score_structure
-from .structure import CountCache, LearnAndJoinResult, hill_climb, learn_and_join
+from .structure import (
+    CountCache,
+    LearnAndJoinResult,
+    hill_climb,
+    learn_and_join,
+    warm_hill_climb,
+)
 
 __all__ = [
     "BayesNet", "CTLike", "ContingencyTable", "DENSE_CELL_BUDGET",
-    "DeviceSparseCT", "SparseCT", "as_host",
+    "DeviceSparseCT", "LeafMessageCache", "SparseCT", "apply_ct_delta",
+    "as_host", "sparse_ct_delta",
     "set_dense_cell_budget", "contingency_table", "ct_conditional",
     "joint_contingency_table", "FactorTable", "learn_parameters", "mle_factor",
-    "EntityTable", "RelationalDatabase", "RelationshipTable", "from_labels",
+    "EntityTable", "RelationalDatabase", "RelationshipTable", "TableDelta",
+    "apply_delta", "from_labels",
     "university_db", "PredictionResult", "predict_block", "predict_single_loop",
     "EntityDecl", "ParRV", "RelationalSchema", "RelationshipDecl",
     "VariableCatalog", "analyze_schema", "make_schema", "ScoreTable",
     "score_family", "score_structure", "CountCache", "ScoreManager",
-    "LearnAndJoinResult", "hill_climb", "learn_and_join",
+    "LearnAndJoinResult", "hill_climb", "learn_and_join", "warm_hill_climb",
 ]

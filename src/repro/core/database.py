@@ -102,6 +102,139 @@ class RelationalDatabase:
                     assert col.min() >= 1 and col.max() <= len(dom), (decl.name, attr)
 
 
+@dataclass(frozen=True)
+class TableDelta:
+    """A signed per-table COO delta stream (the unit of incremental maintenance).
+
+    ``inserted`` carries the rows that entered the table (weight ``+1``) and
+    ``deleted`` the rows that left it (weight ``-1``), both as ordinary
+    :class:`RelationshipTable` instances so the count manager can run the
+    *same* join-tree contraction over a delta view that it runs over a full
+    table.  Because every count statistic is linear in each relationship's
+    row multiset, ``ΔCT = CT(inserted view) − CT(deleted view)`` exactly
+    (see ``sparse_counts.sparse_ct_delta``).
+    """
+
+    table: str
+    inserted: RelationshipTable
+    deleted: RelationshipTable
+
+    @property
+    def n_rows(self) -> int:
+        return self.inserted.n_rows + self.deleted.n_rows
+
+
+def _delta_rows_table(
+    decl, name: str, spec: Mapping[str, object] | None
+) -> RelationshipTable:
+    """Validate and int-encode one signed half of a delta spec."""
+    if spec is None:
+        spec = {"fk1": [], "fk2": [], "attrs": {}}
+    fk1 = np.asarray(spec.get("fk1", []), dtype=np.int32)
+    fk2 = np.asarray(spec.get("fk2", []), dtype=np.int32)
+    if fk1.shape != fk2.shape or fk1.ndim != 1:
+        raise ValueError(f"{name}: fk1/fk2 must be equal-length 1-D, "
+                         f"got {fk1.shape} vs {fk2.shape}")
+    n = int(fk1.shape[0])
+    spec_attrs = dict(spec.get("attrs", {}))
+    attrs = {}
+    for attr, dom in decl.attributes:
+        col = np.asarray(spec_attrs.pop(attr, [] if n == 0 else None),
+                         dtype=np.int32)
+        if col.shape != (n,):
+            raise ValueError(f"{name}.{attr}: expected {n} codes, got {col.shape}")
+        # stored groundings are true: codes live in the n/a-augmented domain
+        if n and (col.min() < 1 or col.max() > len(dom)):
+            raise ValueError(f"{name}.{attr}: codes must be in [1, {len(dom)}]")
+        attrs[attr] = jnp.asarray(col)
+    if spec_attrs:
+        raise ValueError(f"{name}: unknown attrs {sorted(spec_attrs)}")
+    return RelationshipTable(name, n, jnp.asarray(fk1), jnp.asarray(fk2), attrs)
+
+
+def apply_delta(
+    db: RelationalDatabase,
+    table: str,
+    inserted_rows: Mapping[str, object] | None = None,
+    deleted_rows=None,
+) -> tuple[RelationalDatabase, TableDelta]:
+    """Functionally apply a relationship-row delta; emit its signed stream.
+
+    ``inserted_rows`` is a dict with keys ``fk1``, ``fk2`` (entity row
+    indices) and ``attrs`` (mapping attr -> codes in the stored, n/a-augmented
+    convention: true groundings carry codes ``>= 1``).  ``deleted_rows`` is a
+    sequence of row *indices* into the current table (unambiguous under
+    duplicate rows).  Returns ``(new_db, delta)`` — the input database is
+    never mutated (all tables are frozen), so live caches keyed on the old
+    instance stay valid while the delta propagates.
+
+    Entity-table deltas are rejected: inserting or deleting an entity row
+    changes the grounding population itself, which invalidates *every*
+    contingency table — there is no O(Δ) update, only a rebuild.
+
+    Precondition (shared with construction, not checked here or by
+    ``validate()`` — a scan of the live table would cost O(n), defeating the
+    O(Δ) contract): each ``(fk1, fk2)`` pair grounds the relationship at
+    most once, so an inserted pair must not already have a surviving row.
+    A duplicate makes the true/false grounding split inconsistent (counts
+    can go negative) in the rebuilt and delta-maintained CT alike.
+    """
+    if table in db.entities:
+        raise NotImplementedError(
+            f"entity-table deltas are not incremental ({table!r}): a "
+            "population change touches every CT; rebuild instead"
+        )
+    if table not in db.relationships:
+        raise KeyError(f"unknown relationship table {table!r}")
+    decl = next(d for d in db.schema.relationships if d.name == table)
+    rel = db.relationships[table]
+    n1 = db.entities[decl.entities[0]].n_rows
+    n2 = db.entities[decl.entities[1]].n_rows
+
+    ins = _delta_rows_table(decl, table, inserted_rows)
+    if ins.n_rows:
+        f1, f2 = np.asarray(ins.fk1), np.asarray(ins.fk2)
+        if f1.min() < 0 or f1.max() >= n1 or f2.min() < 0 or f2.max() >= n2:
+            raise ValueError(f"{table}: inserted foreign keys out of range")
+
+    idx = np.asarray([] if deleted_rows is None else deleted_rows, dtype=np.int64)
+    if idx.size:
+        if idx.min() < 0 or idx.max() >= rel.n_rows:
+            raise IndexError(f"{table}: deleted row index out of range "
+                             f"[0, {rel.n_rows})")
+        if np.unique(idx).size != idx.size:
+            raise ValueError(f"{table}: duplicate deleted row indices")
+    dele = RelationshipTable(
+        table, int(idx.size),
+        jnp.asarray(np.asarray(rel.fk1)[idx]),
+        jnp.asarray(np.asarray(rel.fk2)[idx]),
+        {a: jnp.asarray(np.asarray(c)[idx]) for a, c in rel.attrs.items()},
+    )
+
+    keep = np.ones(rel.n_rows, dtype=bool)
+    keep[idx] = False
+
+    def _cat(col, ins_col):
+        # numpy concat + ONE device_put per column: jnp.concatenate would
+        # compile a fresh (and never-reused) program for every distinct
+        # table length, taxing each delta application with an XLA compile
+        return jnp.asarray(np.concatenate([np.asarray(col)[keep],
+                                           np.asarray(ins_col)]))
+
+    new_rel = RelationshipTable(
+        table,
+        rel.n_rows - int(idx.size) + ins.n_rows,
+        _cat(rel.fk1, ins.fk1),
+        _cat(rel.fk2, ins.fk2),
+        {a: _cat(c, ins.attrs[a]) for a, c in rel.attrs.items()},
+    )
+    new_db = RelationalDatabase(
+        db.schema, db.catalog, db.entities,
+        {**db.relationships, table: new_rel},
+    )
+    return new_db, TableDelta(table, ins, dele)
+
+
 def from_labels(
     schema: RelationalSchema,
     entity_rows: Mapping[str, Mapping[str, list]],

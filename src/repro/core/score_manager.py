@@ -63,6 +63,7 @@ from jax.experimental import enable_x64
 
 from ..kernels import bucketing, ops
 from ..kernels.sparse_score import MAX_FAMILIES
+from . import database as _database
 from .counts import (
     CTLike,
     contingency_table,
@@ -73,7 +74,14 @@ from .counts import (
 )
 from .database import RelationalDatabase
 from .scores import FamilyScore, score_family, stacked_family_scores
-from .sparse_counts import DeviceSparseCT, SparseCT, sparse_family_stats
+from .sparse_counts import (
+    DeviceSparseCT,
+    LeafMessageCache,
+    SparseCT,
+    apply_ct_delta,
+    sparse_ct_delta,
+    sparse_family_stats,
+)
 
 
 #: Default routing threshold of the adaptive batch/serial scorer: sweeps
@@ -106,6 +114,22 @@ def batch_min_candidates() -> int:
     if n < 0:
         raise ValueError(f"REPRO_BATCH_MIN_CANDIDATES must be >= 0, got {n}")
     return n
+
+
+def incremental_enabled() -> bool:
+    """Incremental joint maintenance switch (``REPRO_INCREMENTAL``, fail-loud).
+
+    On by default.  ``0`` makes :meth:`CountCache.apply_delta` rebuild the
+    pre-counted joint from scratch on every delta instead of propagating a
+    signed ΔCT — the bisection aid for suspected delta-propagation bugs
+    (results are bit-identical either way; only latency differs).
+    """
+    raw = os.environ.get("REPRO_INCREMENTAL", "").strip()
+    if not raw:
+        return True
+    if raw not in ("0", "1"):
+        raise ValueError(f"REPRO_INCREMENTAL must be 0 or 1, got {raw!r}")
+    return raw == "1"
 
 
 class CountCache:
@@ -155,9 +179,12 @@ class CountCache:
         self.impl = "sparse" if mode == "sparse" else impl
         self.memoize = memoize
         self.device_resident = bool(device_resident)
+        self._shards = shards
         self._memo: dict[tuple[str, ...], CTLike] = {}
+        self._msg_cache: LeafMessageCache | None = None
         self.n_queries = 0
         self.n_materializations = 0
+        self.n_delta_applies = 0
         self.joint: CTLike | None = None
         if mode in ("precount", "sparse"):
             # shards row-shards the device build's fact-table scans
@@ -167,6 +194,65 @@ class CountCache:
                 shards=shards,
             )
             self.n_materializations += 1
+
+    def _dirty_rvs(self, table: str) -> set[str]:
+        """Par-RVs a delta to ``table`` can change: its indicator + attrs.
+
+        Everything else is provably untouched — entity populations are
+        fixed (``database.apply_delta`` rejects entity deltas), so any CT
+        marginal over axes disjoint from this set sums the touched
+        relationship out entirely and never reads its rows.
+        """
+        cat = self.db.catalog
+        return {cat.rel_var_of(table).vid} | {
+            a.vid for a in cat.attrs_of_rel(table)
+        }
+
+    def apply_delta(
+        self, table: str, inserted_rows=None, deleted_rows=None
+    ) -> dict:
+        """Apply a relationship-row delta and maintain the caches in O(Δ).
+
+        Wraps :func:`repro.core.database.apply_delta` (same arguments), then:
+
+        * the pre-counted **sparse** joint is updated by signed ΔCT
+          propagation + one merge (:func:`~repro.core.sparse_counts.
+          sparse_ct_delta` / :func:`~repro.core.sparse_counts.
+          apply_ct_delta`) — bit-identical in canonical host form to a
+          rebuild, at delta cost.  Leaf messages are served from a
+          per-manager :class:`~repro.core.sparse_counts.LeafMessageCache`.
+          Dense joints (and ``REPRO_INCREMENTAL=0``) rebuild instead.
+        * the CT memo drops exactly the entries whose RV sets intersect the
+          **dirty set** (the touched relationship's indicator + attributes);
+          disjoint marginals are provably unchanged and stay served.
+
+        Returns a stats dict (``delta``, ``dirty_rvs``, ``incremental``).
+        """
+        new_db, delta = _database.apply_delta(
+            self.db, table, inserted_rows, deleted_rows
+        )
+        dirty = self._dirty_rvs(table)
+        self.db = new_db
+        self.n_delta_applies += 1
+        for key in [k for k in self._memo if dirty.intersection(k)]:
+            del self._memo[key]
+        incremental = False
+        if isinstance(self.joint, (SparseCT, DeviceSparseCT)) and incremental_enabled():
+            if self._msg_cache is None:
+                self._msg_cache = LeafMessageCache()
+            dct = sparse_ct_delta(
+                new_db, delta, self.joint.rvs, shards=self._shards,
+                msg_cache=self._msg_cache,
+            )
+            self.joint = apply_ct_delta(self.joint, dct)
+            incremental = True
+        elif self.joint is not None:
+            self.joint = joint_contingency_table(
+                new_db, impl=self.impl, device_resident=self.device_resident,
+                shards=self._shards,
+            )
+            self.n_materializations += 1
+        return {"delta": delta, "dirty_rvs": dirty, "incremental": incremental}
 
     def __call__(self, rvs: tuple[str, ...]) -> CTLike:
         self.n_queries += 1
@@ -225,6 +311,44 @@ class ScoreManager(CountCache):
         self.batch_min_candidates = batch_min_candidates()
         self.n_serial_routed = 0
         self.n_batched_routed = 0
+        self.n_dirty_families = 0
+        self.n_preserved_families = 0
+
+    def apply_delta(
+        self, table: str, inserted_rows=None, deleted_rows=None
+    ) -> dict:
+        """Delta-apply + **dirty-set score refresh** (see the base method).
+
+        Only families whose RV set intersects the dirty set (the touched
+        relationship's indicator + attributes) are evicted from the score
+        memo and re-scored on next request; every other family's score is
+        *provably* unchanged — its CT marginalizes the touched relationship
+        out and family scores are context-free — so it keeps serving from
+        the memo.  The split is counted in ``n_dirty_families`` /
+        ``n_preserved_families`` (cumulative) and returned per call.
+        """
+        stats = super().apply_delta(table, inserted_rows, deleted_rows)
+        dirty = stats["dirty_rvs"]
+        n_dirty = n_preserved = 0
+        for key in list(self._score_memo):
+            child, parents, _alpha = key
+            if dirty.intersection((child,) + parents):
+                del self._score_memo[key]
+                n_dirty += 1
+            else:
+                n_preserved += 1
+        self.n_dirty_families += n_dirty
+        self.n_preserved_families += n_preserved
+        # the joint's cells changed: decoded digit/cell caches rebuild lazily
+        self._cards = None
+        self._joint_rvs = None
+        self._cell_codes = None
+        self._cell_counts = None
+        self._digit_cache = {}
+        self._digit_mat = None
+        stats["n_dirty_families"] = n_dirty
+        stats["n_preserved_families"] = n_preserved
+        return stats
 
     # -- joint-CT cell cache (counts layer plumbing) -------------------------
 

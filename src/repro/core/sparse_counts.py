@@ -727,12 +727,17 @@ def sparse_ct_conditional(
     *,
     group_fovar: str | None = None,
     restrict: dict[str, int] | None = None,
+    msg_cache: "LeafMessageCache | None" = None,
 ) -> SparseCT:
     """Sparse twin of :func:`repro.core.counts.ct_conditional`.
 
     Same cells (validated against the dense backend and the int64 brute
     force), but every intermediate is a COO tuple table, so memory scales
     with realized groundings instead of domain cross products.
+
+    ``msg_cache`` (incremental maintenance) serves unchanged leaf messages
+    — which depend only on entity tables, immutable across relationship
+    deltas — from a :class:`LeafMessageCache` instead of re-encoding them.
     """
     cat = db.catalog
     plan: QueryPlan = plan_conditional(
@@ -750,7 +755,7 @@ def sparse_ct_conditional(
     def fovar_n_rows(fid: str) -> int:
         return db.entities[cat.fovar(fid).entity].n_rows
 
-    def initial_message(fid: str) -> _Msg:
+    def _build_initial(fid: str) -> _Msg:
         n = fovar_n_rows(fid)
         rows = np.arange(n, dtype=np.int64)
         weights = np.ones(n, np.float32)
@@ -764,6 +769,13 @@ def sparse_ct_conditional(
             rows, codes, weights = rows[keep], codes[keep], weights[keep]
         # rows are sorted; codes unique per row (one tuple per entity)
         return _Msg(rows, codes, weights, cards, [rv.vid for rv in plan.ent_attrs[fid]])
+
+    def initial_message(fid: str) -> _Msg:
+        if msg_cache is None:
+            return _build_initial(fid)
+        key = ("host", fid, tuple(rv.vid for rv in plan.ent_attrs[fid]),
+               plan.restrict.get(fid))
+        return msg_cache.get(key, lambda: _build_initial(fid))
 
     def eliminate_leaf(msg: _Msg, rname: str, leaf: str, other: str) -> _Msg:
         """Push a leaf's message through a relationship (sparse FK join)."""
@@ -886,6 +898,8 @@ def sparse_contingency_table(
     group_fovar: str | None = None,
     restrict: dict[str, int] | None = None,
     fovar_universe: tuple[str, ...] | None = None,
+    touched_rel: str | None = None,
+    msg_cache: "LeafMessageCache | None" = None,
 ) -> SparseCT:
     """Sparse twin of :func:`repro.core.counts.contingency_table`.
 
@@ -895,6 +909,15 @@ def sparse_contingency_table(
     relationship-attribute cells, and the indicator becomes the leading
     mixed-radix digit, so F-cells and T-cells occupy disjoint sorted halves
     of the code space and concatenate without re-sorting.
+
+    ``touched_rel`` switches the recursion to **delta mode** (incremental
+    maintenance, see :func:`sparse_ct_delta`): the caller passes a delta
+    *view* whose ``touched_rel`` table holds only the delta rows, and the
+    table computed is ``ΔCT`` — the star branch at ``touched_rel``'s level
+    excludes that relationship entirely, so its delta is identically zero
+    and the branch is pruned (``F = 0 − Σ_rattrs T``).  Every surviving
+    leaf conditional then has ``touched_rel`` among its joined fact tables
+    and is linear in its (delta) rows.
     """
     cat = db.catalog
     want, rel_names, added, attr_rvs, universe_t = mobius_setup(db, rvs, fovar_universe)
@@ -915,20 +938,26 @@ def sparse_contingency_table(
             return sparse_ct_conditional(
                 db, attrs, fixed_true, universe_t,
                 group_fovar=group_fovar, restrict=restrict,
+                msg_cache=msg_cache,
             )
         r, rest = remaining[0], remaining[1:]
         r_attr_vids = tuple(
             v.vid for v in want if v.kind == KIND_REL_ATTR and v.table == r
         )
         t_branch = recurse(rest, fixed_true + (r,), attrs)
-        star_attrs = tuple(v for v in attrs if v not in r_attr_vids)
-        star_branch = recurse(rest, fixed_true, star_attrs)
 
         shared = tuple(v for v in t_branch.rvs if v not in r_attr_vids)
         t_ct = t_branch.transpose(shared + r_attr_vids)
         t_sum = t_ct.marginal(shared) if r_attr_vids else t_ct
-        star = star_branch.transpose(shared)
-        f_count = _sparse_sub(star, t_sum)  # counts with r = False
+        if r == touched_rel:
+            # Delta mode: the star branch never joins ``r``, so Δstar ≡ 0
+            # and the whole subtree is pruned — ``ΔF = 0 − Σ_rattrs ΔT``.
+            f_count = SparseCT(t_sum.rvs, t_sum.cards, t_sum.codes, -t_sum.counts)
+        else:
+            star_attrs = tuple(v for v in attrs if v not in r_attr_vids)
+            star_branch = recurse(rest, fixed_true, star_attrs)
+            star = star_branch.transpose(shared)
+            f_count = _sparse_sub(star, t_sum)  # counts with r = False
 
         r_cards = tuple(cat[v].cardinality for v in r_attr_vids)
         d_r = math.prod(r_cards, start=1)
@@ -1338,6 +1367,12 @@ def _sp_total(counts):
 
 
 @_maybe_jit
+def _sp_neg(counts):
+    """Signed-count negation (the ``0 − ΔT`` of a pruned delta star branch)."""
+    return -counts
+
+
+@_maybe_jit
 def _sp_n_nonzero(counts):
     return jnp.sum(counts != 0.0)
 
@@ -1596,6 +1631,7 @@ def device_sparse_ct_conditional(
     group_fovar: str | None = None,
     restrict: dict[str, int] | None = None,
     shards: int = 1,
+    msg_cache: "LeafMessageCache | None" = None,
 ) -> DeviceSparseCT:
     """Device twin of :func:`sparse_ct_conditional` (same cells, no host COO).
 
@@ -1623,6 +1659,7 @@ def device_sparse_ct_conditional(
         return _device_ct_conditional(
             db, attr_rvs, cond_true, fovar_universe,
             group_fovar=group_fovar, restrict=restrict, shards=shards,
+            msg_cache=msg_cache,
         )
 
 
@@ -1635,6 +1672,7 @@ def _device_ct_conditional(
     group_fovar: str | None = None,
     restrict: dict[str, int] | None = None,
     shards: int = 1,
+    msg_cache: "LeafMessageCache | None" = None,
 ) -> DeviceSparseCT:
     """:func:`device_sparse_ct_conditional` body, run under the ladder floor."""
     pivot = _shard_pivot(db, cond_true) if shards > 1 else None
@@ -1644,6 +1682,7 @@ def _device_ct_conditional(
             _device_ct_conditional(
                 _shard_view(db, pivot, lo, hi), attr_rvs, cond_true,
                 fovar_universe, group_fovar=group_fovar, restrict=restrict,
+                msg_cache=msg_cache,
             )
             for lo, hi in bucketing.shard_ranges(n, shards)
         ]
@@ -1664,7 +1703,7 @@ def _device_ct_conditional(
     def fovar_n_rows(fid: str) -> int:
         return db.entities[cat.fovar(fid).entity].n_rows
 
-    def initial_message(fid: str) -> _DevMsg:
+    def _build_initial(fid: str) -> _DevMsg:
         n = fovar_n_rows(fid)
         cards = [rv.cardinality for rv in plan.ent_attrs[fid]]
         folded = [rv.vid for rv in plan.ent_attrs[fid]]
@@ -1688,6 +1727,16 @@ def _device_ct_conditional(
             rows, codes, weights, cards, folded,
             dense_rows=fid not in plan.restrict,
         )
+
+    def initial_message(fid: str) -> _DevMsg:
+        if msg_cache is None:
+            return _build_initial(fid)
+        # The stream floor is part of the key: a device message's padded
+        # shape is fixed by the floor active when it was built, and mixing
+        # floors would leak new shapes into downstream programs.
+        key = ("dev", fid, tuple(rv.vid for rv in plan.ent_attrs[fid]),
+               plan.restrict.get(fid), bucketing.stream_floor())
+        return msg_cache.get(key, lambda: _build_initial(fid))
 
     def eliminate_leaf(msg: _DevMsg, rname: str, leaf: str, other: str) -> _DevMsg:
         """Push a leaf's message through a relationship (device FK join)."""
@@ -1841,8 +1890,14 @@ def device_sparse_contingency_table(
     restrict: dict[str, int] | None = None,
     fovar_universe: tuple[str, ...] | None = None,
     shards: int | None = None,
+    touched_rel: str | None = None,
+    msg_cache: "LeafMessageCache | None" = None,
 ) -> DeviceSparseCT:
     """Device twin of :func:`sparse_contingency_table` (Möbius on device).
+
+    ``touched_rel`` selects delta mode exactly as in the host builder: the
+    star branch at that relationship's level is pruned (its delta is zero)
+    and ``ΔF = −Σ_rattrs ΔT`` via one :func:`_sp_neg` program per rung.
 
     Structurally identical recursion; each level's don't-care subtraction is
     a signed ``ops.coo_aggregate`` pass (:func:`_dev_sparse_sub`) and the
@@ -1878,20 +1933,28 @@ def device_sparse_contingency_table(
             return _device_ct_conditional(
                 db, attrs, fixed_true, universe_t,
                 group_fovar=group_fovar, restrict=restrict, shards=shards,
+                msg_cache=msg_cache,
             )
         r, rest = remaining[0], remaining[1:]
         r_attr_vids = tuple(
             v.vid for v in want if v.kind == KIND_REL_ATTR and v.table == r
         )
         t_branch = recurse(rest, fixed_true + (r,), attrs)
-        star_attrs = tuple(v for v in attrs if v not in r_attr_vids)
-        star_branch = recurse(rest, fixed_true, star_attrs)
 
         shared = tuple(v for v in t_branch.rvs if v not in r_attr_vids)
         t_ct = t_branch.transpose(shared + r_attr_vids)
         t_sum = t_ct.marginal(shared) if r_attr_vids else t_ct
-        star = star_branch.transpose(shared)
-        f_count = _dev_sparse_sub(star, t_sum)  # counts with r = False
+        if r == touched_rel:
+            # Delta mode: Δstar ≡ 0 (the star branch never joins ``r``), so
+            # the subtree is pruned and ``ΔF = 0 − Σ_rattrs ΔT``.
+            f_count = DeviceSparseCT(
+                t_sum.rvs, t_sum.cards, t_sum.codes, _sp_neg(t_sum.counts)
+            )
+        else:
+            star_attrs = tuple(v for v in attrs if v not in r_attr_vids)
+            star_branch = recurse(rest, fixed_true, star_attrs)
+            star = star_branch.transpose(shared)
+            f_count = _dev_sparse_sub(star, t_sum)  # counts with r = False
 
         r_cards = tuple(cat[v].cardinality for v in r_attr_vids)
         d_r = math.prod(r_cards, start=1)
@@ -1928,6 +1991,234 @@ def device_sparse_contingency_table(
             return _compact_tail(full)
         new_cards, new_codes, new_counts = full._reencode(out_order)
         return _build_compact(out_order, new_cards, new_codes, new_counts)
+
+
+# ---------------------------------------------------------------------------
+# Incremental maintenance: signed O(Δ) delta propagation (ROADMAP "live db")
+# ---------------------------------------------------------------------------
+#
+# Every count statistic the builders above produce is *linear* in each
+# relationship's row multiset: a conditional that joins R sums one term per
+# R row crossed (PR 6's shard-merge multilinearity), and conditionals that
+# do not join R never read its rows at all.  The Möbius assembly, marginals
+# and signed aggregations are all linear in counts.  Hence, for a delta
+# touching one relationship R,
+#
+#     ΔCT = CT(db′) − CT(db) = CT(view with only inserted R rows)
+#                            − CT(view with only deleted R rows)
+#
+# where both views share every other table by reference — and inside each
+# view build, the recursion level for R prunes its star branch (Δstar ≡ 0,
+# since that branch never joins R).  The delta merges into the live table
+# by the same signed concat + aggregate as the sharded build: float64
+# accumulation of integer-valued float32 counts, one rounding, hence
+# bit-identical (in canonical host form) to a from-scratch rebuild.  Exact
+# insert/delete cancellations become true zero-count cells, absent by
+# contract and dropped by ``to_host()`` / ``aggregate_codes``.
+
+
+def msg_cache_cap() -> int:
+    """Leaf-message cache capacity (entries) — env knob ``REPRO_MSG_CACHE``.
+
+    Default 128 entries; ``0`` disables caching entirely.  Like the other
+    env knobs, a malformed value fails loudly rather than silently running
+    uncached.
+    """
+    raw = os.environ.get("REPRO_MSG_CACHE", "").strip()
+    if not raw:
+        return 128
+    try:
+        n = int(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"REPRO_MSG_CACHE must be an integer >= 0, got {raw!r}"
+        ) from e
+    if n < 0:
+        raise ValueError(f"REPRO_MSG_CACHE must be >= 0, got {n}")
+    return n
+
+
+class LeafMessageCache:
+    """Per-lineage cache of join-tree leaf (initial) messages.
+
+    A delta contraction re-runs the full join-tree walk, but its leaf
+    messages encode *entity* columns only — and relationship deltas never
+    touch entity tables, so within one database lineage (a base instance
+    evolved purely through ``database.apply_delta``) every leaf message is
+    reusable across delta applications.  Keys carry the builder residency,
+    the fovar, its queried attribute vids, the restriction row and (for
+    device messages) the active stream floor, so distinct plans and padded
+    shapes never collide.  FIFO eviction beyond ``cap`` entries
+    (:func:`msg_cache_cap`); messages are immutable downstream, so sharing
+    one instance across contractions is safe.
+
+    Do NOT share a cache across unrelated databases: entries are only valid
+    while the entity tables they encode are the live ones.
+    """
+
+    def __init__(self, cap: int | None = None):
+        self.cap = msg_cache_cap() if cap is None else int(cap)
+        self._entries: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key, build):
+        if self.cap == 0:
+            return build()
+        try:
+            msg = self._entries[key]
+        except KeyError:
+            self.misses += 1
+            msg = build()
+            while len(self._entries) >= self.cap:
+                self._entries.pop(next(iter(self._entries)))
+            self._entries[key] = msg
+            return msg
+        self.hits += 1
+        return msg
+
+
+def _delta_view(
+    db: RelationalDatabase, table: str, rows: RelationshipTable
+) -> RelationalDatabase:
+    """A database view with one relationship's rows replaced by delta rows.
+
+    The delta twin of :func:`_shard_view`: entity tables and every other
+    relationship are shared by reference, so the view is O(1) to build and
+    its contraction cost scales with the delta, not the table.
+    """
+    return RelationalDatabase(
+        db.schema, db.catalog, db.entities, {**db.relationships, table: rows}
+    )
+
+
+def sparse_ct_delta(
+    db: RelationalDatabase,
+    delta,
+    rvs: tuple[str, ...],
+    *,
+    fovar_universe: tuple[str, ...] | None = None,
+    device: bool | None = None,
+    shards: int | None = None,
+    msg_cache: LeafMessageCache | None = None,
+):
+    """Signed ΔCT of a single-table delta over ``rvs``.
+
+    ``db`` is the post-delta database (any instance of the lineage works —
+    the delta contraction reads only tables the delta did not touch, which
+    are shared by reference).  ``delta`` is a ``database.TableDelta``.
+    Returns a signed :class:`SparseCT` or :class:`DeviceSparseCT` such that
+
+        ``apply_ct_delta(CT(old_db), Δ)`` ≡ ``CT(new_db)``
+
+    bit-identically in canonical host form (codes and float32 counts).
+
+    ``device=None`` routes by the delta view's tuple count against
+    ``counts.device_min_rows()`` — the same crossover the full build uses —
+    so small deltas take the dispatch-free host contraction (the O(Δ) fast
+    path) and huge deltas the device one.  Either route rides the existing
+    bucket ladder: a warm apply at a seen delta shape compiles nothing.
+    """
+    cat = db.catalog
+    _want, rel_names, _added, _attr_rvs, _universe = mobius_setup(
+        db, rvs, fovar_universe
+    )
+    halves = [
+        (sign, rows)
+        for sign, rows in ((1.0, delta.inserted), (-1.0, delta.deleted))
+        if rows.n_rows
+    ]
+    if delta.table not in rel_names or not halves:
+        # The queried axes never join the touched table (its indicator and
+        # attributes are all marginalized away and the grounding population
+        # is fixed), or the delta is empty — ΔCT ≡ 0.
+        cards = tuple(cat[v].cardinality for v in rvs)
+        empty = SparseCT(
+            tuple(rvs), cards, np.zeros(0, np.int64), np.zeros(0, np.float32)
+        )
+        return empty.to_device() if device else empty
+
+    if device is None:
+        from .counts import device_min_rows
+
+        n_view = max(
+            _delta_view(db, delta.table, rows).total_tuples
+            for _sign, rows in halves
+        )
+        device = n_view >= device_min_rows()
+
+    parts = []
+    for sign, rows in halves:
+        view = _delta_view(db, delta.table, rows)
+        if device:
+            ct = device_sparse_contingency_table(
+                view, rvs, fovar_universe=fovar_universe, shards=shards,
+                touched_rel=delta.table, msg_cache=msg_cache,
+            )
+        else:
+            ct = sparse_contingency_table(
+                view, rvs, fovar_universe=fovar_universe,
+                touched_rel=delta.table, msg_cache=msg_cache,
+            )
+        parts.append((sign, ct))
+
+    if len(parts) == 1:
+        sign, ct = parts[0]
+        if sign > 0:
+            return ct
+        if isinstance(ct, SparseCT):
+            return SparseCT(ct.rvs, ct.cards, ct.codes, -ct.counts)
+        return DeviceSparseCT(ct.rvs, ct.cards, ct.codes, _sp_neg(ct.counts))
+    ins, dele = parts[0][1], parts[1][1]
+    if isinstance(ins, SparseCT):
+        return _sparse_sub(ins, dele)
+    return _dev_sparse_sub(ins, dele)
+
+
+def apply_ct_delta(live, delta_ct):
+    """Merge a signed ΔCT into a live table: concat + ONE signed aggregate.
+
+    The incremental twin of :func:`_merge_shard_partials` (same linearity
+    argument, same float64-accumulate/one-rounding numerics): the merged
+    table is bit-identical in canonical host form to a from-scratch build
+    of the post-delta database.  Residency follows ``live``; a host delta
+    merging into a device table ships across in one h2d copy.  Cells the
+    delta cancels exactly become zero-count entries — absent by contract on
+    the device twin (``to_host()`` drops them), dropped eagerly on host.
+    """
+    if isinstance(live, SparseCT):
+        dh = delta_ct.to_host() if isinstance(delta_ct, DeviceSparseCT) else delta_ct
+        dh = dh.transpose(live.rvs)
+        assert dh.cards == live.cards, (dh.cards, live.cards)
+        codes, counts = aggregate_codes(
+            np.concatenate([live.codes, dh.codes]),
+            np.concatenate([live.counts, dh.counts]),
+        )
+        return SparseCT(live.rvs, live.cards, codes, counts)
+    if isinstance(delta_ct, SparseCT):
+        dh = delta_ct if delta_ct.rvs == live.rvs else delta_ct.transpose(live.rvs)
+        # Rung-pad the host delta before the h2d copy: the merge aggregation
+        # compiles per concat shape, so shipping the exact (and
+        # delta-dependent) nnz would recompile on every apply — padded to a
+        # ladder rung, every delta in the rung reuses one program.
+        n = int(dh.codes.shape[0])
+        n_pad = bucketing.bucket_rows(n)
+        codes = np.full(n_pad, _PAD_CODE, np.int64)
+        counts = np.zeros(n_pad, np.float32)
+        codes[:n] = dh.codes
+        counts[:n] = dh.counts
+        with enable_x64():
+            dd = DeviceSparseCT(
+                dh.rvs, dh.cards, ops.to_device(codes), ops.to_device(counts)
+            )
+    else:
+        dd = delta_ct
+        if dd.rvs != live.rvs:
+            dd = dd.transpose(live.rvs)
+    return _merge_shard_partials([live, dd])
 
 
 # ---------------------------------------------------------------------------

@@ -48,6 +48,7 @@ __all__ = [
     "LearnAndJoinResult",
     "hill_climb",
     "learn_and_join",
+    "warm_hill_climb",
 ]
 
 
@@ -258,6 +259,37 @@ def hill_climb(
     if mgr is not None:
         n_scored = mgr.n_scored_families - mgr_scored0
     return HillClimbResult(bn, cur_score, n_scored, time.perf_counter() - t0, n_sweeps)
+
+
+def warm_hill_climb(
+    prev: BayesNet,
+    counts_of: Callable[[tuple[str, ...]], CTLike],
+    *,
+    score: str = "aic",
+    alpha: float = 0.0,
+    max_parents: int = 3,
+    constraints: SearchConstraints | None = None,
+    n_groundings: float | None = None,
+    impl: str = "auto",
+    batch: bool = True,
+) -> HillClimbResult:
+    """Re-search after a delta: restart hill-climb from the previous graph.
+
+    The incremental-maintenance companion of :meth:`~repro.core.
+    score_manager.ScoreManager.apply_delta`: pass the manager whose memo the
+    dirty-set refresh just pruned and the previously learned network.  A
+    small delta leaves the score landscape almost unchanged, so the climb
+    starting at ``prev`` (instead of the empty graph) re-scores only the
+    dirty families plus the moves around them and typically converges in a
+    sweep or two — the greedy walk itself is unchanged, so if the optimum
+    moved, the search still follows the score gradient to the new one.
+    Equivalent to ``hill_climb(prev.rvs, ..., init=prev)``.
+    """
+    return hill_climb(
+        tuple(prev.rvs), counts_of, score=score, alpha=alpha,
+        max_parents=max_parents, constraints=constraints,
+        n_groundings=n_groundings, impl=impl, init=prev, batch=batch,
+    )
 
 
 # ---------------------------------------------------------------------------

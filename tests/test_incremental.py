@@ -1,0 +1,448 @@
+"""Incremental CT maintenance: signed O(Δ) delta propagation.
+
+Pins the tentpole contracts of the live-database path:
+
+  * ``database.apply_delta`` is functional (frozen inputs untouched), emits
+    a signed per-table delta stream, and fail-louds on every malformed spec;
+  * ``sparse_ct_delta`` + ``apply_ct_delta`` reproduce a from-scratch
+    rebuild **bit-identically** (codes AND float32 counts in canonical host
+    form) on both residencies, including host-delta-into-device-live merges
+    and net-zero insert/delete interleavings;
+  * the count/score managers evict exactly the dirty-set entries — families
+    disjoint from the touched relationship keep serving from the memo, and
+    every re-scored family matches a cold manager bitwise;
+  * ``warm_hill_climb`` restarted from the previous graph lands on the cold
+    search's model;
+  * a warm delta apply (seen shape, settled live rung) compiles **zero**
+    XLA programs — delta streams ride the bucket ladder.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.counts import joint_contingency_table
+from repro.core.database import apply_delta, university_db
+from repro.core.score_manager import (
+    CountCache,
+    ScoreManager,
+    incremental_enabled,
+)
+from repro.core.sparse_counts import (
+    DeviceSparseCT,
+    LeafMessageCache,
+    SparseCT,
+    apply_ct_delta,
+    as_host,
+    msg_cache_cap,
+    sparse_ct_delta,
+)
+from repro.core.structure import hill_climb, warm_hill_climb
+from repro.kernels import bucketing
+
+from .bruteforce import brute_force_ct, random_db
+
+
+def _all_rvs(db):
+    return tuple(v.vid for v in db.catalog.par_rvs)
+
+
+def _assert_identical(a, b):
+    ha, hb = as_host(a), as_host(b)
+    assert ha.rvs == hb.rvs and ha.cards == hb.cards
+    np.testing.assert_array_equal(ha.codes, hb.codes)
+    np.testing.assert_array_equal(ha.counts, hb.counts)  # bitwise, not close
+
+
+def _random_inserts(db, table, size, rng):
+    decl = next(d for d in db.schema.relationships if d.name == table)
+    n1 = db.entities[decl.entities[0]].n_rows
+    n2 = db.entities[decl.entities[1]].n_rows
+    return {
+        "fk1": rng.integers(0, n1, size=size, dtype=np.int32),
+        "fk2": rng.integers(0, n2, size=size, dtype=np.int32),
+        "attrs": {
+            attr: rng.integers(1, len(dom) + 1, size=size, dtype=np.int32)
+            for attr, dom in decl.attributes
+        },
+    }
+
+
+def _absent_pair_inserts(db, table, size, rng):
+    """Valid inserts: pairs with no surviving row (the apply_delta
+    precondition — each pair grounds the relationship at most once)."""
+    decl = next(d for d in db.schema.relationships if d.name == table)
+    rel = db.relationships[table]
+    n1 = db.entities[decl.entities[0]].n_rows
+    n2 = db.entities[decl.entities[1]].n_rows
+    taken = set(zip(np.asarray(rel.fk1).tolist(), np.asarray(rel.fk2).tolist()))
+    free = [(i, j) for i in range(n1) for j in range(n2) if (i, j) not in taken]
+    rng.shuffle(free)
+    picks = free[:size]
+    return {
+        "fk1": [p[0] for p in picks],
+        "fk2": [p[1] for p in picks],
+        "attrs": {
+            attr: rng.integers(1, len(dom) + 1, size=len(picks)).tolist()
+            for attr, dom in decl.attributes
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# database.apply_delta: the mutation API
+# ---------------------------------------------------------------------------
+
+
+def test_apply_delta_is_functional():
+    db = random_db(0)
+    n0 = db.relationships["R"].n_rows
+    ins = {"fk1": [0], "fk2": [1], "attrs": {"ra": [2]}}
+    new_db, delta = apply_delta(db, "R", ins, deleted_rows=[0])
+    # the input instance is untouched; the new one reflects the delta
+    assert db.relationships["R"].n_rows == n0
+    assert new_db.relationships["R"].n_rows == n0  # -1 +1
+    assert delta.table == "R"
+    assert delta.inserted.n_rows == 1 and delta.deleted.n_rows == 1
+    assert delta.n_rows == 2
+    # the deleted half carries the removed row's *contents*
+    np.testing.assert_array_equal(
+        np.asarray(delta.deleted.fk1), np.asarray(db.relationships["R"].fk1)[:1]
+    )
+    new_db.validate()
+
+
+def test_apply_delta_validation_errors():
+    db = random_db(1)
+    with pytest.raises(NotImplementedError):  # entity deltas touch every CT
+        apply_delta(db, "alpha", {"fk1": [], "fk2": [], "attrs": {}})
+    with pytest.raises(KeyError):
+        apply_delta(db, "nope", {"fk1": [0], "fk2": [0], "attrs": {"ra": [1]}})
+    with pytest.raises(ValueError):  # attr code 0 is the n/a sentinel
+        apply_delta(db, "R", {"fk1": [0], "fk2": [0], "attrs": {"ra": [0]}})
+    with pytest.raises(ValueError):  # fk out of the entity population
+        apply_delta(db, "R", {"fk1": [99], "fk2": [0], "attrs": {"ra": [1]}})
+    with pytest.raises(ValueError):  # unknown attr
+        apply_delta(
+            db, "R", {"fk1": [0], "fk2": [0], "attrs": {"ra": [1], "zz": [1]}}
+        )
+    with pytest.raises(ValueError):  # ragged spec
+        apply_delta(db, "R", {"fk1": [0, 1], "fk2": [0], "attrs": {"ra": [1]}})
+    with pytest.raises(IndexError):  # deleted index past the table
+        apply_delta(db, "R", deleted_rows=[db.relationships["R"].n_rows])
+    with pytest.raises(ValueError):  # duplicate deleted indices
+        apply_delta(db, "R", deleted_rows=[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Signed ΔCT propagation: bit-identical to a from-scratch rebuild
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 3, 7])
+def test_host_delta_matches_rebuild(seed):
+    db = random_db(seed)
+    joint = joint_contingency_table(db, impl="sparse")
+    assert isinstance(joint, SparseCT)
+    rng = np.random.default_rng(seed)
+    new_db, delta = apply_delta(
+        db, "R", _random_inserts(db, "R", 2, rng), deleted_rows=[0]
+    )
+    dct = sparse_ct_delta(new_db, delta, joint.rvs, device=False)
+    merged = apply_ct_delta(joint, dct)
+    assert isinstance(merged, SparseCT)
+    _assert_identical(merged, joint_contingency_table(new_db, impl="sparse"))
+
+
+@pytest.mark.parametrize("seed", [2, 5])
+def test_device_delta_matches_rebuild(seed):
+    db = random_db(seed)
+    live = joint_contingency_table(db, impl="sparse", device_resident=True)
+    assert isinstance(live, DeviceSparseCT)
+    rng = np.random.default_rng(seed)
+    new_db, delta = apply_delta(
+        db, "R", _random_inserts(db, "R", 3, rng), deleted_rows=[1]
+    )
+    dct = sparse_ct_delta(new_db, delta, live.rvs, device=True)
+    merged = apply_ct_delta(live, dct)
+    assert isinstance(merged, DeviceSparseCT)
+    oracle = joint_contingency_table(new_db, impl="sparse")
+    _assert_identical(merged, oracle)
+
+
+def test_host_delta_merges_into_device_live():
+    db = random_db(4)
+    live = joint_contingency_table(db, impl="sparse", device_resident=True)
+    rng = np.random.default_rng(4)
+    new_db, delta = apply_delta(db, "R", _random_inserts(db, "R", 2, rng))
+    # host-built delta (the small-Δ fast path) into a device-resident live
+    # table: one rung-padded h2d + one signed aggregate
+    dct = sparse_ct_delta(new_db, delta, live.rvs, device=False)
+    assert isinstance(dct, SparseCT)
+    merged = apply_ct_delta(live, dct)
+    assert isinstance(merged, DeviceSparseCT)
+    _assert_identical(merged, joint_contingency_table(new_db, impl="sparse"))
+
+
+def test_chained_deltas_match_rebuild():
+    db = random_db(6)
+    joint = joint_contingency_table(db, impl="sparse")
+    rng = np.random.default_rng(6)
+    for step in range(3):
+        n = db.relationships["R"].n_rows
+        dele = [int(rng.integers(0, n))] if n else None
+        db, delta = apply_delta(
+            db, "R", _random_inserts(db, "R", 2, rng), deleted_rows=dele
+        )
+        joint = apply_ct_delta(
+            joint, sparse_ct_delta(db, delta, joint.rvs, device=False)
+        )
+    _assert_identical(joint, joint_contingency_table(db, impl="sparse"))
+
+
+@pytest.mark.parametrize("seed", [1, 4])
+def test_delta_maintained_joint_matches_bruteforce_oracle(seed):
+    """Ground truth, not just rebuild-identity: chained *valid* deltas
+    (absent pairs only) land exactly on ``brute_force_ct`` of the final db."""
+    db = random_db(seed)
+    mgr = ScoreManager(db, mode="sparse")
+    rvs = _all_rvs(db)
+    rng = np.random.default_rng(seed + 100)
+    for _ in range(3):
+        n = mgr.db.relationships["R"].n_rows
+        mgr.apply_delta(
+            "R",
+            inserted_rows=_absent_pair_inserts(mgr.db, "R", 2, rng),
+            deleted_rows=[int(rng.integers(0, n))],
+        )
+    oracle = brute_force_ct(mgr.db, rvs).astype(np.float64)
+    h = as_host(mgr.joint).transpose(rvs)
+    dense = np.zeros(int(np.prod(h.cards)))
+    dense[h.codes] = h.counts
+    np.testing.assert_array_equal(oracle, dense.reshape(tuple(h.cards)))
+
+
+def test_delta_disjoint_from_query_is_empty():
+    """Axes that never join the touched table: ΔCT ≡ 0 with no contraction."""
+    db = random_db(8)
+    rvs = ("a1(alpha0)", "b1(beta0)")  # entity attrs only — R marginalized out
+    rng = np.random.default_rng(8)
+    new_db, delta = apply_delta(db, "R", _random_inserts(db, "R", 2, rng))
+    dct = sparse_ct_delta(new_db, delta, rvs, device=False)
+    assert isinstance(dct, SparseCT) and dct.codes.shape == (0,)
+    dev = sparse_ct_delta(new_db, delta, rvs, device=True)
+    assert isinstance(dev, DeviceSparseCT) and dev.codes.shape == (0,)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100), k=st.integers(1, 3))
+def test_net_zero_interleaving_is_identity(seed, k):
+    """Insert k rows, then delete exactly those rows: CT bit-identical.
+
+    The signed merge must cancel the two halves exactly — zero-count cells
+    are dropped in canonical host form, so codes AND counts return to the
+    pre-delta table bitwise.
+    """
+    db = random_db(seed % 10)
+    joint0 = joint_contingency_table(db, impl="sparse")
+    rng = np.random.default_rng(seed)
+    n0 = db.relationships["R"].n_rows
+    ins = _random_inserts(db, "R", k, rng)
+    db1, d1 = apply_delta(db, "R", ins)
+    joint1 = apply_ct_delta(
+        joint0, sparse_ct_delta(db1, d1, joint0.rvs, device=False)
+    )
+    # inserted rows land appended at the tail: delete those exact indices
+    db2, d2 = apply_delta(db1, "R", deleted_rows=list(range(n0, n0 + k)))
+    joint2 = apply_ct_delta(
+        joint1, sparse_ct_delta(db2, d2, joint0.rvs, device=False)
+    )
+    _assert_identical(joint2, joint0)
+
+
+def test_net_zero_single_call_is_identity():
+    """One call deleting a row and re-inserting its contents: identity."""
+    db = random_db(9)
+    joint0 = joint_contingency_table(db, impl="sparse")
+    rel = db.relationships["R"]
+    ins = {
+        "fk1": np.asarray(rel.fk1)[:1],
+        "fk2": np.asarray(rel.fk2)[:1],
+        "attrs": {a: np.asarray(c)[:1] for a, c in rel.attrs.items()},
+    }
+    new_db, delta = apply_delta(db, "R", ins, deleted_rows=[0])
+    merged = apply_ct_delta(
+        joint0, sparse_ct_delta(new_db, delta, joint0.rvs, device=False)
+    )
+    _assert_identical(merged, joint0)
+
+
+# ---------------------------------------------------------------------------
+# Manager layer: dirty-set eviction, incremental joint, warm re-search
+# ---------------------------------------------------------------------------
+
+
+def test_count_cache_dirty_set_eviction_and_incremental_joint():
+    db = random_db(10)
+    cache = CountCache(db, mode="sparse")
+    clean_key = tuple(sorted(("a1(alpha0)", "b1(beta0)")))
+    dirty_key = tuple(sorted(("a1(alpha0)", "ra(alpha0,beta0)")))
+    cache(clean_key)
+    cache(dirty_key)
+    assert clean_key in cache._memo and dirty_key in cache._memo
+    n_mat = cache.n_materializations
+
+    rng = np.random.default_rng(10)
+    stats = cache.apply_delta(db.relationships["R"].name,
+                              _random_inserts(db, "R", 2, rng))
+    assert stats["incremental"] is True
+    assert cache.n_delta_applies == 1
+    # disjoint marginal survives; anything touching R's vars is evicted
+    assert clean_key in cache._memo
+    assert dirty_key not in cache._memo
+    # incremental maintenance, not a rebuild
+    assert cache.n_materializations == n_mat
+    _assert_identical(
+        cache.joint, joint_contingency_table(cache.db, impl="sparse")
+    )
+    # the preserved marginal still serves the correct (unchanged) counts
+    _assert_identical(cache(clean_key), cache.joint.marginal(clean_key))
+
+
+def test_incremental_disabled_rebuilds(monkeypatch):
+    monkeypatch.setenv("REPRO_INCREMENTAL", "0")
+    assert incremental_enabled() is False
+    db = random_db(11)
+    cache = CountCache(db, mode="sparse")
+    n_mat = cache.n_materializations
+    rng = np.random.default_rng(11)
+    stats = cache.apply_delta("R", _random_inserts(db, "R", 1, rng))
+    assert stats["incremental"] is False
+    assert cache.n_materializations == n_mat + 1  # full rebuild
+    _assert_identical(
+        cache.joint, joint_contingency_table(cache.db, impl="sparse")
+    )
+
+
+def test_incremental_env_knob_fails_loud(monkeypatch):
+    monkeypatch.setenv("REPRO_INCREMENTAL", "maybe")
+    with pytest.raises(ValueError, match="REPRO_INCREMENTAL"):
+        incremental_enabled()
+
+
+def test_score_manager_dirty_refresh_matches_cold():
+    db = university_db()
+    rvs = _all_rvs(db)
+    mgr = ScoreManager(db, mode="sparse")
+    prev = hill_climb(rvs, mgr, score="aic", max_parents=2)
+    assert mgr._score_memo
+
+    rel = db.relationships["RA"]
+    ins = {
+        "fk1": [0], "fk2": [0],
+        "attrs": {a: [1] for a in rel.attrs},
+    }
+    stats = mgr.apply_delta("RA", ins)
+    # a single-table delta must leave provably-unaffected families served
+    assert stats["n_preserved_families"] > 0
+    assert stats["n_dirty_families"] > 0
+    assert mgr.n_preserved_families == stats["n_preserved_families"]
+
+    cold = ScoreManager(mgr.db, mode="sparse")
+    res_warm = warm_hill_climb(prev.bn, mgr, score="aic", max_parents=2)
+    res_cold = hill_climb(rvs, cold, score="aic", max_parents=2)
+    # same model; the *accumulated* search totals may differ in the last
+    # f64 ulp (different move paths), so compare structure + family scores
+    assert res_warm.bn.edges() == res_cold.bn.edges()
+    assert res_warm.n_sweeps <= res_cold.n_sweeps
+    for key, fs in mgr._score_memo.items():
+        if key in cold._score_memo:
+            cfs = cold._score_memo[key]
+            assert (fs.loglik, fs.n_params) == (cfs.loglik, cfs.n_params), key
+    # the maintained joint equals the cold manager's rebuilt joint
+    _assert_identical(mgr.joint, cold.joint)
+
+
+# ---------------------------------------------------------------------------
+# Compile discipline: warm delta applies ride the bucket ladder
+# ---------------------------------------------------------------------------
+
+
+def test_warm_delta_apply_compiles_nothing():
+    if not bucketing.compile_probe_active():
+        pytest.skip("no backend compile listener on this JAX")
+    db = university_db()
+    mgr = CountCache(db, mode="sparse", device_resident=True)
+    rng = np.random.default_rng(12)
+    table = "RA"
+    # cold apply compiles delta rungs; the second may still see a new merge
+    # shape if the first grew the live joint across a ladder rung
+    mgr.apply_delta(table, _random_inserts(mgr.db, table, 1, rng))
+    mgr.apply_delta(table, _random_inserts(mgr.db, table, 1, rng))
+    bucketing.reset_compile_counts()
+    stats = mgr.apply_delta(table, _random_inserts(mgr.db, table, 1, rng))
+    assert stats["incremental"] is True
+    assert bucketing.compile_counts()["compiles"] == 0
+    _assert_identical(
+        mgr.joint, joint_contingency_table(mgr.db, impl="sparse")
+    )
+
+
+# ---------------------------------------------------------------------------
+# Leaf-message cache
+# ---------------------------------------------------------------------------
+
+
+def test_leaf_message_cache_fifo_and_counters():
+    cache = LeafMessageCache(cap=2)
+    built = []
+
+    def mk(v):
+        return lambda: built.append(v) or v
+
+    assert cache.get("a", mk(1)) == 1
+    assert cache.get("a", mk(99)) == 1  # hit: not rebuilt
+    assert cache.get("b", mk(2)) == 2
+    assert cache.get("c", mk(3)) == 3  # evicts "a" (FIFO at cap=2)
+    assert cache.get("a", mk(4)) == 4  # rebuilt after eviction
+    assert built == [1, 2, 3, 4]
+    assert cache.hits == 1 and cache.misses == 4
+    assert len(cache) == 2
+
+
+def test_leaf_message_cache_cap_zero_disables():
+    cache = LeafMessageCache(cap=0)
+    built = []
+    for _ in range(3):
+        cache.get("k", lambda: built.append(1) or 1)
+    assert built == [1, 1, 1] and len(cache) == 0
+
+
+def test_msg_cache_knob(monkeypatch):
+    monkeypatch.delenv("REPRO_MSG_CACHE", raising=False)
+    assert msg_cache_cap() == 128
+    monkeypatch.setenv("REPRO_MSG_CACHE", "7")
+    assert msg_cache_cap() == 7
+    monkeypatch.setenv("REPRO_MSG_CACHE", "lots")
+    with pytest.raises(ValueError, match="REPRO_MSG_CACHE"):
+        msg_cache_cap()
+    monkeypatch.setenv("REPRO_MSG_CACHE", "-1")
+    with pytest.raises(ValueError, match="REPRO_MSG_CACHE"):
+        msg_cache_cap()
+
+
+def test_message_cache_reused_across_applies():
+    db = random_db(13)
+    cache = CountCache(db, mode="sparse")
+    rng = np.random.default_rng(13)
+    cache.apply_delta("R", _random_inserts(cache.db, "R", 1, rng))
+    assert cache._msg_cache is not None
+    misses0 = cache._msg_cache.misses
+    cache.apply_delta("R", _random_inserts(cache.db, "R", 1, rng))
+    # second apply re-serves every leaf message: entity tables are immutable
+    # across relationship deltas, so only the first apply builds
+    assert cache._msg_cache.misses == misses0
+    assert cache._msg_cache.hits > 0
+    _assert_identical(
+        cache.joint, joint_contingency_table(cache.db, impl="sparse")
+    )

@@ -163,3 +163,89 @@ def test_block_predict(e, c, y):
     out_r = ops.block_predict(jnp.asarray(a), jnp.asarray(l), impl="ref")
     np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(out_r), a @ l, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# O(n) histogram aggregation engine: budget boundary
+# ---------------------------------------------------------------------------
+
+
+def _hist_calls(monkeypatch):
+    """Count engagements of the fused histogram program."""
+    calls = []
+    real = ops._coo_hist_jit
+
+    def probe(codes, weights, num_bins):
+        calls.append(num_bins)
+        return real(codes, weights, num_bins)
+
+    monkeypatch.setattr(ops, "_coo_hist_jit", probe)
+    return calls
+
+
+def test_hist_engine_budget_boundary(monkeypatch):
+    """Bins budget exactly at / one below the code-space rung.
+
+    ``_HIST_BINS_BUDGET`` (the ``REPRO_COO_HIST_BINS`` knob) is read at
+    call time: at exactly the bin rung the O(n) histogram engine engages;
+    one below it the stream falls back to the sort engine.  Both must be
+    bit-identical to the host ``aggregate_codes`` oracle.
+    """
+    from repro.core.sparse_counts import aggregate_codes
+    from repro.kernels import bucketing
+
+    n = 1 << 16  # _HIST_MIN_ROWS: smallest stream the engine accepts
+    num_bins = 300
+    rung = bucketing.bucket_bins(num_bins)
+    rng = np.random.default_rng(42)
+    codes = rng.integers(0, num_bins, n).astype(np.int64)
+    weights = rng.integers(1, 5, n).astype(np.float32)
+    exp_codes, exp_counts = aggregate_codes(codes, weights)
+    calls = _hist_calls(monkeypatch)
+
+    monkeypatch.setattr(ops, "_HIST_BINS_BUDGET", rung)  # exactly at budget
+    u, s, nv = ops.coo_aggregate_counted(
+        jnp.asarray(codes), jnp.asarray(weights), num_bins=num_bins
+    )
+    assert calls == [rung], "histogram engine must engage at the exact budget"
+    assert nv == exp_codes.size
+    np.testing.assert_array_equal(np.asarray(u)[:nv], exp_codes)
+    np.testing.assert_array_equal(np.asarray(s)[:nv], exp_counts)
+
+    calls.clear()
+    monkeypatch.setattr(ops, "_HIST_BINS_BUDGET", rung - 1)  # one below
+    u2, s2, nv2 = ops.coo_aggregate_counted(
+        jnp.asarray(codes), jnp.asarray(weights), num_bins=num_bins
+    )
+    assert calls == [], "over-budget bin rung must take the sort engine"
+    assert nv2 == exp_codes.size
+    np.testing.assert_array_equal(np.asarray(u2)[:nv2], exp_codes)
+    np.testing.assert_array_equal(np.asarray(s2)[:nv2], exp_counts)
+
+
+def test_hist_engine_min_rows_boundary(monkeypatch):
+    """Streams under the min-rows floor take the sort engine, at it the hist.
+
+    The floor tests the *bucketed* length, so the boundary sits between
+    ladder rungs: a stream padding to the rung below ``_HIST_MIN_ROWS``
+    sorts, one padding to the floor itself histograms.  Both results must
+    match the host oracle bitwise.
+    """
+    from repro.core.sparse_counts import aggregate_codes
+
+    num_bins = 300
+    calls = _hist_calls(monkeypatch)
+    rng = np.random.default_rng(7)
+    for n, expect_hist in ((ops._HIST_MIN_ROWS, True),
+                           (ops._HIST_MIN_ROWS // 2, False)):
+        codes = rng.integers(0, num_bins, n).astype(np.int64)
+        weights = np.ones(n, np.float32)
+        exp_codes, exp_counts = aggregate_codes(codes, weights)
+        calls.clear()
+        u, s, nv = ops.coo_aggregate_counted(
+            jnp.asarray(codes), jnp.asarray(weights), num_bins=num_bins
+        )
+        assert bool(calls) is expect_hist, (n, calls)
+        assert nv == exp_codes.size
+        np.testing.assert_array_equal(np.asarray(u)[:nv], exp_codes)
+        np.testing.assert_array_equal(np.asarray(s)[:nv], exp_counts)

@@ -49,12 +49,25 @@ SCALE_METRICS = [
     ("compiles", "compiles (cold build)", True),
 ]
 
+#: Incremental-leg metrics (the ``bench_incremental`` key: O(Δ) signed-delta
+#: maintenance of the device-resident joint vs warm full rebuilds).
+INCREMENTAL_METRICS = [
+    ("delta1_speedup", "delta apply vs rebuild (1 row)", False),
+    ("delta1_apply_ms", "delta apply ms (1 row, warm)", True),
+    ("delta100_apply_ms", "delta apply ms (100 rows, warm)", True),
+    ("delta10000_apply_ms", "delta apply ms (10k rows, warm)", True),
+    ("rebuild_warm_ms", "full rebuild ms (warm)", True),
+    ("delta1_compiles_warm", "compiles (warm 1-row apply)", True),
+    ("n_preserved_families", "score-memo families preserved", False),
+]
+
 #: Wall-clock metrics whose >25% regressions emit ::warning annotations.
 WALL_CLOCK = {
     "sweep_ms_batched",
     "sparse_device_build_ms_warm",
     "sparse_device_seconds",
     "device_build_ms_warm",
+    "delta1_apply_ms",
 }
 WALL_CLOCK_WARN_PCT = 25.0
 
@@ -126,6 +139,9 @@ def diff_tables(base: dict, head: dict) -> tuple[str, list[str]]:
     warnings: list[str] = []
     n = _section(base, head, "datasets", METRICS, lines, warnings)
     n += _section(base, head, "bench_scale", SCALE_METRICS, lines, warnings)
+    n += _section(
+        base, head, "bench_incremental", INCREMENTAL_METRICS, lines, warnings
+    )
     if not n:
         lines.append("_No overlapping datasets between base and head runs._")
         return "\n".join(lines) + "\n", warnings
