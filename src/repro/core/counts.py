@@ -401,6 +401,13 @@ class QueryPlan:
     comp_of: dict[str, int]
     restrict: dict[str, int] = field(default_factory=dict)
     group_fovar: str | None = None
+    #: component indices whose join graph is NOT a tree (parallel
+    #: relationships between one fovar pair, rings, diamonds, dual
+    #: self-relationships).  Leaf elimination cannot contract them; the
+    #: sparse backend routes them to the explicit ground join
+    #: (``sparse_counts._ground_join_component``) and the dense backend
+    #: delegates the whole query to sparse + ``to_dense``.
+    cyclic: frozenset[int] = frozenset()
 
 
 def plan_conditional(
@@ -466,9 +473,11 @@ def plan_conditional(
     # Join graph over first-order variables.
     adj: dict[str, list[tuple[str, str]]] = {f: [] for f in universe}
     for rname in cond_true:
+        # a self-relationship never aliases its two roles: analyze_schema
+        # emits distinct index-0/index-1 fovars (e.g. "a0"/"a1"), so every
+        # edge connects two distinct join-graph nodes
         f1, f2 = (f.fid for f in cat.rel_var_of(rname).fovars)
-        if f1 == f2:
-            raise NotImplementedError("degenerate self-loop relationship")
+        assert f1 != f2, (rname, f1)
         adj[f1].append((rname, f2))
         adj[f2].append((rname, f1))
 
@@ -489,15 +498,17 @@ def plan_conditional(
                     stack.append(h)
         comps.append(tuple(comp))
 
+    # Components with more edges than a spanning tree (parallel
+    # relationships, rings, diamonds, dual self-relationships) cannot be
+    # contracted by leaf elimination; mark them for the ground-join path.
     n_edges_by_comp = [0] * len(comps)
     for rname in cond_true:
         f1 = cat.rel_var_of(rname).fovars[0].fid
         n_edges_by_comp[comp_of[f1]] += 1
-    for ci, comp in enumerate(comps):
-        if n_edges_by_comp[ci] != len(comp) - 1 and n_edges_by_comp[ci] > 0:
-            raise NotImplementedError(
-                f"cyclic join graph in component {list(comp)}; only trees/chains supported"
-            )
+    cyclic = frozenset(
+        ci for ci, comp in enumerate(comps)
+        if n_edges_by_comp[ci] > len(comp) - 1
+    )
 
     return QueryPlan(
         universe=tuple(universe),
@@ -508,6 +519,7 @@ def plan_conditional(
         comp_of=comp_of,
         restrict=restrict,
         group_fovar=group_fovar,
+        cyclic=cyclic,
     )
 
 
@@ -585,6 +597,16 @@ def ct_conditional(
         db, attr_rvs, cond_true, fovar_universe,
         group_fovar=group_fovar, restrict=restrict,
     )
+    if plan.cyclic:
+        # Cyclic join graphs (parallel relationships, rings, diamonds) have
+        # no leaf-elimination order; the sparse backend's ground join is the
+        # one mechanism for them, so delegate and densify (identical cells).
+        from .sparse_counts import sparse_ct_conditional
+
+        return sparse_ct_conditional(
+            db, attr_rvs, cond_true, fovar_universe,
+            group_fovar=group_fovar, restrict=restrict,
+        ).to_dense()
     ent_attrs, rel_attrs = plan.ent_attrs, plan.rel_attrs
     adj, comps, comp_of = plan.adj, plan.comps, plan.comp_of
     restrict = plan.restrict

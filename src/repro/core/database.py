@@ -239,18 +239,23 @@ def from_labels(
     schema: RelationalSchema,
     entity_rows: Mapping[str, Mapping[str, list]],
     relationship_rows: Mapping[str, dict],
+    entity_sizes: Mapping[str, int] | None = None,
 ) -> RelationalDatabase:
     """Build a database from labelled (string-valued) rows.
 
     ``entity_rows[table][attr]`` is a list of labels (one per entity row).
     ``relationship_rows[table]`` is a dict with keys ``fk1``, ``fk2`` (lists of
     row indices) and ``attrs`` (mapping attr -> list of labels).
+    ``entity_sizes[table]`` supplies the population of an entity with no
+    attribute columns (otherwise row counts come from the columns).
     """
     catalog = analyze_schema(schema)
     entities = {}
     for decl in schema.entities:
         cols = entity_rows[decl.name]
-        n = len(next(iter(cols.values()))) if cols else 0
+        n = (entity_sizes or {}).get(decl.name, 0)
+        if cols:
+            n = len(next(iter(cols.values())))
         attrs = {}
         for attr, dom in decl.attributes:
             codes = np.array([dom.index(v) for v in cols[attr]], dtype=np.int32)

@@ -719,6 +719,152 @@ def _contract_join_tree(plan: QueryPlan, cat, cond_true, comp, *,
     return finish(root, state[root])
 
 
+#: Expansion cap for the cyclic-component ground join below: past this many
+#: intermediate tuples the explicit join is genuinely out of scope (the
+#: fail-loud boundary of the schema contract, see docs/ARCHITECTURE.md).
+_GROUND_JOIN_MAX_TUPLES = 1 << 27
+
+
+def _ground_join_component(db, plan: QueryPlan, cond_true, comp):
+    """Contract one *cyclic* component by explicit host natural join.
+
+    Components whose join graph has more edges than a spanning tree —
+    parallel relationships between the same fovar pair, rings, diamonds,
+    two self-relationships over one entity — admit no leaf-elimination
+    order, so this materializes the groundings directly: seed a tuple
+    table from one relationship's rows, then join the remaining component
+    relationships in shared-fovar order (a both-endpoints-bound
+    relationship filters, a one-bound relationship expands and binds the
+    new fovar).  Each surviving tuple is one set of relationship rows
+    jointly grounding the component, so folding the bound entities'
+    attribute codes (plus queried relationship attributes, the §VI group
+    axis and ``restrict`` filters) and aggregating with weight 1 yields
+    exactly the component count vector the tree contraction would.
+
+    Output matches the tree path's component contract: ``(codes, counts,
+    cards, folded)`` with strictly-increasing codes, float64-accumulated
+    float32 counts (bit-identical wherever both paths apply), no zeros.
+    Counts stay multilinear in every relationship's row multiset — the
+    join expands one tuple per matching *row* — so sharded builds and
+    signed delta views factor through it unchanged.
+
+    Cost is the realized grounding count, bounded fail-loud at
+    :data:`_GROUND_JOIN_MAX_TUPLES`; the fuzz corpus keeps populations
+    tiny, and real FactorBase schemas are trees (the paper's lattice walks
+    relationship chains), so this is the correctness backstop, not a hot
+    path.
+    """
+    cat = db.catalog
+    comp_set = set(comp)
+    rels = [
+        r for r in cond_true
+        if cat.rel_var_of(r).fovars[0].fid in comp_set
+    ]
+
+    def rel_fids(r: str) -> set[str]:
+        return {f.fid for f in cat.rel_var_of(r).fovars}
+
+    # Join order: seed with the smallest fact table (delta views pass the
+    # touched relationship's O(Δ) rows, which keeps the whole walk O(Δ)),
+    # then always attach the smallest pending relationship sharing a bound
+    # fovar — every step is a join, never a cross product.
+    ordered = [min(rels, key=lambda r: (db.relationships[r].n_rows, r))]
+    bound_fids = rel_fids(ordered[0])
+    pending = [r for r in rels if r != ordered[0]]
+    while pending:
+        nxt = min(
+            (r for r in pending if rel_fids(r) & bound_fids),
+            key=lambda r: (db.relationships[r].n_rows, r),
+        )
+        ordered.append(nxt)
+        bound_fids |= rel_fids(nxt)
+        pending.remove(nxt)
+
+    first = db.relationships[ordered[0]]
+    g1, g2 = (f.fid for f in cat.rel_var_of(ordered[0]).fovars)
+    bound = {
+        g1: np.asarray(first.fk1, np.int64),
+        g2: np.asarray(first.fk2, np.int64),
+    }
+    # queried relationship-attribute digit columns, one entry per tuple
+    parts: list[tuple[np.ndarray, int, str]] = [
+        (np.asarray(first.attrs[rv.column], np.int64), rv.cardinality, rv.vid)
+        for rv in plan.rel_attrs[ordered[0]]
+    ]
+
+    for rname in ordered[1:]:
+        rel = db.relationships[rname]
+        f1, f2 = (f.fid for f in cat.rel_var_of(rname).fovars)
+        fk1 = np.asarray(rel.fk1, np.int64)
+        fk2 = np.asarray(rel.fk2, np.int64)
+        new_fovar = f2 if f2 not in bound else (f1 if f1 not in bound else None)
+        if new_fovar is None:
+            # both endpoints bound: match on the composite pair key
+            n2 = max(db.entities[cat.fovar(f2).entity].n_rows, 1)
+            keys = fk1 * n2 + fk2
+            probe = bound[f1] * n2 + bound[f2]
+        else:
+            keys = fk1 if new_fovar == f2 else fk2
+            probe = bound[f1 if new_fovar == f2 else f2]
+        order = np.argsort(keys, kind="stable")
+        skeys = keys[order]
+        lo = np.searchsorted(skeys, probe, side="left")
+        hi = np.searchsorted(skeys, probe, side="right")
+        cnt = hi - lo
+        total = int(cnt.sum())
+        if total > _GROUND_JOIN_MAX_TUPLES:
+            raise MemoryError(
+                f"ground join of cyclic component {list(comp)} expands to "
+                f"{total:.3g} tuples at {rname}; this shape is out of scope "
+                "for explicit grounding at this population size"
+            )
+        idx_t = np.repeat(np.arange(probe.size), cnt)
+        starts = np.cumsum(cnt) - cnt
+        within = np.arange(total) - np.repeat(starts, cnt)
+        idx_r = order[np.repeat(lo, cnt) + within]
+
+        bound = {f: a[idx_t] for f, a in bound.items()}
+        parts = [(d[idx_t], c, v) for d, c, v in parts]
+        if new_fovar is not None:
+            bound[new_fovar] = (fk1 if new_fovar == f1 else fk2)[idx_r]
+        parts += [
+            (np.asarray(rel.attrs[rv.column], np.int64)[idx_r],
+             rv.cardinality, rv.vid)
+            for rv in plan.rel_attrs[rname]
+        ]
+
+    # a connected cyclic component has every fovar on some edge, so all
+    # of ``comp`` is bound now
+    assert comp_set <= set(bound), (comp, sorted(bound))
+    for fid, row in plan.restrict.items():
+        if fid in bound:
+            m = bound[fid] == row
+            bound = {f: a[m] for f, a in bound.items()}
+            parts = [(d[m], c, v) for d, c, v in parts]
+
+    fold: list[tuple[np.ndarray, int, str]] = []
+    if plan.group_fovar in bound:
+        fold.append((
+            bound[plan.group_fovar],
+            db.entities[cat.fovar(plan.group_fovar).entity].n_rows,
+            GROUP_AXIS,
+        ))
+    for fid in comp:
+        for rv in plan.ent_attrs[fid]:
+            col = np.asarray(db.entities[rv.table].attrs[rv.column], np.int64)
+            fold.append((col[bound[fid]], rv.cardinality, rv.vid))
+    fold += parts
+
+    cards = [c for _, c, _ in fold]
+    folded = [v for _, _, v in fold]
+    n = bound[comp[0]].size
+    codes = np.zeros(n, np.int64)
+    for (digits, _, _), stride in zip(fold, radix_strides(cards)):
+        codes += digits * stride
+    codes, counts = aggregate_codes(codes, np.ones(n, np.float32))
+    return codes, counts, cards, folded
+
+
 def sparse_ct_conditional(
     db: RelationalDatabase,
     attr_rvs: tuple[str, ...],
@@ -821,6 +967,9 @@ def sparse_ct_conditional(
         return codes, counts, msg.cards, msg.folded
 
     def contract_component(comp: tuple[str, ...]):
+        if plan.comp_of[comp[0]] in plan.cyclic:
+            # no leaf-elimination order exists — ground join instead
+            return _ground_join_component(db, plan, cond_true, comp)
         return _contract_join_tree(
             plan, cat, cond_true, comp,
             initial=initial_message, fold=_fold_all,
@@ -1820,11 +1969,40 @@ def _device_ct_conditional(
     all_folded: list[str] = []
     n_attr_comps = 0
     for comp in plan.comps:
-        c_codes, c_counts, cards, folded = _contract_join_tree(
-            plan, cat, cond_true, comp,
-            initial=initial_message, fold=_dev_fold_all,
-            eliminate=eliminate_leaf, finish=finish_root,
-        )
+        if plan.comp_of[comp[0]] in plan.cyclic:
+            # Cyclic components have no leaf-elimination order: compute the
+            # ground join on host and upload its (tiny, #SS-sized) count
+            # vector into the device cross product.  Bit-identity holds —
+            # the stream is the host builder's own component result — and
+            # sharded builds stay exact because the ground join is run per
+            # shard *view* (each grounding crosses the sliced pivot row
+            # exactly once, so disjoint row slices partition groundings).
+            h_codes, h_counts, cards, folded = _ground_join_component(
+                db, plan, cond_true, comp
+            )
+            if not cards:
+                # scalar multiplier: float64 sum, one float32 rounding —
+                # the same arithmetic as the host path
+                vec_counts = vec_counts * np.float32(
+                    h_counts.sum(dtype=TOTAL_ACC_DTYPE)
+                )
+                continue
+            n_pad = bucketing.bucket_rows(max(h_codes.size, 1))
+            h_codes = np.concatenate(
+                [h_codes, np.full(n_pad - h_codes.size, _PAD_CODE, np.int64)]
+            )
+            h_counts = np.concatenate(
+                [h_counts, np.zeros(n_pad - h_counts.size, np.float32)]
+            )
+            with enable_x64():
+                c_codes = ops.to_device(h_codes)
+            c_counts = ops.to_device(h_counts)
+        else:
+            c_codes, c_counts, cards, folded = _contract_join_tree(
+                plan, cat, cond_true, comp,
+                initial=initial_message, fold=_dev_fold_all,
+                eliminate=eliminate_leaf, finish=finish_root,
+            )
         if not cards:
             # Attribute-less component: a scalar multiplier (its population
             # count), float64-accumulated then rounded like the host path.

@@ -1,0 +1,283 @@
+"""Declarative schema ingestion: dict/JSON table catalogs -> core objects.
+
+FactorBase is driven entirely by schema metadata (paper §III): the schema
+analyzer reads table/FK declarations out of the system catalog and derives
+the par-RV database from them.  This module is the catalog *front door* for
+arbitrary relational schemas — CTU Relational / RelBench-style table lists
+are expressible in the same declarative spec:
+
+    {
+      "tables": {
+        "person":  {"columns": {"age": ["young", "old"]}},
+        "course":  {"columns": {"level": ["100", "200", "300"]}},
+        "advises": {
+            "foreign_keys": {"advisor": "person", "advisee": "person"},
+            "columns": {"strength": ["weak", "strong"]},
+        },
+      }
+    }
+
+A table with no foreign keys is an *entity* table (implicit primary key =
+row index); a table with exactly two foreign keys is a *relationship* table
+(paper footnote 2: relationships are binary — anything else fails loud).
+Self-referencing FK pairs (both keys naming the same entity), parallel
+relationships between the same entity pair, rings, and diamond chains are
+all legal shapes; the planner's handling of them is fuzz-enforced by
+``tests/test_schema_fuzz.py`` (see docs/ARCHITECTURE.md "schema contract").
+
+Optionally each table carries ``rows`` and the same spec ingests a full
+database instance.  ``export_spec`` round-trips a database back into the
+spec form (used by ``tools/shrink_schema.py`` to minimize fuzz failures).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Mapping
+
+import numpy as np
+
+from ..core.database import RelationalDatabase, from_labels
+from ..core.schema import N_A, RelationalSchema, make_schema
+
+
+class SchemaSpecError(ValueError):
+    """A declarative spec failed validation (always names the table/column)."""
+
+
+def _err(msg: str) -> "SchemaSpecError":
+    return SchemaSpecError(msg)
+
+
+def _check_name(name: Any, what: str) -> str:
+    if not isinstance(name, str) or not name.isidentifier():
+        raise _err(f"{what} name {name!r} must be a Python-style identifier "
+                   "(par-RV ids like 'attr(entity0)' must stay unambiguous)")
+    return name
+
+
+def _check_domain(table: str, col: str, dom: Any) -> tuple[str, ...]:
+    if not isinstance(dom, (list, tuple)) or not all(isinstance(v, str) for v in dom):
+        raise _err(f"{table}.{col}: domain must be a list of strings, got {dom!r}")
+    values = tuple(dom)
+    if len(values) < 2:
+        raise _err(f"{table}.{col}: attribute domains need >= 2 values, got {values}")
+    if len(set(values)) != len(values):
+        raise _err(f"{table}.{col}: duplicate domain values in {values}")
+    if N_A in values:
+        raise _err(f"{table}.{col}: do not declare {N_A!r}; it is the implicit "
+                   "code-0 value of relationship attributes")
+    return values
+
+
+def _split_tables(spec: Mapping[str, Any]) -> tuple[dict, dict]:
+    """Validate the spec skeleton and split tables into (entities, rels)."""
+    if not isinstance(spec, Mapping) or "tables" not in spec:
+        raise _err("spec must be a mapping with a 'tables' key")
+    tables = spec["tables"]
+    if not isinstance(tables, Mapping) or not tables:
+        raise _err("'tables' must be a non-empty mapping of table name -> decl")
+    unknown_top = set(spec) - {"tables", "name"}
+    if unknown_top:
+        raise _err(f"unknown top-level keys {sorted(unknown_top)}")
+
+    entities: dict[str, dict] = {}
+    rels: dict[str, dict] = {}
+    for name, decl in tables.items():
+        _check_name(name, "table")
+        if not isinstance(decl, Mapping):
+            raise _err(f"table {name!r}: decl must be a mapping, got {decl!r}")
+        unknown = set(decl) - {"columns", "foreign_keys", "rows", "n_rows"}
+        if unknown:
+            raise _err(f"table {name!r}: unknown keys {sorted(unknown)}")
+        fks = decl.get("foreign_keys", {})
+        if not isinstance(fks, Mapping):
+            raise _err(f"table {name!r}: 'foreign_keys' must be a mapping "
+                       "column -> referenced table")
+        (rels if fks else entities)[name] = dict(decl)
+
+    for name, decl in rels.items():
+        fks = decl["foreign_keys"]
+        if len(fks) != 2:
+            raise _err(
+                f"table {name!r}: relationships are binary (paper footnote 2); "
+                f"expected exactly 2 foreign keys, got {len(fks)} "
+                f"({sorted(fks)})"
+            )
+        for col, ref in fks.items():
+            _check_name(col, f"{name} foreign-key column")
+            if ref in rels:
+                raise _err(f"{name}.{col}: foreign key references relationship "
+                           f"table {ref!r}; FKs must target entity tables")
+            if ref not in entities:
+                raise _err(f"{name}.{col}: foreign key references unknown "
+                           f"table {ref!r}")
+    return entities, rels
+
+
+def _decl_columns(name: str, decl: Mapping[str, Any],
+                  fk_cols: tuple[str, ...] = ()) -> dict[str, tuple[str, ...]]:
+    cols = decl.get("columns", {})
+    if not isinstance(cols, Mapping):
+        raise _err(f"table {name!r}: 'columns' must map column -> domain list")
+    out: dict[str, tuple[str, ...]] = {}
+    for col, dom in cols.items():
+        _check_name(col, f"{name} column")
+        if col in fk_cols:
+            raise _err(f"{name}.{col}: column is declared both as an "
+                       "attribute and a foreign key")
+        out[col] = _check_domain(name, col, dom)
+    return out
+
+
+def ingest_schema(spec: Mapping[str, Any]) -> RelationalSchema:
+    """Walk a declarative table spec into a validated :class:`RelationalSchema`.
+
+    Entity/relationship classification comes from the FK count (0 vs 2);
+    the two FK declarations' order fixes the ``fk1``/``fk2`` role order,
+    which matters for self-relationships (advisor vs advisee).
+    """
+    entities, rels = _split_tables(spec)
+    ent_decls = {
+        name: _decl_columns(name, decl) for name, decl in entities.items()
+    }
+    rel_decls = {}
+    for name, decl in rels.items():
+        fk_cols = tuple(decl["foreign_keys"])
+        refs = tuple(decl["foreign_keys"][c] for c in fk_cols)
+        rel_decls[name] = (refs, _decl_columns(name, decl, fk_cols))
+    return make_schema(entities=ent_decls, relationships=rel_decls)
+
+
+def _column_rows(name: str, col: str, rows: Mapping[str, Any],
+                 dom: tuple[str, ...], n: int | None) -> list[str]:
+    if col not in rows:
+        raise _err(f"{name}: 'rows' is missing column {col!r}")
+    vals = rows[col]
+    if not isinstance(vals, (list, tuple)):
+        raise _err(f"{name}.{col}: rows must be a list, got {vals!r}")
+    if n is not None and len(vals) != n:
+        raise _err(f"{name}.{col}: expected {n} rows, got {len(vals)}")
+    bad = [v for v in vals if v not in dom]
+    if bad:
+        raise _err(f"{name}.{col}: values {bad[:3]!r} not in domain {dom}")
+    return list(vals)
+
+
+def ingest_database(spec: Mapping[str, Any]) -> RelationalDatabase:
+    """Ingest a spec whose tables also carry ``rows`` into a full database.
+
+    Entity rows: ``rows = {attr: [labels...]}`` (plus ``n_rows`` for
+    attribute-less entities).  Relationship rows: ``rows`` maps each FK
+    column to a list of 0-based row indices into the referenced entity and
+    each attribute column to its labels.  ``(fk1, fk2)`` pairs must be
+    unique — duplicate groundings break the Möbius true/false split (see
+    ``database.apply_delta``).
+    """
+    entities, rels = _split_tables(spec)
+    schema = ingest_schema(spec)
+
+    entity_rows: dict[str, dict[str, list]] = {}
+    ent_sizes: dict[str, int] = {}
+    for name, decl in entities.items():
+        rows = decl.get("rows", {})
+        if not isinstance(rows, Mapping):
+            raise _err(f"table {name!r}: 'rows' must be a mapping")
+        edecl = schema.entity(name)
+        n = decl.get("n_rows")
+        cols: dict[str, list] = {}
+        for attr, dom in edecl.attributes:
+            vals = _column_rows(name, attr, rows, dom, n)
+            n = len(vals)
+            cols[attr] = vals
+        if n is None:
+            raise _err(f"table {name!r}: attribute-less entity needs 'n_rows'")
+        unknown = set(rows) - {a for a, _ in edecl.attributes}
+        if unknown:
+            raise _err(f"table {name!r}: rows for undeclared columns "
+                       f"{sorted(unknown)}")
+        entity_rows[name] = cols
+        ent_sizes[name] = int(n)
+
+    rel_rows: dict[str, dict] = {}
+    for name, decl in rels.items():
+        rows = decl.get("rows", {})
+        if not isinstance(rows, Mapping):
+            raise _err(f"table {name!r}: 'rows' must be a mapping")
+        fk_cols = tuple(decl["foreign_keys"])
+        rdecl = schema.relationship(name)
+        fks: list[list[int]] = []
+        n: int | None = None
+        for col, ref in zip(fk_cols, rdecl.entities):
+            if col not in rows:
+                raise _err(f"{name}: 'rows' is missing foreign-key column {col!r}")
+            idx = rows[col]
+            if n is not None and len(idx) != n:
+                raise _err(f"{name}.{col}: expected {n} rows, got {len(idx)}")
+            n = len(idx)
+            cap = ent_sizes[ref]
+            bad = [i for i in idx if not (isinstance(i, int) and 0 <= i < cap)]
+            if bad:
+                raise _err(f"{name}.{col}: foreign keys {bad[:3]!r} out of "
+                           f"range [0, {cap}) for entity {ref!r}")
+            fks.append(list(idx))
+        pairs = list(zip(fks[0], fks[1]))
+        if len(set(pairs)) != len(pairs):
+            raise _err(f"{name}: duplicate (fk1, fk2) groundings; each pair "
+                       "may ground a relationship at most once")
+        attrs = {
+            attr: _column_rows(name, attr, rows, dom, n)
+            for attr, dom in rdecl.attributes
+        }
+        unknown = set(rows) - set(fk_cols) - {a for a, _ in rdecl.attributes}
+        if unknown:
+            raise _err(f"table {name!r}: rows for undeclared columns "
+                       f"{sorted(unknown)}")
+        rel_rows[name] = {"fk1": fks[0], "fk2": fks[1], "attrs": attrs}
+
+    return from_labels(schema, entity_rows, rel_rows, entity_sizes=ent_sizes)
+
+
+def load_spec(path: str) -> dict:
+    """Read a JSON spec file (the on-disk form of the declarative catalog)."""
+    with open(path) as fh:
+        spec = json.load(fh)
+    if not isinstance(spec, dict):
+        raise _err(f"{path}: top-level JSON must be an object")
+    return spec
+
+
+def export_spec(db: RelationalDatabase) -> dict:
+    """Round-trip a database back into the declarative spec (with rows).
+
+    ``ingest_database(export_spec(db))`` reproduces the same schema and the
+    same int-coded tables; the fuzz shrinker leans on this to emit minimal
+    self-contained reproducers.
+    """
+    tables: dict[str, Any] = {}
+    for edecl in db.schema.entities:
+        t = db.entities[edecl.name]
+        rows = {
+            attr: [dom[int(c)] for c in np.asarray(t.attrs[attr])]
+            for attr, dom in edecl.attributes
+        }
+        decl: dict[str, Any] = {
+            "columns": {a: list(dom) for a, dom in edecl.attributes},
+        }
+        decl["rows" if rows else "n_rows"] = rows if rows else t.n_rows
+        tables[edecl.name] = decl
+    for rdecl in db.schema.relationships:
+        t = db.relationships[rdecl.name]
+        rows: dict[str, Any] = {
+            "fk1": [int(i) for i in np.asarray(t.fk1)],
+            "fk2": [int(i) for i in np.asarray(t.fk2)],
+        }
+        for attr, dom in rdecl.attributes:
+            # stored codes are in the n/a-augmented domain (>= 1)
+            rows[attr] = [dom[int(c) - 1] for c in np.asarray(t.attrs[attr])]
+        tables[rdecl.name] = {
+            "foreign_keys": {"fk1": rdecl.entities[0], "fk2": rdecl.entities[1]},
+            "columns": {a: list(dom) for a, dom in rdecl.attributes},
+            "rows": rows,
+        }
+    return {"tables": tables}

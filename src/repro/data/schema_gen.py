@@ -1,0 +1,168 @@
+"""Seeded random relational-schema + database generator (the fuzz corpus).
+
+The planner stack (``plan_conditional`` -> join-tree contraction -> Möbius
+virtual join) must hold for *any* legal schema, not just the hand-written
+benchmarks.  :class:`SchemaSpec` parametrizes a family of adversarial
+shapes — self-referencing FKs, parallel relationships between the same
+entity pair, entity chains that close into rings — and ``generate_database``
+deterministically materializes (schema, populated instance) from
+``(spec, seed)``.  Populations are kept tiny so ``tests/bruteforce.py`` can
+enumerate every grounding: the differential oracles in
+``tests/test_schema_fuzz.py`` compare brute force vs host vs device vs
+sharded vs incremental on each draw.
+
+Everything is reproducible from ``(spec, seed)`` alone; a failing draw is
+replayed and minimized with ``tools/shrink_schema.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.database import EntityTable, RelationalDatabase, RelationshipTable
+from ..core.schema import RelationalSchema, analyze_schema, make_schema
+
+
+@dataclass(frozen=True)
+class SchemaSpec:
+    """Knobs for one random-schema family.  ``repr`` is the bug-report key."""
+
+    n_entities: int = 2
+    n_relationships: int = 2
+    # per-relationship shape probabilities (checked in this order)
+    self_ref_prob: float = 0.25       # rel over (e, e): two first-order vars
+    parallel_prob: float = 0.25       # duplicate an earlier rel's entity pair
+    chain_prob: float = 0.5           # walk e_k -> e_{k+1 mod n} (rings close
+    #                                   when the walk wraps past the last entity)
+    max_entity_attrs: int = 2         # 1..max attrs per entity
+    max_rel_attrs: int = 1            # 0..max attrs per relationship
+    min_domain: int = 2
+    max_domain: int = 3
+    min_rows: int = 1                 # entity population bounds
+    max_rows: int = 4
+    max_rel_rows: int = 5             # 0..max relationship groundings
+    allow_self_pairs: bool = True     # permit (i, i) groundings in self-rels
+
+    def __post_init__(self) -> None:
+        if self.n_entities < 1 or self.n_relationships < 0:
+            raise ValueError(f"degenerate spec: {self!r}")
+        if not (2 <= self.min_domain <= self.max_domain):
+            raise ValueError(f"domains need >= 2 values: {self!r}")
+        if not (1 <= self.min_rows <= self.max_rows):
+            raise ValueError(f"entity populations must be non-empty: {self!r}")
+
+
+def _domains(rng: np.random.Generator, spec: SchemaSpec, n: int):
+    sizes = rng.integers(spec.min_domain, spec.max_domain + 1, size=max(n, 1))
+    return [tuple(str(v) for v in range(int(s))) for s in sizes[:n]]
+
+
+def generate_schema(spec: SchemaSpec, seed: int) -> RelationalSchema:
+    """Deterministically draw one schema from the ``(spec, seed)`` family."""
+    rng = np.random.default_rng(seed)
+    entities = {}
+    for i in range(spec.n_entities):
+        n_attrs = int(rng.integers(1, spec.max_entity_attrs + 1))
+        doms = _domains(rng, spec, n_attrs)
+        entities[f"e{i}"] = {f"a{i}_{j}": doms[j] for j in range(n_attrs)}
+
+    rel_pairs: list[tuple[str, str]] = []
+    relationships = {}
+    for k in range(spec.n_relationships):
+        u = rng.random()
+        if u < spec.self_ref_prob:
+            e = f"e{int(rng.integers(spec.n_entities))}"
+            pair = (e, e)
+        elif u < spec.self_ref_prob + spec.parallel_prob and rel_pairs:
+            pair = rel_pairs[int(rng.integers(len(rel_pairs)))]
+        elif rng.random() < spec.chain_prob and spec.n_entities > 1:
+            # chain edge e_k -> e_{k+1}; wrapping past the end closes a ring
+            i = k % spec.n_entities
+            pair = (f"e{i}", f"e{(i + 1) % spec.n_entities}")
+        else:
+            i, j = rng.integers(spec.n_entities, size=2)
+            pair = (f"e{int(i)}", f"e{int(j)}")
+        rel_pairs.append(pair)
+        n_attrs = int(rng.integers(0, spec.max_rel_attrs + 1))
+        doms = _domains(rng, spec, n_attrs)
+        relationships[f"r{k}"] = (pair, {f"w{k}_{j}": doms[j] for j in range(n_attrs)})
+
+    return make_schema(entities=entities, relationships=relationships)
+
+
+def generate_database(spec: SchemaSpec, seed: int) -> RelationalDatabase:
+    """Draw a schema *and* a populated instance (int codes directly)."""
+    schema = generate_schema(spec, seed)
+    rng = np.random.default_rng(seed + 1)  # decouple rows from schema draw
+    catalog = analyze_schema(schema)
+
+    entities = {}
+    for edecl in schema.entities:
+        n = int(rng.integers(spec.min_rows, spec.max_rows + 1))
+        attrs = {
+            attr: jnp.asarray(
+                rng.integers(0, len(dom), size=n).astype(np.int32))
+            for attr, dom in edecl.attributes
+        }
+        entities[edecl.name] = EntityTable(edecl.name, n, attrs)
+
+    relationships = {}
+    for rdecl in schema.relationships:
+        n1 = entities[rdecl.entities[0]].n_rows
+        n2 = entities[rdecl.entities[1]].n_rows
+        # enumerate the legal pair universe, then sample without replacement
+        # so (fk1, fk2) pairs stay unique (the Möbius split's invariant)
+        flat = np.arange(n1 * n2, dtype=np.int64)
+        if rdecl.is_self and not spec.allow_self_pairs:
+            flat = flat[flat // n2 != flat % n2]
+        m = int(rng.integers(0, min(spec.max_rel_rows, flat.size) + 1))
+        take = np.sort(rng.permutation(flat)[:m])
+        fk1 = (take // n2).astype(np.int32)
+        fk2 = (take % n2).astype(np.int32)
+        attrs = {
+            attr: jnp.asarray(
+                rng.integers(1, len(dom) + 1, size=m).astype(np.int32))
+            for attr, dom in rdecl.attributes
+        }
+        relationships[rdecl.name] = RelationshipTable(
+            rdecl.name, m, jnp.asarray(fk1), jnp.asarray(fk2), attrs
+        )
+
+    db = RelationalDatabase(schema, catalog, entities, relationships)
+    db.validate()
+    return db
+
+
+# Named corners of the shape space — the sweep cycles through these so every
+# run covers self-refs, parallel edges, and rings regardless of base seed.
+SPEC_CORPUS: tuple[SchemaSpec, ...] = (
+    SchemaSpec(),                                             # mixed default
+    SchemaSpec(n_entities=1, n_relationships=2,
+               self_ref_prob=1.0, parallel_prob=0.0),         # dual self-refs
+    SchemaSpec(n_entities=2, n_relationships=3,
+               self_ref_prob=0.0, parallel_prob=1.0),         # parallel edges
+    SchemaSpec(n_entities=3, n_relationships=3, self_ref_prob=0.0,
+               parallel_prob=0.0, chain_prob=1.0),            # 3-ring
+    SchemaSpec(n_entities=4, n_relationships=4, self_ref_prob=0.0,
+               parallel_prob=0.3, chain_prob=1.0),            # ring + diamond
+    SchemaSpec(n_entities=3, n_relationships=4, self_ref_prob=0.4,
+               parallel_prob=0.3, allow_self_pairs=False),    # loop-free self
+)
+
+
+def corpus_case(i: int, base_seed: int) -> tuple[SchemaSpec, int]:
+    """The ``i``-th case of a sweep: cycle corpus specs, advance the seed."""
+    spec = SPEC_CORPUS[i % len(SPEC_CORPUS)]
+    return spec, base_seed + i
+
+
+__all__ = [
+    "SchemaSpec",
+    "SPEC_CORPUS",
+    "corpus_case",
+    "generate_database",
+    "generate_schema",
+]

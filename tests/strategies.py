@@ -1,0 +1,131 @@
+"""Shared fuzz strategies + random-fixture helpers for the test suite.
+
+Two consumption modes, both supported by every export here:
+
+  * **Strategies** (``schema_specs``, ``fuzz_seeds``) compose only the
+    primitive API surface that ``tests/_hypothesis_compat.py`` shims
+    (``sampled_from`` / ``integers``), so ``@given`` tests behave the same
+    whether the real ``hypothesis`` package is installed (the
+    ``tier1-hypothesis`` CI job) or the fixed-seed fallback is active.
+  * **Plain helpers** (``fuzz_db``, ``rv_subset``, ``chain_db``,
+    ``random_rel_inserts``, ``absent_pair_inserts``) materialize databases,
+    RV subsets, and delta specs deterministically from scalars a strategy
+    drew — strategies hand around ``(spec, seed)``, never live objects, so
+    failing draws stay printable and replayable
+    (``tools/shrink_schema.py``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import strategies as st
+
+from repro.core.database import RelationalDatabase, from_labels
+from repro.core.schema import make_schema
+from repro.data.schema_gen import SPEC_CORPUS, SchemaSpec, generate_database
+
+
+def schema_specs() -> "st.SearchStrategy | object":
+    """Strategy over the named corners of the schema shape space."""
+    return st.sampled_from(SPEC_CORPUS)
+
+
+def fuzz_seeds(max_seed: int = 10_000):
+    """Strategy over generator seeds (pair with :func:`schema_specs`)."""
+    return st.integers(0, max_seed)
+
+
+def fuzz_db(spec: SchemaSpec, seed: int) -> RelationalDatabase:
+    """Materialize one generated database from a drawn ``(spec, seed)``."""
+    return generate_database(spec, seed)
+
+
+def rv_subset(db: RelationalDatabase, seed: int, k: int = 3) -> tuple[str, ...]:
+    """A deterministic size-``<=k`` subset of the catalog's par-RVs."""
+    rng = np.random.default_rng(seed)
+    vids = [v.vid for v in db.catalog.par_rvs]
+    k = min(k, len(vids))
+    return tuple(vids[i] for i in sorted(rng.permutation(len(vids))[:k]))
+
+
+def chain_db(depth: int = 2, card: int = 3, n_rows: int = 7,
+             seed: int = 0) -> RelationalDatabase:
+    """Entities e0..e<depth> linked by a chain of relationships (with one
+    relationship attribute each) — the multi-relationship Möbius workload."""
+    rng = np.random.default_rng(seed)
+    dom = tuple(str(i) for i in range(card))
+    schema = make_schema(
+        entities={f"e{k}": {f"a{k}": dom} for k in range(depth + 1)},
+        relationships={
+            f"r{k}": ((f"e{k}", f"e{k + 1}"), {f"w{k}": ("p", "q")})
+            for k in range(depth)
+        },
+    )
+    ents = {
+        f"e{k}": {f"a{k}": [dom[j] for j in rng.integers(0, card, n_rows)]}
+        for k in range(depth + 1)
+    }
+    rels = {}
+    for k in range(depth):
+        pairs = sorted(
+            {(int(rng.integers(0, n_rows)), int(rng.integers(0, n_rows)))
+             for _ in range(n_rows)}
+        )
+        rels[f"r{k}"] = {
+            "fk1": [p[0] for p in pairs],
+            "fk2": [p[1] for p in pairs],
+            "attrs": {f"w{k}": [("p", "q")[int(rng.integers(0, 2))] for _ in pairs]},
+        }
+    return from_labels(schema, ents, rels)
+
+
+def random_rel_inserts(db: RelationalDatabase, table: str, size: int,
+                       rng: np.random.Generator) -> dict:
+    """An ``apply_delta`` insert spec with uniform fks/attr codes.  May
+    collide with surviving pairs — pair with a delete, or use
+    :func:`absent_pair_inserts` when the pair-uniqueness precondition must
+    hold unconditionally."""
+    decl = next(d for d in db.schema.relationships if d.name == table)
+    n1 = db.entities[decl.entities[0]].n_rows
+    n2 = db.entities[decl.entities[1]].n_rows
+    return {
+        "fk1": rng.integers(0, n1, size=size, dtype=np.int32),
+        "fk2": rng.integers(0, n2, size=size, dtype=np.int32),
+        "attrs": {
+            attr: rng.integers(1, len(dom) + 1, size=size, dtype=np.int32)
+            for attr, dom in decl.attributes
+        },
+    }
+
+
+def absent_pair_inserts(db: RelationalDatabase, table: str, size: int,
+                        rng: np.random.Generator) -> dict:
+    """Valid inserts: pairs with no surviving row (the apply_delta
+    precondition — each pair grounds the relationship at most once)."""
+    decl = next(d for d in db.schema.relationships if d.name == table)
+    rel = db.relationships[table]
+    n1 = db.entities[decl.entities[0]].n_rows
+    n2 = db.entities[decl.entities[1]].n_rows
+    taken = set(zip(np.asarray(rel.fk1).tolist(), np.asarray(rel.fk2).tolist()))
+    free = [(i, j) for i in range(n1) for j in range(n2) if (i, j) not in taken]
+    rng.shuffle(free)
+    picks = free[:size]
+    return {
+        "fk1": [p[0] for p in picks],
+        "fk2": [p[1] for p in picks],
+        "attrs": {
+            attr: rng.integers(1, len(dom) + 1, size=len(picks)).tolist()
+            for attr, dom in decl.attributes
+        },
+    }
+
+
+__all__ = [
+    "absent_pair_inserts",
+    "chain_db",
+    "fuzz_db",
+    "fuzz_seeds",
+    "random_rel_inserts",
+    "rv_subset",
+    "schema_specs",
+]

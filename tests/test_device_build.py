@@ -20,6 +20,7 @@ from repro.core.structure import learn_and_join
 from repro.kernels import bucketing, ops
 
 from .bruteforce import random_db
+from .strategies import chain_db
 
 
 def _pair(db, rvs, **kw):
@@ -35,36 +36,6 @@ def _assert_bit_identical(host: SparseCT, dev: DeviceSparseCT) -> None:
     assert got.rvs == host.rvs and got.cards == host.cards
     np.testing.assert_array_equal(got.codes, host.codes)
     np.testing.assert_array_equal(got.counts, host.counts)  # bitwise, not close
-
-
-def _chain_db(depth=2, card=3, n_rows=7, seed=0):
-    """Entities e0..e<depth> linked by a chain of relationships (with one
-    relationship attribute each) — the multi-relationship Möbius workload."""
-    rng = np.random.default_rng(seed)
-    dom = tuple(str(i) for i in range(card))
-    schema = make_schema(
-        entities={f"e{k}": {f"a{k}": dom} for k in range(depth + 1)},
-        relationships={
-            f"r{k}": ((f"e{k}", f"e{k + 1}"), {f"w{k}": ("p", "q")})
-            for k in range(depth)
-        },
-    )
-    ents = {
-        f"e{k}": {f"a{k}": [dom[j] for j in rng.integers(0, card, n_rows)]}
-        for k in range(depth + 1)
-    }
-    rels = {}
-    for k in range(depth):
-        pairs = sorted(
-            {(int(rng.integers(0, n_rows)), int(rng.integers(0, n_rows)))
-             for _ in range(n_rows)}
-        )
-        rels[f"r{k}"] = {
-            "fk1": [p[0] for p in pairs],
-            "fk2": [p[1] for p in pairs],
-            "attrs": {f"w{k}": [("p", "q")[int(rng.integers(0, 2))] for _ in pairs]},
-        }
-    return from_labels(schema, ents, rels)
 
 
 def _empty_rel_db():
@@ -170,7 +141,7 @@ def test_device_build_random_dbs(seed, self_rel):
 def test_device_build_multi_relationship_mobius(depth):
     """Chains of relationships: the Möbius recursion nests ``depth`` signed
     subtraction levels, each with a relationship-attribute n/a embedding."""
-    db = _chain_db(depth=depth)
+    db = chain_db(depth=depth)
     rvs = tuple(v.vid for v in db.catalog.par_rvs)
     host, dev = _pair(db, rvs)
     _assert_bit_identical(host, dev)
@@ -287,7 +258,7 @@ def test_device_built_joint_serves_score_manager():
 def test_device_build_marginals_match_host_build():
     """Marginals of a device-built joint == marginals of the host joint
     (the served-family-CT contract of CountCache)."""
-    db = _chain_db(depth=2)
+    db = chain_db(depth=2)
     host = joint_contingency_table(db, impl="sparse")
     dev = joint_contingency_table(db, impl="sparse", device_resident=True)
     for keep in [host.rvs[:2], (host.rvs[3], host.rvs[0]), host.rvs[-2:]]:

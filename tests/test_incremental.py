@@ -41,6 +41,8 @@ from repro.core.structure import hill_climb, warm_hill_climb
 from repro.kernels import bucketing
 
 from .bruteforce import brute_force_ct, random_db
+from .strategies import absent_pair_inserts as _absent_pair_inserts
+from .strategies import random_rel_inserts as _random_inserts
 
 
 def _all_rvs(db):
@@ -52,41 +54,6 @@ def _assert_identical(a, b):
     assert ha.rvs == hb.rvs and ha.cards == hb.cards
     np.testing.assert_array_equal(ha.codes, hb.codes)
     np.testing.assert_array_equal(ha.counts, hb.counts)  # bitwise, not close
-
-
-def _random_inserts(db, table, size, rng):
-    decl = next(d for d in db.schema.relationships if d.name == table)
-    n1 = db.entities[decl.entities[0]].n_rows
-    n2 = db.entities[decl.entities[1]].n_rows
-    return {
-        "fk1": rng.integers(0, n1, size=size, dtype=np.int32),
-        "fk2": rng.integers(0, n2, size=size, dtype=np.int32),
-        "attrs": {
-            attr: rng.integers(1, len(dom) + 1, size=size, dtype=np.int32)
-            for attr, dom in decl.attributes
-        },
-    }
-
-
-def _absent_pair_inserts(db, table, size, rng):
-    """Valid inserts: pairs with no surviving row (the apply_delta
-    precondition — each pair grounds the relationship at most once)."""
-    decl = next(d for d in db.schema.relationships if d.name == table)
-    rel = db.relationships[table]
-    n1 = db.entities[decl.entities[0]].n_rows
-    n2 = db.entities[decl.entities[1]].n_rows
-    taken = set(zip(np.asarray(rel.fk1).tolist(), np.asarray(rel.fk2).tolist()))
-    free = [(i, j) for i in range(n1) for j in range(n2) if (i, j) not in taken]
-    rng.shuffle(free)
-    picks = free[:size]
-    return {
-        "fk1": [p[0] for p in picks],
-        "fk2": [p[1] for p in picks],
-        "attrs": {
-            attr: rng.integers(1, len(dom) + 1, size=len(picks)).tolist()
-            for attr, dom in decl.attributes
-        },
-    }
 
 
 # ---------------------------------------------------------------------------

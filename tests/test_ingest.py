@@ -1,0 +1,207 @@
+"""Declarative schema ingestion (`data/ingest.py`) + the seeded generator
+(`data/schema_gen.py`): spec validation fail-louds, database round-trips,
+and draw determinism — the input side of the schema contract
+(docs/ARCHITECTURE.md)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.data.ingest import (
+    SchemaSpecError,
+    export_spec,
+    ingest_database,
+    ingest_schema,
+    load_spec,
+)
+from repro.data.schema_gen import SPEC_CORPUS, SchemaSpec, generate_database
+
+UNIVERSITY_SPEC = {
+    "tables": {
+        "prof": {"columns": {"pop": ["low", "high"]}},
+        "student": {"columns": {"intel": ["1", "2", "3"]}},
+        "advises": {
+            "foreign_keys": {"advisor": "prof", "advisee": "student"},
+            "columns": {"strength": ["weak", "strong"]},
+        },
+    }
+}
+
+
+def test_ingest_schema_happy_path():
+    schema = ingest_schema(UNIVERSITY_SPEC)
+    assert [e.name for e in schema.entities] == ["prof", "student"]
+    rel = schema.relationship("advises")
+    # FK declaration order fixes the fk1/fk2 roles
+    assert rel.entities == ("prof", "student")
+    assert dict(rel.attributes)["strength"] == ("weak", "strong")
+
+
+def test_ingest_self_referencing_fk():
+    spec = {"tables": {
+        "person": {"columns": {"age": ["young", "old"]}},
+        "mentors": {"foreign_keys": {"mentor": "person", "mentee": "person"}},
+    }}
+    schema = ingest_schema(spec)
+    assert schema.relationship("mentors").is_self
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda s: s.pop("tables"), "tables"),
+    (lambda s: s.update(extra=1), "unknown top-level"),
+    (lambda s: s["tables"]["advises"]["foreign_keys"].pop("advisee"), "binary"),
+    (lambda s: s["tables"]["advises"]["foreign_keys"].update(third="prof"),
+     "binary"),
+    (lambda s: s["tables"]["advises"]["foreign_keys"].update(advisee="nope"),
+     "unknown"),
+    (lambda s: s["tables"]["advises"]["foreign_keys"].update(advisee="advises"),
+     "entity tables"),
+    (lambda s: s["tables"]["prof"]["columns"].update(pop=["solo"]), ">= 2"),
+    (lambda s: s["tables"]["prof"]["columns"].update(pop=["a", "a"]),
+     "duplicate"),
+    (lambda s: s["tables"]["prof"]["columns"].update(pop=["a", "n/a"]), "n/a"),
+    (lambda s: s["tables"].update({"bad name": {"columns": {}}}), "identifier"),
+    (lambda s: s["tables"]["prof"].update(typo=1), "unknown keys"),
+])
+def test_ingest_schema_fail_loud(mutate, match):
+    spec = json.loads(json.dumps(UNIVERSITY_SPEC))  # deep copy
+    mutate(spec)
+    with pytest.raises(SchemaSpecError, match=match):
+        ingest_schema(spec)
+
+
+def _with_rows():
+    spec = json.loads(json.dumps(UNIVERSITY_SPEC))
+    spec["tables"]["prof"]["rows"] = {"pop": ["low", "high", "high"]}
+    spec["tables"]["student"]["rows"] = {"intel": ["1", "3"]}
+    spec["tables"]["advises"]["rows"] = {
+        "advisor": [0, 2], "advisee": [1, 1], "strength": ["weak", "strong"],
+    }
+    return spec
+
+
+def test_ingest_database_and_export_round_trip():
+    db = ingest_database(_with_rows())
+    assert db.entities["prof"].n_rows == 3
+    assert db.relationships["advises"].n_rows == 2
+    # stored rel-attr codes live in the n/a-augmented domain (>= 1)
+    np.testing.assert_array_equal(
+        np.asarray(db.relationships["advises"].attrs["strength"]), [1, 2]
+    )
+    spec2 = export_spec(db)
+    db2 = ingest_database(spec2)
+    assert export_spec(db2) == spec2  # fixed point
+    for name, t in db.entities.items():
+        for attr, col in t.attrs.items():
+            np.testing.assert_array_equal(
+                np.asarray(col), np.asarray(db2.entities[name].attrs[attr])
+            )
+    for name, t in db.relationships.items():
+        t2 = db2.relationships[name]
+        np.testing.assert_array_equal(np.asarray(t.fk1), np.asarray(t2.fk1))
+        np.testing.assert_array_equal(np.asarray(t.fk2), np.asarray(t2.fk2))
+
+
+def test_ingest_attributeless_entity_needs_n_rows():
+    """Regression (found by the shrinker): an entity stripped of every
+    attribute column must keep its population via ``n_rows`` — and the
+    round-trip through ``from_labels`` must not collapse it to 0 rows."""
+    spec = {"tables": {
+        "e": {"columns": {}, "n_rows": 3},
+        "f": {"columns": {"y": ["0", "1"]}, "rows": {"y": ["0", "1"]}},
+        "r": {"foreign_keys": {"fk1": "e", "fk2": "f"},
+              "columns": {},
+              "rows": {"fk1": [0, 2], "fk2": [0, 1]}},
+    }}
+    db = ingest_database(spec)
+    assert db.entities["e"].n_rows == 3
+    db.validate()
+    # without n_rows it must fail loud, not silently produce 0 rows
+    del spec["tables"]["e"]["n_rows"]
+    with pytest.raises(SchemaSpecError, match="n_rows"):
+        ingest_database(spec)
+
+
+@pytest.mark.parametrize("mutate,exc,match", [
+    (lambda s: s["tables"]["advises"]["rows"].update(advisor=[0, 9]),
+     SchemaSpecError, "out of\\s+range"),
+    (lambda s: s["tables"]["advises"]["rows"].update(
+        advisor=[0, 0], advisee=[1, 1]), SchemaSpecError, "duplicate"),
+    (lambda s: s["tables"]["advises"]["rows"].pop("strength"),
+     SchemaSpecError, "missing"),
+    (lambda s: s["tables"]["advises"]["rows"].update(strength=["weak"]),
+     SchemaSpecError, "expected 2 rows"),
+    (lambda s: s["tables"]["prof"]["rows"].update(pop=["low", "mid", "hi"]),
+     SchemaSpecError, "not in domain"),
+    (lambda s: s["tables"]["prof"]["rows"].update(zz=["low"]),
+     SchemaSpecError, "undeclared"),
+])
+def test_ingest_database_fail_loud(mutate, exc, match):
+    spec = _with_rows()
+    mutate(spec)
+    with pytest.raises(exc, match=match):
+        ingest_database(spec)
+
+
+def test_load_spec_round_trip(tmp_path):
+    path = tmp_path / "spec.json"
+    path.write_text(json.dumps(_with_rows()))
+    db = ingest_database(load_spec(str(path)))
+    assert db.relationships["advises"].n_rows == 2
+    path.write_text("[1, 2]")
+    with pytest.raises(SchemaSpecError, match="object"):
+        load_spec(str(path))
+
+
+# ---------------------------------------------------------------------------
+# schema_gen: determinism + shape coverage
+# ---------------------------------------------------------------------------
+
+
+def test_generate_database_is_deterministic():
+    spec = SPEC_CORPUS[0]
+    a = generate_database(spec, 42)
+    b = generate_database(spec, 42)
+    assert export_spec(a) == export_spec(b)
+    c = generate_database(spec, 43)
+    assert export_spec(a) != export_spec(c)
+
+
+def test_generated_db_exports_and_reingests():
+    """Every corpus corner survives export -> ingest -> export fixed point."""
+    for i, spec in enumerate(SPEC_CORPUS):
+        db = generate_database(spec, 100 + i)
+        spec2 = export_spec(db)
+        assert export_spec(ingest_database(spec2)) == spec2, (i, spec)
+
+
+def test_corpus_covers_adversarial_shapes():
+    dual_self = generate_database(SPEC_CORPUS[1], 0)
+    assert all(r.is_self for r in dual_self.schema.relationships)
+    parallel = generate_database(SPEC_CORPUS[2], 0)
+    pairs = [r.entities for r in parallel.schema.relationships]
+    assert len(pairs) > len(set(pairs))  # at least one duplicated pair
+    ring = generate_database(SPEC_CORPUS[3], 0)
+    assert sorted(r.entities for r in ring.schema.relationships) == [
+        ("e0", "e1"), ("e1", "e2"), ("e2", "e0")]
+
+
+def test_loop_free_self_rel_spec():
+    spec = SPEC_CORPUS[5]
+    assert not spec.allow_self_pairs
+    for seed in range(5):
+        db = generate_database(spec, seed)
+        for r in db.schema.relationships:
+            if r.is_self:
+                t = db.relationships[r.name]
+                assert not np.any(np.asarray(t.fk1) == np.asarray(t.fk2))
+
+
+@pytest.mark.parametrize("kw", [
+    {"n_entities": 0}, {"min_domain": 1}, {"min_rows": 0},
+    {"min_rows": 5, "max_rows": 4},
+])
+def test_schema_spec_validates(kw):
+    with pytest.raises(ValueError):
+        SchemaSpec(**kw)

@@ -1,0 +1,296 @@
+"""Property-based schema fuzzing: adversarial join graphs under the four
+differential oracles.
+
+Every generated ``(SchemaSpec, seed)`` draw — self-referencing FKs, parallel
+relationships between one entity pair, rings, diamond chains — must satisfy,
+over the full par-RV joint:
+
+  1. **brute force**: host ``SparseCT`` == ``tests/bruteforce.brute_force_ct``
+     (int64 enumeration of every grounding);
+  2. **dense <-> sparse**: ``impl="ref"`` dense CT == the sparse CT's dense
+     expansion (the ``DENSE_CELL_BUDGET`` routing seam);
+  3. **host <-> device (+ sharded)**: ``DeviceSparseCT.to_host()`` is
+     bit-identical (codes AND float32 counts) to the host build, for shard
+     counts 1/2/4;
+  4. **incremental**: ``sparse_ct_delta`` applied to the live table ==
+     a from-scratch rebuild of the mutated database, bit-identical.
+
+Failures print the ``(spec, seed)`` pair plus a ready-to-run
+``tools/shrink_schema.py`` command that replays and minimizes the draw.
+
+Tier-1 runs a fast corpus sample (`not slow`); the deep seeded sweep (>= 200
+schemas by default, ``REPRO_FUZZ_COUNT``/``REPRO_FUZZ_SEED``/
+``REPRO_FUZZ_ARTIFACTS`` knobs) runs under the ``slow`` + ``fuzz`` markers —
+see the ``fuzz`` CI job and docs/configuration.md.
+"""
+
+import json
+import os
+from dataclasses import asdict
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import counts
+from repro.core.database import apply_delta, from_labels
+from repro.core.schema import make_schema
+from repro.core.sparse_counts import (
+    DeviceSparseCT,
+    SparseCT,
+    apply_ct_delta,
+    sparse_ct_delta,
+)
+from repro.data.schema_gen import SchemaSpec, corpus_case, generate_database
+
+from .bruteforce import as_dense_array, brute_force_ct
+from .strategies import absent_pair_inserts, fuzz_seeds, schema_specs
+
+#: shard counts the sharded-identity oracle sweeps (1 == the plain build).
+_SHARD_COUNTS = (2, 4)
+
+
+def _env_int(name: str, default: int) -> int:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        val = int(raw)
+    except ValueError:
+        val = -1
+    if val < 0:
+        raise ValueError(f"{name} must be a non-negative integer, got {raw!r}")
+    return val
+
+
+def _repro_note(spec: SchemaSpec, seed: int) -> str:
+    """The bug-report footer: replay + shrink instructions for one draw."""
+    spec_json = json.dumps(asdict(spec))
+    return (
+        f"\nfailing fuzz draw: seed={seed} spec={spec!r}\n"
+        f"replay + minimize:\n"
+        f"  python tools/shrink_schema.py --seed {seed} --spec '{spec_json}'"
+    )
+
+
+def _delta_case(db, seed: int):
+    """A deterministic valid delta for the incremental oracle: one absent
+    pair inserted + row 0 deleted on a seed-chosen relationship (or ``None``
+    when the schema offers no legal delta)."""
+    rng = np.random.default_rng(seed + 10_000)
+    names = [r.name for r in db.schema.relationships]
+    if not names:
+        return None
+    table = names[int(rng.integers(len(names)))]
+    ins = absent_pair_inserts(db, table, 1, rng)
+    if not ins["fk1"]:
+        ins = None
+    dele = [0] if db.relationships[table].n_rows else None
+    if ins is None and dele is None:
+        return None
+    return table, ins, dele
+
+
+def check_oracles(spec: SchemaSpec, seed: int, deep: bool = True) -> None:
+    """Run the differential oracles on one draw; raise with repro info.
+
+    ``deep=False`` limits the check to the host-vs-brute-force oracle (the
+    cheap subset the adaptive hypothesis search iterates quickly).
+    """
+    try:
+        db = generate_database(spec, seed)
+        rvs = tuple(v.vid for v in db.catalog.par_rvs)
+        host = counts.contingency_table(db, rvs, impl="sparse")
+        assert isinstance(host, SparseCT)
+
+        # oracle 1: int64 brute-force enumeration
+        bf = brute_force_ct(db, rvs)
+        np.testing.assert_array_equal(as_dense_array(host).astype(np.int64), bf)
+        if not deep:
+            return
+
+        # oracle 2: dense <-> sparse equivalence
+        dense = counts.contingency_table(db, rvs, impl="ref")
+        np.testing.assert_array_equal(
+            as_dense_array(dense), as_dense_array(host)
+        )
+
+        # oracle 3: device bit-identity, incl. sharded 2/4 builds
+        dev = counts.contingency_table(
+            db, rvs, impl="sparse", device_resident=True
+        )
+        assert isinstance(dev, DeviceSparseCT)
+        got = dev.to_host()
+        np.testing.assert_array_equal(got.codes, host.codes)
+        np.testing.assert_array_equal(got.counts, host.counts)
+        for shards in _SHARD_COUNTS:
+            sh = counts.contingency_table(
+                db, rvs, impl="sparse", device_resident=True, shards=shards
+            ).to_host()
+            np.testing.assert_array_equal(sh.codes, host.codes)
+            np.testing.assert_array_equal(sh.counts, host.counts)
+
+        # oracle 4: sparse_ct_delta apply == from-scratch rebuild
+        case = _delta_case(db, seed)
+        if case is not None:
+            table, ins, dele = case
+            new_db, delta = apply_delta(
+                db, table, inserted_rows=ins, deleted_rows=dele
+            )
+            merged = apply_ct_delta(
+                host, sparse_ct_delta(db, delta, rvs, device=False)
+            )
+            rebuilt = counts.contingency_table(new_db, rvs, impl="sparse")
+            np.testing.assert_array_equal(merged.codes, rebuilt.codes)
+            np.testing.assert_array_equal(merged.counts, rebuilt.counts)
+    except Exception as exc:  # noqa: BLE001 — always attach the repro recipe
+        raise AssertionError(_repro_note(spec, seed)) from exc
+
+
+# ---------------------------------------------------------------------------
+# Tier-1: fast corpus sample + adaptive host-oracle property
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", range(6))
+def test_fuzz_corpus_sample(case):
+    """One draw per named corpus corner through all four oracles."""
+    spec, seed = corpus_case(case, base_seed=0)
+    check_oracles(spec, seed, deep=True)
+
+
+@settings(max_examples=8, deadline=None)
+@given(spec=schema_specs(), seed=fuzz_seeds(500))
+def test_fuzz_host_matches_bruteforce(spec, seed):
+    """Adaptive sweep of the cheap oracle (host COO vs brute force)."""
+    check_oracles(spec, seed, deep=False)
+
+
+# ---------------------------------------------------------------------------
+# Shrunken regressions: shapes the planner used to reject or misplan
+# ---------------------------------------------------------------------------
+
+
+def _assert_matches_bruteforce(db) -> None:
+    rvs = tuple(v.vid for v in db.catalog.par_rvs)
+    bf = brute_force_ct(db, rvs)
+    for impl in ("ref", "sparse"):
+        ct = counts.contingency_table(db, rvs, impl=impl)
+        np.testing.assert_array_equal(as_dense_array(ct).astype(np.int64), bf)
+    dev = counts.contingency_table(db, rvs, impl="sparse", device_resident=True)
+    host = counts.contingency_table(db, rvs, impl="sparse")
+    np.testing.assert_array_equal(dev.to_host().codes, host.codes)
+    np.testing.assert_array_equal(dev.to_host().counts, host.counts)
+
+
+def test_regression_dual_self_relationships():
+    """Two self-relationships on one entity (shrunken from the dual-self-ref
+    corpus spec): the join graph has two edges on the e0/e1 fovar pair —
+    cyclic — and both relationship leaves share both endpoint entity tables,
+    the ``LeafMessageCache``-collision shape called out in the issue."""
+    schema = make_schema(
+        entities={"e": {"a": ("0", "1")}},
+        relationships={
+            "r0": (("e", "e"), {}),
+            "r1": (("e", "e"), {"w": ("p", "q")}),
+        },
+    )
+    db = from_labels(
+        schema,
+        {"e": {"a": ["0", "1", "1"]}},
+        {"r0": {"fk1": [0, 2], "fk2": [1, 2], "attrs": {}},
+         "r1": {"fk1": [1, 0], "fk2": [0, 0], "attrs": {"w": ["p", "q"]}}},
+    )
+    _assert_matches_bruteforce(db)
+
+
+def test_regression_three_ring():
+    """A 3-entity relationship ring (shrunken from the ring corpus spec):
+    every fovar has degree 2, so the old leaf elimination found no leaf."""
+    schema = make_schema(
+        entities={"e0": {"a0": ("0", "1")},
+                  "e1": {"a1": ("0", "1")},
+                  "e2": {"a2": ("0", "1")}},
+        relationships={
+            "r0": (("e0", "e1"), {}),
+            "r1": (("e1", "e2"), {}),
+            "r2": (("e2", "e0"), {}),
+        },
+    )
+    db = from_labels(
+        schema,
+        {"e0": {"a0": ["0", "1"]},
+         "e1": {"a1": ["1", "0"]},
+         "e2": {"a2": ["0", "0"]}},
+        {"r0": {"fk1": [0, 1], "fk2": [0, 1], "attrs": {}},
+         "r1": {"fk1": [0, 1], "fk2": [1, 0], "attrs": {}},
+         "r2": {"fk1": [1], "fk2": [0], "attrs": {}}},
+    )
+    _assert_matches_bruteforce(db)
+
+
+def test_cyclic_query_is_marked_in_plan():
+    """``plan_conditional`` marks cyclic components instead of raising —
+    the contract the sparse/dense/device routers key off."""
+    schema = make_schema(
+        entities={"a": {"x": ("0", "1")}, "b": {"y": ("0", "1")}},
+        relationships={"r1": (("a", "b"), {}), "r2": (("a", "b"), {})},
+    )
+    db = from_labels(
+        schema,
+        {"a": {"x": ["0"]}, "b": {"y": ["1"]}},
+        {"r1": {"fk1": [0], "fk2": [0], "attrs": {}},
+         "r2": {"fk1": [0], "fk2": [0], "attrs": {}}},
+    )
+    plan = counts.plan_conditional(db, ("x(a0)",), ("r1", "r2"))
+    assert plan.cyclic == {0}
+    tree = counts.plan_conditional(db, ("x(a0)",), ("r1",))
+    assert tree.cyclic == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# The deep seeded sweep (the `fuzz` CI job; >= 200 schemas by default)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.fuzz
+def test_fuzz_sweep():
+    """Sweep ``REPRO_FUZZ_COUNT`` draws (corpus specs cycled, seeds advancing
+    from ``REPRO_FUZZ_SEED``) through all four oracles.  Every failure is
+    collected — not fail-fast — so one CI run reports the full divergence
+    set; with ``REPRO_FUZZ_ARTIFACTS`` set, the seed list and per-failure
+    reproducer specs are written there for artifact upload."""
+    base_seed = _env_int("REPRO_FUZZ_SEED", 0)
+    count = _env_int("REPRO_FUZZ_COUNT", 240)
+    art_dir = os.environ.get("REPRO_FUZZ_ARTIFACTS", "")
+
+    cases = [corpus_case(i, base_seed) for i in range(count)]
+    failures: list[dict] = []
+    for spec, seed in cases:
+        try:
+            check_oracles(spec, seed, deep=True)
+        except AssertionError as exc:
+            failures.append({
+                "seed": seed,
+                "spec": asdict(spec),
+                "error": str(exc.__cause__ or exc),
+            })
+
+    if art_dir:
+        os.makedirs(art_dir, exist_ok=True)
+        with open(os.path.join(art_dir, "seeds.json"), "w") as fh:
+            json.dump(
+                {"base_seed": base_seed, "count": count,
+                 "cases": [{"seed": s, "spec": asdict(sp)} for sp, s in cases],
+                 "n_failures": len(failures)},
+                fh, indent=1,
+            )
+        for i, fail in enumerate(failures):
+            with open(os.path.join(art_dir, f"repro_{i}.json"), "w") as fh:
+                json.dump(fail, fh, indent=1)
+
+    assert not failures, (
+        f"{len(failures)}/{count} fuzz draws diverged; first: "
+        + _repro_note(SchemaSpec(**failures[0]["spec"]), failures[0]["seed"])
+    )

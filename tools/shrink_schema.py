@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Replay one schema-fuzzer draw and greedily shrink the failing database.
+
+``tests/test_schema_fuzz.py`` prints a ready-to-run invocation on every
+failure::
+
+    python tools/shrink_schema.py --seed 1234 --spec '{"n_entities": 2, ...}'
+
+The tool regenerates the draw, confirms the differential-oracle divergence,
+then exports the database to the declarative spec form
+(``repro.data.ingest.export_spec``) and greedily deletes pieces — whole
+relationship tables, attribute columns, then individual relationship rows —
+re-running the oracles after each candidate deletion and keeping it only
+while the divergence persists.  The minimized spec is printed (and written
+with ``--out``) as a self-contained JSON reproducer: feed it back through
+``repro.data.ingest.ingest_database`` in a regression test.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # for tests.bruteforce
+
+import numpy as np  # noqa: E402
+
+from repro.core import counts  # noqa: E402
+from repro.data.ingest import export_spec, ingest_database  # noqa: E402
+from repro.data.schema_gen import SchemaSpec, generate_database  # noqa: E402
+from tests.bruteforce import as_dense_array, brute_force_ct  # noqa: E402
+
+
+def diverges(spec: dict) -> bool:
+    """True when any static differential oracle fails on ``spec``'s db."""
+    try:
+        db = ingest_database(spec)
+        rvs = tuple(v.vid for v in db.catalog.par_rvs)
+        host = counts.contingency_table(db, rvs, impl="sparse")
+        bf = brute_force_ct(db, rvs)
+        np.testing.assert_array_equal(as_dense_array(host).astype(np.int64), bf)
+        dense = counts.contingency_table(db, rvs, impl="ref")
+        np.testing.assert_array_equal(as_dense_array(dense), as_dense_array(host))
+        dev = counts.contingency_table(db, rvs, impl="sparse", device_resident=True)
+        np.testing.assert_array_equal(dev.to_host().codes, host.codes)
+        np.testing.assert_array_equal(dev.to_host().counts, host.counts)
+    except Exception:  # noqa: BLE001 — any crash/mismatch counts as divergence
+        return True
+    return False
+
+
+def _candidates(spec: dict):
+    """Yield (description, shrunken-copy) candidates, coarsest first."""
+    tables = spec["tables"]
+    rel_names = [n for n, d in tables.items() if d.get("foreign_keys")]
+    # 1) drop a whole relationship table
+    for name in rel_names:
+        out = copy.deepcopy(spec)
+        del out["tables"][name]
+        yield f"drop relationship {name!r}", out
+    # 2) drop one attribute column (entity attrs need the entity to survive
+    #    attribute-less, which the spec form supports via n_rows)
+    for name, decl in tables.items():
+        for col in decl.get("columns", {}):
+            out = copy.deepcopy(spec)
+            odecl = out["tables"][name]
+            del odecl["columns"][col]
+            rows = odecl.get("rows", {})
+            n = len(rows.get(col, []))
+            rows.pop(col, None)
+            if not decl.get("foreign_keys") and not odecl["columns"]:
+                odecl.pop("rows", None)
+                odecl["n_rows"] = n
+            yield f"drop column {name}.{col}", out
+    # 3) drop one relationship row
+    for name in rel_names:
+        rows = tables[name].get("rows", {})
+        n = len(rows.get("fk1", []))
+        for i in range(n):
+            out = copy.deepcopy(spec)
+            orows = out["tables"][name]["rows"]
+            for col, vals in orows.items():
+                del vals[i]
+            yield f"drop row {i} of {name!r}", out
+
+
+def shrink(spec: dict) -> dict:
+    """Greedy fixed-point deletion: keep any shrink that still diverges."""
+    progress = True
+    while progress:
+        progress = False
+        for desc, cand in _candidates(spec):
+            if diverges(cand):
+                print(f"  kept shrink: {desc}")
+                spec = cand
+                progress = True
+                break
+    return spec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, required=True,
+                    help="generator seed of the failing draw")
+    ap.add_argument("--spec", default="{}",
+                    help="JSON of the SchemaSpec fields (from the failure note)")
+    ap.add_argument("--out", default="",
+                    help="write the minimized spec JSON here")
+    args = ap.parse_args()
+
+    counts.set_device_min_rows(0)  # fuzz draws are tiny; force the device path
+    spec = SchemaSpec(**json.loads(args.spec))
+    print(f"replaying seed={args.seed} {spec!r}")
+    db = generate_database(spec, args.seed)
+    full = export_spec(db)
+    if not diverges(full):
+        print("draw passes every static oracle — nothing to shrink "
+              "(was the failure in the sharded or delta oracle? those need "
+              "the full test, not this tool)")
+        return 1
+
+    print("divergence confirmed; shrinking...")
+    minimal = shrink(full)
+    blob = json.dumps(minimal, indent=1)
+    print("\nminimal reproducer spec:\n" + blob)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(blob + "\n")
+        print(f"\nwritten to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
