@@ -1,0 +1,183 @@
+"""Serving-tier bench: durable-store reload + micro-batched block prediction.
+
+The paper's §VI case for block access is made offline — score the whole
+test set in one grouped query per family.  The serving tier makes the same
+claim *online*: requests arriving one at a time are coalesced by the
+micro-batcher, padded onto the geometric bucket ladder, and answered by
+the very same ``block_predict`` programs the learner compiled — so steady
+traffic runs at **zero** warm XLA compiles regardless of request batch
+size, and every served posterior is **bitwise** equal to the
+single-instance oracle (``predict_single_loop``), not merely close.
+
+Per dataset this leg measures:
+
+  * model-store round trip — save → load → the reloaded CPTs are
+    bit-identical (``roundtrip_equal``) and the artifact size is recorded;
+  * serving correctness — served probs/log-scores vs the single-instance
+    oracle, bitwise (``serve_equal``);
+  * latency/throughput — p50/p99 ms and QPS at ≥3 distinct request batch
+    sizes riding one warmed service;
+  * compile hygiene — ``warm_compiles`` (gated == 0 by ``run.py --json``)
+    across all traffic after :meth:`PredictService.warmup`.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.cpt import learn_parameters
+from repro.core.model_store import LearnedModel, load_model, save_model
+from repro.core.predict import predict_single_loop
+from repro.core.structure import CountCache, learn_and_join
+from repro.kernels import ops
+from repro.serving.predict_service import PredictService
+
+from .common import emit, load
+
+SMOKE_PRESETS = ["uw-cse"]
+FULL_PRESETS = ["uw-cse", "mutagenesis", "movielens"]
+
+#: Request batch sizes exercised against one warmed service.  All of them
+#: land on the same bucket-ladder rung, which is exactly why the warm
+#: compile gate can demand zero across the whole set.
+BATCH_SIZES = (1, 4, 16)
+
+#: Requests submitted per batch size (concurrently, so the micro-batcher
+#: actually gets to coalesce them).
+REQUESTS_PER_SIZE = 32
+
+
+def _pick_target(db) -> str:
+    """First entity-attribute par-RV of the largest entity table."""
+    cat = db.catalog
+    best = max(db.entities.values(), key=lambda t: t.n_rows)
+    for v in cat.entity_attrs:
+        if v.table == best.name and v.fovars[0].index == 0:
+            return v.vid
+    return cat.entity_attrs[0].vid
+
+
+def run_serve(
+    presets: list[str] | None = None,
+    scale: float | None = None,
+    *,
+    single_cap: int = 16,
+) -> dict:
+    out = {}
+    for name in presets or FULL_PRESETS:
+        bdb = load(name, scale)
+        db = bdb.db
+        cache = CountCache(db, mode="precount", impl="auto")
+        res = learn_and_join(
+            db, cache, score="aic", max_parents=2, max_chain=1, impl="auto"
+        )
+        factors = learn_parameters(res.bn, cache, alpha=0.1, impl="auto")
+        target = _pick_target(db)
+        model = LearnedModel(
+            schema=db.schema, bn=res.bn, factors=factors,
+            meta={"dataset": name, "target": target},
+        )
+
+        # -- durable store round trip: the service below runs off the
+        #    *reloaded* artifact, so serve_equal transitively covers it too
+        with tempfile.TemporaryDirectory() as td:
+            path = save_model(model, os.path.join(td, "model.npz"))
+            artifact_kb = os.path.getsize(path) / 1024.0
+            t0 = time.perf_counter()
+            loaded = load_model(path)
+            load_ms = (time.perf_counter() - t0) * 1e3
+        roundtrip_equal = (
+            loaded.schema == model.schema
+            and loaded.bn == model.bn
+            and all(
+                np.array_equal(
+                    np.asarray(ops.to_host(loaded.factors[c].table)),
+                    np.asarray(ops.to_host(model.factors[c].table)),
+                )
+                for c in model.factors
+            )
+        )
+
+        # -- the single-instance oracle (measured BEFORE the service warms
+        #    up, so its own compiles stay out of the warm window)
+        n_inst = db.entities[db.catalog[target].table].n_rows
+        cap = min(single_cap, n_inst)
+        oracle = predict_single_loop(
+            db, res.bn, factors, target, impl="auto", max_instances=cap
+        )
+        op = np.asarray(oracle.probs)
+        ol = np.asarray(oracle.log_scores)
+
+        svc = PredictService(db, loaded, target, max_batch=64, flush_ms=1.0)
+        warm = svc.warmup()
+
+        serve_equal = True
+        metrics = {
+            "target": target,
+            "n_entities": n_inst,
+            "artifact_kb": artifact_kb,
+            "load_ms": load_ms,
+            "roundtrip_equal": bool(roundtrip_equal),
+            "warmup_compiles": warm["compiles"],
+            "rungs": len(warm["rungs"]),
+        }
+        for bsize in BATCH_SIZES:
+            ids_list = [
+                [(i * bsize + j) % cap for j in range(bsize)]
+                for i in range(REQUESTS_PER_SIZE)
+            ]
+            t0 = time.perf_counter()
+            futs = [svc.submit(ids) for ids in ids_list]
+            results = [f.result(timeout=60) for f in futs]
+            wall = time.perf_counter() - t0
+            for ids, r in zip(ids_list, results):
+                serve_equal = serve_equal and bool(
+                    np.array_equal(r.probs, op[ids])
+                    and np.array_equal(r.log_scores, ol[ids])
+                )
+            lats = sorted(r.latency_ms for r in results)
+            p50 = lats[len(lats) // 2]
+            p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))]
+            qps = len(ids_list) / max(wall, 1e-9)
+            metrics[f"b{bsize}_p50_ms"] = p50
+            metrics[f"b{bsize}_p99_ms"] = p99
+            metrics[f"b{bsize}_qps"] = qps
+            emit(
+                f"serve/{name}/b{bsize}", wall / len(ids_list),
+                f"p50={p50:.2f}ms;p99={p99:.2f}ms;qps={qps:.0f}",
+            )
+
+        stats = svc.stats()
+        svc.close()
+        metrics["serve_equal"] = bool(serve_equal)
+        metrics["warm_compiles"] = stats["warm_compiles"]
+        metrics["batches"] = stats["batches"]
+        metrics["rows_per_batch"] = stats["rows_per_batch"]
+        emit(
+            f"serve/{name}/summary", 0.0,
+            f"warm_compiles={stats['warm_compiles']};"
+            f"serve==single:{serve_equal};roundtrip:{roundtrip_equal}",
+        )
+        out[name] = metrics
+    return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--datasets", nargs="*", default=FULL_PRESETS)
+    p.add_argument("--scale", type=float, default=None)
+    a = p.parse_args(argv)
+    import json
+    import sys
+
+    print(json.dumps(run_serve(a.datasets, a.scale), indent=2), file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

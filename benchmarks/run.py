@@ -46,6 +46,7 @@ def main(argv: list[str] | None = None) -> None:
             bench_incremental,
             bench_kernels,
             bench_scale,
+            bench_serve,
             bench_structure,
         )
 
@@ -75,6 +76,14 @@ def main(argv: list[str] | None = None) -> None:
             bench_incremental.SMOKE_PRESETS if a.smoke
             else bench_incremental.FULL_PRESETS
         )
+        # The serving leg: model-store round trip + micro-batched online
+        # prediction.  Gated bitwise against the single-instance oracle
+        # (serve_equal / roundtrip_equal ride the generic _equal scan) and
+        # compile-gated below: steady traffic must stay cache-complete.
+        payload["bench_serve"] = bench_serve.run_serve(
+            bench_serve.SMOKE_PRESETS if a.smoke else bench_serve.FULL_PRESETS,
+            scale,
+        )
         with open(a.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
@@ -88,6 +97,7 @@ def main(argv: list[str] | None = None) -> None:
             f"{name}:{key}"
             for group in (
                 "datasets", "bench_scale", "bench_kernels", "bench_incremental",
+                "bench_serve",
             )
             for name, metrics in payload[group].items()
             for key, val in sorted(metrics.items())
@@ -119,13 +129,22 @@ def main(argv: list[str] | None = None) -> None:
             for name, metrics in payload["bench_incremental"].items()
             if metrics["delta1_compiles_warm"] > 0
         ]
-        if over or over_warm or over_delta:
+        # Warm serving traffic must be cache-complete: after warmup() the
+        # service answers every request batch size on already-compiled
+        # rung-shaped programs, so a single warm compile means a request
+        # shape escaped the bucket ladder.
+        over_serve = [
+            f"{name}:serve_warm_compiles={metrics['warm_compiles']}"
+            for name, metrics in payload["bench_serve"].items()
+            if metrics["warm_compiles"] > 0
+        ]
+        if over or over_warm or over_delta or over_serve:
             print(
                 f"# COMPILE BUDGET EXCEEDED: "
-                f"{', '.join(over + over_warm + over_delta)} "
+                f"{', '.join(over + over_warm + over_delta + over_serve)} "
                 f"(budget={bench_structure.COMPILE_BUDGET}, "
                 f"warm_budget={bench_structure.WARM_COMPILE_BUDGET}, "
-                f"warm_delta_budget=0)",
+                f"warm_delta_budget=0, serve_warm_budget=0)",
                 file=sys.stderr,
             )
             sys.exit(1)

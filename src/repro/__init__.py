@@ -1,0 +1,68 @@
+"""repro: FactorBase's SQL-driven multi-relational learning on JAX/Pallas.
+
+Public surface (everything else is engine internals)::
+
+    import repro
+
+    model = repro.learn(db)                       # schema → counts → BN → CPTs
+    repro.save_model(model, "model.npz")          # durable versioned artifact
+    model = repro.load_model("model.npz")         # device-resident, no re-learn
+    result = repro.predict(db, model, target)     # §VI block path, whole test set
+
+    with repro.engine_config(kernel_impl="pallas", bucket_base=256):
+        svc = repro.PredictService(db, model, target)   # micro-batched serving
+        svc.warmup()
+        probs = svc.predict([3, 14, 15]).probs
+
+Attribute access is lazy (PEP 562): importing :mod:`repro` pulls in
+nothing heavy, so launch scripts can still set ``XLA_FLAGS`` /
+``REPRO_*`` environment variables *before* the first attribute touch
+triggers the underlying ``jax`` import.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "EngineConfig",
+    "LearnedModel",
+    "ModelStoreError",
+    "PredictService",
+    "PredictionResult",
+    "current_config",
+    "engine_config",
+    "learn",
+    "load_model",
+    "predict",
+    "save_model",
+]
+
+# attribute name -> submodule that defines it; resolved on first access
+_EXPORTS = {
+    "EngineConfig": "repro.core.config",
+    "current_config": "repro.core.config",
+    "engine_config": "repro.core.config",
+    "LearnedModel": "repro.core.model_store",
+    "ModelStoreError": "repro.core.model_store",
+    "load_model": "repro.core.model_store",
+    "save_model": "repro.core.model_store",
+    "PredictionResult": "repro.core.predict",
+    "learn": "repro.api",
+    "predict": "repro.api",
+    "PredictService": "repro.serving.predict_service",
+}
+
+
+def __getattr__(name: str):
+    try:
+        module_name = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module_name), name)
+    globals()[name] = value  # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

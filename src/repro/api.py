@@ -1,0 +1,102 @@
+"""High-level one-call API: learn → save/load → predict → serve.
+
+The paper's workflow (§I, Figure 4) is *pipeline-shaped* — analyze the
+schema, count, learn structure, estimate parameters, then answer queries —
+but the engine modules expose each stage separately so benchmarks and
+tests can probe them in isolation.  This module is the assembled
+pipeline: :func:`learn` runs schema → counts → LAJ structure search →
+parameter estimation and hands back one durable
+:class:`~repro.core.model_store.LearnedModel`, which
+:func:`~repro.core.model_store.save_model` /
+:func:`~repro.core.model_store.load_model` round-trip bit-identically and
+:func:`predict` / :class:`~repro.serving.predict_service.PredictService`
+consume without re-learning anything.
+
+Everything here is re-exported from the :mod:`repro` package root —
+``repro.learn(db)`` is the intended spelling.
+"""
+
+from __future__ import annotations
+
+from .core.cpt import learn_parameters
+from .core.database import RelationalDatabase
+from .core.model_store import LearnedModel
+from .core.predict import PredictionResult, predict_block
+from .core.structure import CountCache, learn_and_join
+
+__all__ = ["learn", "predict"]
+
+
+def learn(
+    db: RelationalDatabase,
+    *,
+    score: str = "aic",
+    alpha: float = 0.1,
+    max_parents: int = 3,
+    max_chain: int = 2,
+    mode: str = "precount",
+    impl: str = "auto",
+    meta: dict | None = None,
+) -> LearnedModel:
+    """Learn a full model from a relational database, end to end.
+
+    Runs the paper's pipeline in one call — pre-count (or on-demand count,
+    per ``mode``), learn-and-join structure search, Dirichlet-smoothed
+    parameter estimation — and returns a :class:`LearnedModel` carrying
+    the schema contract, the BN, every family CPT, and a provenance
+    ``meta`` block (hyperparameters used, plus anything passed in
+    ``meta``) that travels with the saved artifact.
+
+    Engine knobs (kernel impl, bucket ladder, incremental mode, …) come
+    from the active :func:`repro.engine_config` context.
+    """
+    cache = CountCache(db, mode=mode, impl=impl)
+    result = learn_and_join(
+        db,
+        cache,
+        score=score,
+        alpha=alpha,
+        max_parents=max_parents,
+        max_chain=max_chain,
+        impl=impl,
+    )
+    factors = learn_parameters(result.bn, cache, alpha=alpha, impl=impl)
+    provenance = {
+        "score": score,
+        "alpha": alpha,
+        "max_parents": max_parents,
+        "max_chain": max_chain,
+        "count_mode": mode,
+        "n_candidates_scored": result.n_candidates_scored,
+        "learn_seconds": result.seconds,
+    }
+    if meta:
+        provenance.update(meta)
+    model = LearnedModel(
+        schema=db.schema, bn=result.bn, factors=factors, meta=provenance
+    )
+    model.validate()
+    return model
+
+
+def predict(
+    db: RelationalDatabase,
+    model: LearnedModel,
+    target: str,
+    *,
+    impl: str = "auto",
+) -> PredictionResult:
+    """Score every test entity's ``P(target | rest)`` with the §VI block path.
+
+    One grouped count query + one matmul per family touching ``target`` —
+    the paper's block-access optimization.  ``model`` may come straight
+    from :func:`learn` or from :func:`repro.load_model`; ``db`` must match
+    the model's schema (the same check the serving tier enforces).
+    """
+    if model.schema != db.schema:
+        raise ValueError(
+            "database schema does not match the model's schema; "
+            "a model only answers queries against the catalog it was "
+            "learned from"
+        )
+    return predict_block(db, model.bn, model.factors, target, impl=impl)

@@ -1,0 +1,447 @@
+"""Unified engine configuration: one resolution order for every knob.
+
+FactorBase's BayesStore stance — models (and the engine serving them) are
+first-class, managed objects — is incompatible with configuration smeared
+across ~18 ``REPRO_*`` environment variables and per-module ``set_*()``
+setters: a service embedding the engine cannot scope a knob to one request,
+cannot snapshot what it is actually running with, and cannot trust that an
+env var read at *import* time still reflects the environment at *call*
+time.  This module is the single owner of all of that state:
+
+* :class:`EngineConfig` — a frozen dataclass snapshot of every knob, fully
+  resolved (:func:`current_config` returns one).
+* :func:`engine_config` — a context manager applying scoped overrides::
+
+      with engine_config(coo_shards=4, device_min_rows=0):
+          learn(db)                      # sharded, device-forced
+      # previous behavior restored, even on exception
+
+  Contexts nest (innermost wins per field) and are **thread-safe**: the
+  override stack lives in a :mod:`contextvars` variable, so a context
+  entered in one thread is invisible to every other thread.
+* :func:`resolve` — the precedence engine every internal call site uses:
+
+      explicit per-call kwarg  >  innermost active ``engine_config`` context
+      >  module ``set_*()`` setter (process-global)  >  ``REPRO_*`` env var
+      >  built-in default
+
+Environment variables are re-read on every resolution (they are the
+*fallback* layer, kept for shell/CI ergonomics) and keep their historical
+fail-loud contract: a malformed value raises ``ValueError`` naming the
+variable rather than silently running with the default.  The legacy
+``set_*()`` setters in :mod:`~repro.kernels.bucketing`,
+:mod:`~repro.kernels.ops`, :mod:`~repro.core.counts`,
+:mod:`~repro.core.score_manager` and :mod:`~repro.core.sparse_counts` are
+retained as deprecated shims that delegate to :func:`set_override` — same
+behavior, one source of truth.
+
+This module deliberately imports nothing from the rest of the package (and
+imports :mod:`jax` only lazily, for the persistent-cache side effect), so
+both the ``core`` and ``kernels`` layers can depend on it without cycles.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+from dataclasses import dataclass, fields as dataclass_fields
+from typing import Any, Callable, Iterator, Mapping
+
+__all__ = [
+    "EngineConfig",
+    "current_config",
+    "engine_config",
+    "resolve",
+    "set_override",
+]
+
+
+# ---------------------------------------------------------------------------
+# Field specs: default, env var, env parser, value validator
+# ---------------------------------------------------------------------------
+
+
+def _parse_int(env: str, raw: str, *, minimum: int | None = None,
+               style: str = "an integer") -> int:
+    try:
+        n = int(raw)
+    except ValueError as e:
+        bound = f" >= {minimum}" if minimum is not None else ""
+        raise ValueError(f"{env} must be {style}{bound}, got {raw!r}") from e
+    if minimum is not None and n < minimum:
+        raise ValueError(f"{env} must be >= {minimum}, got {n}")
+    return n
+
+
+def _check_int(name: str, value: Any, *, minimum: int | None = None) -> int:
+    if isinstance(value, bool) or not isinstance(value, int):
+        raise ValueError(f"{name} must be an int, got {value!r}")
+    if minimum is not None and value < minimum:
+        raise ValueError(f"{name} must be >= {minimum}, got {value}")
+    return value
+
+
+def _check_bool(name: str, value: Any) -> bool:
+    if not isinstance(value, bool):
+        raise ValueError(f"{name} must be a bool, got {value!r}")
+    return value
+
+
+def _check_choice(name: str, value: Any, choices: tuple[str, ...]) -> str:
+    if value not in choices:
+        raise ValueError(f"{name} must be one of {choices}, got {value!r}")
+    return value
+
+
+@dataclass(frozen=True)
+class _Field:
+    default: Any
+    env: str | None                              # None: no env fallback
+    parse_env: Callable[[str], Any] | None       # raw env string -> value
+    validate: Callable[[str, Any], Any]          # (field name, value) -> value
+
+
+def _kernel_impl_env(raw: str) -> str:
+    v = raw.strip().lower()
+    if v not in ("", "pallas", "ref"):
+        # fail loudly: a typo'd value would silently fall back to the
+        # oracles and defeat the CI leg whose purpose is dispatch coverage
+        raise ValueError(
+            f"REPRO_KERNEL_IMPL must be 'pallas' or 'ref' (or unset), got {v!r}"
+        )
+    return v
+
+
+_SORT_IMPLS = ("auto", "xla", "pallas")
+_DONATE_MODES = ("auto", "0", "1")
+
+
+def _sort_impl_env(raw: str) -> str:
+    v = raw.strip().lower() or "auto"
+    if v not in _SORT_IMPLS:
+        raise ValueError(f"REPRO_SORT_IMPL must be one of {_SORT_IMPLS}, got {v!r}")
+    return v
+
+
+def _donate_env(raw: str) -> str:
+    v = raw.strip().lower() or "auto"
+    if v not in _DONATE_MODES:
+        raise ValueError(f"REPRO_DONATE must be one of {_DONATE_MODES}, got {v!r}")
+    return v
+
+
+def _bool01_env(env: str) -> Callable[[str], bool]:
+    def parse(raw: str) -> bool:
+        v = raw.strip()
+        if v not in ("0", "1"):
+            raise ValueError(f"{env} must be 0 or 1, got {v!r}")
+        return v == "1"
+    return parse
+
+
+def _bucket_base_env(raw: str) -> int:
+    try:
+        base = int(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"REPRO_BUCKET_BASE / REPRO_BUCKET_GROWTH must parse as int / "
+            f"float, got {raw!r}"
+        ) from e
+    return _check_int("bucket base", base, minimum=1)
+
+
+def _bucket_growth_env(raw: str) -> float:
+    try:
+        growth = float(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"REPRO_BUCKET_BASE / REPRO_BUCKET_GROWTH must parse as int / "
+            f"float, got {raw!r}"
+        ) from e
+    return _validate_growth("bucket growth", growth)
+
+
+def _validate_growth(name: str, value: Any) -> float:
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        raise ValueError(f"{name} must be a number, got {value!r}")
+    if value <= 1.0:
+        # growth == 1 would make every row count its own "bucket" and
+        # silently bring the per-shape recompile tax back
+        raise ValueError(f"{name} must be > 1, got {value}")
+    return float(value)
+
+
+_FIELDS: dict[str, _Field] = {
+    # kernel dispatch ------------------------------------------------------
+    "kernel_impl": _Field(
+        default="",
+        env="REPRO_KERNEL_IMPL",
+        parse_env=_kernel_impl_env,
+        validate=lambda n, v: _check_choice(n, v, ("", "pallas", "ref")),
+    ),
+    "sort_impl": _Field(
+        default="auto",
+        env="REPRO_SORT_IMPL",
+        parse_env=_sort_impl_env,
+        validate=lambda n, v: _check_choice(n, v, _SORT_IMPLS),
+    ),
+    "coo_hist_bins": _Field(
+        default=1 << 22,
+        env="REPRO_COO_HIST_BINS",
+        parse_env=lambda raw: _parse_int("REPRO_COO_HIST_BINS", raw),
+        validate=lambda n, v: _check_int(n, v),
+    ),
+    # count-manager routing ------------------------------------------------
+    "device_min_rows": _Field(
+        default=1 << 18,
+        env="REPRO_DEVICE_MIN_ROWS",
+        parse_env=lambda raw: _device_min_rows_env(raw),
+        validate=lambda n, v: _check_int(n, v, minimum=0),
+    ),
+    "dense_cell_budget": _Field(
+        default=1 << 26,
+        env=None,
+        parse_env=None,
+        validate=lambda n, v: _check_int(n, v, minimum=1),
+    ),
+    "coo_shards": _Field(
+        default=1,
+        env="REPRO_COO_SHARDS",
+        parse_env=lambda raw: _parse_int("REPRO_COO_SHARDS", raw, minimum=1),
+        validate=lambda n, v: _check_int(n, v, minimum=1),
+    ),
+    # score-manager routing ------------------------------------------------
+    "batch_min_candidates": _Field(
+        default=8,
+        env="REPRO_BATCH_MIN_CANDIDATES",
+        parse_env=lambda raw: _parse_int(
+            "REPRO_BATCH_MIN_CANDIDATES", raw, minimum=0
+        ),
+        validate=lambda n, v: _check_int(n, v, minimum=0),
+    ),
+    "incremental": _Field(
+        default=True,
+        env="REPRO_INCREMENTAL",
+        parse_env=_bool01_env("REPRO_INCREMENTAL"),
+        validate=lambda n, v: _check_bool(n, v),
+    ),
+    "msg_cache": _Field(
+        default=128,
+        env="REPRO_MSG_CACHE",
+        parse_env=lambda raw: _parse_int("REPRO_MSG_CACHE", raw, minimum=0),
+        validate=lambda n, v: _check_int(n, v, minimum=0),
+    ),
+    "fused_build": _Field(
+        default=True,
+        env="REPRO_FUSED_BUILD",
+        parse_env=_bool01_env("REPRO_FUSED_BUILD"),
+        validate=lambda n, v: _check_bool(n, v),
+    ),
+    # bucket ladder / compile warmth ---------------------------------------
+    "bucket_base": _Field(
+        default=128,
+        env="REPRO_BUCKET_BASE",
+        parse_env=_bucket_base_env,
+        validate=lambda n, v: _check_int(n, v, minimum=1),
+    ),
+    "bucket_growth": _Field(
+        default=2.0,
+        env="REPRO_BUCKET_GROWTH",
+        parse_env=_bucket_growth_env,
+        validate=_validate_growth,
+    ),
+    "donation": _Field(
+        default="auto",
+        env="REPRO_DONATE",
+        parse_env=_donate_env,
+        validate=lambda n, v: _check_choice(n, v, _DONATE_MODES),
+    ),
+    "jax_cache_dir": _Field(
+        default="",
+        env="REPRO_JAX_CACHE_DIR",
+        parse_env=lambda raw: raw.strip(),
+        validate=lambda n, v: _check_path(n, v),
+    ),
+}
+
+
+def _check_path(name: str, value: Any) -> str:
+    if not isinstance(value, (str, os.PathLike)):
+        raise ValueError(f"{name} must be a path string, got {value!r}")
+    return str(value)
+
+
+def _device_min_rows_env(raw: str) -> int:
+    try:
+        rows = int(raw)
+    except ValueError as e:
+        # fail loudly, like REPRO_BUCKET_BASE: a typo'd value would silently
+        # fall back to the default and defeat the knob
+        raise ValueError(
+            f"REPRO_DEVICE_MIN_ROWS must parse as int, got {raw!r}"
+        ) from e
+    if rows < 0:
+        raise ValueError(f"REPRO_DEVICE_MIN_ROWS must be >= 0, got {rows}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# The three mutable layers: context stack, global setter overrides, env
+# ---------------------------------------------------------------------------
+
+#: Innermost-last stack of validated {field: value} override mappings.  A
+#: ContextVar gives the thread-safety contract for free: each thread (and
+#: each asyncio task) sees only the contexts it entered itself.
+_CONTEXT_STACK: contextvars.ContextVar[tuple[Mapping[str, Any], ...]] = (
+    contextvars.ContextVar("repro_engine_config_stack", default=())
+)
+
+#: Process-global overrides written by the legacy ``set_*()`` setters (and
+#: :func:`set_override`).  Sits *below* the context stack — a scoped
+#: ``engine_config`` always wins over ambient module-level mutation — and
+#: *above* the environment, matching the setters' historical behavior of
+#: replacing the env-initialized module global.
+_GLOBAL_OVERRIDES: dict[str, Any] = {}
+
+_UNSET = object()
+
+
+def _field(name: str) -> _Field:
+    try:
+        return _FIELDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine-config field {name!r}; known fields: "
+            f"{tuple(sorted(_FIELDS))}"
+        ) from None
+
+
+def resolve(name: str, kwarg: Any = _UNSET) -> Any:
+    """Resolve one field: kwarg > context > setter override > env > default.
+
+    ``kwarg`` is the per-call override an API accepted explicitly (pass
+    nothing — not ``None`` — when the caller did not supply one).  The env
+    layer is re-read from ``os.environ`` on every call and keeps the
+    fail-loud parse contract of the historical per-module readers.
+    """
+    spec = _field(name)
+    if kwarg is not _UNSET and kwarg is not None:
+        return spec.validate(name, kwarg)
+    for overrides in reversed(_CONTEXT_STACK.get()):
+        if name in overrides:
+            return overrides[name]
+    if name in _GLOBAL_OVERRIDES:
+        return _GLOBAL_OVERRIDES[name]
+    if spec.env is not None:
+        raw = os.environ.get(spec.env, "")
+        if raw.strip():
+            return spec.parse_env(raw)
+    return spec.default
+
+
+def set_override(name: str, value: Any) -> Any:
+    """Set (or with ``None``, clear) the process-global override for a field.
+
+    Returns the field's previous *resolved* value — the legacy setters'
+    return convention, so ``set_x(set_x(new))`` round-trips.  This is the
+    delegation target of every deprecated per-module ``set_*()`` setter.
+    """
+    old = resolve(name)
+    if value is None:
+        _GLOBAL_OVERRIDES.pop(name, None)
+    else:
+        _GLOBAL_OVERRIDES[name] = _field(name).validate(name, value)
+    return old
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig snapshots + the scoped context manager
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """A frozen, fully-resolved snapshot of every engine knob.
+
+    Field defaults are the engine's built-in defaults; :func:`current_config`
+    returns a snapshot with the full precedence chain applied.  Instances
+    are plain data — apply one with ``engine_config(**asdict(cfg))``.
+    """
+
+    kernel_impl: str = ""
+    sort_impl: str = "auto"
+    coo_hist_bins: int = 1 << 22
+    device_min_rows: int = 1 << 18
+    dense_cell_budget: int = 1 << 26
+    coo_shards: int = 1
+    batch_min_candidates: int = 8
+    incremental: bool = True
+    msg_cache: int = 128
+    fused_build: bool = True
+    bucket_base: int = 128
+    bucket_growth: float = 2.0
+    donation: str = "auto"
+    jax_cache_dir: str = ""
+
+
+# keep the dataclass and the field-spec table in lockstep
+assert {f.name for f in dataclass_fields(EngineConfig)} == set(_FIELDS), (
+    "EngineConfig fields and _FIELDS spec table diverged"
+)
+assert all(
+    getattr(EngineConfig(), n) == s.default for n, s in _FIELDS.items()
+), "EngineConfig defaults and _FIELDS defaults diverged"
+
+
+def current_config() -> EngineConfig:
+    """Snapshot the active configuration (all layers applied)."""
+    return EngineConfig(**{name: resolve(name) for name in _FIELDS})
+
+
+def _wire_cache_dir(cache_dir: str) -> None:
+    """Point JAX's persistent compilation cache at ``cache_dir``.
+
+    Thresholds are zeroed so the small bucketed programs qualify (by
+    default JAX only persists compiles >1s).  jax is imported lazily so
+    merely importing this module stays dependency-free.
+    """
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+
+
+@contextlib.contextmanager
+def engine_config(**overrides: Any) -> Iterator[EngineConfig]:
+    """Scoped engine configuration: apply ``overrides`` until exit.
+
+    Only fields passed explicitly are overridden; everything else keeps
+    resolving through the outer layers.  Contexts nest (innermost wins per
+    field) and are isolated per thread / per asyncio task.  Yields the
+    resolved :class:`EngineConfig` in effect inside the block.
+
+    ``jax_cache_dir`` is side-effectful: entering a context that sets it
+    wires JAX's persistent compilation cache immediately (JAX offers no
+    un-wire, so that one setting survives context exit).
+    """
+    validated = {
+        name: _field(name).validate(name, value)
+        for name, value in overrides.items()
+    }
+    token = _CONTEXT_STACK.set(_CONTEXT_STACK.get() + (validated,))
+    try:
+        if validated.get("jax_cache_dir"):
+            _wire_cache_dir(validated["jax_cache_dir"])
+        yield current_config()
+    finally:
+        _CONTEXT_STACK.reset(token)
+
+
+# Importing the engine with REPRO_JAX_CACHE_DIR set wires the persistent
+# compilation cache up front (the warm-start contract predating this
+# module): the env var is the startup form of the knob.
+_startup_cache_dir = resolve("jax_cache_dir")
+if _startup_cache_dir:
+    _wire_cache_dir(_startup_cache_dir)

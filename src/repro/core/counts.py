@@ -52,7 +52,6 @@ paper's metaqueries reading the VDB.
 from __future__ import annotations
 
 import math
-import os
 from dataclasses import dataclass, field
 from typing import Protocol, runtime_checkable
 
@@ -62,6 +61,7 @@ import numpy as np
 
 from ..kernels import ops
 from ..kernels.bucketing import bucket_rows
+from . import config
 from .database import RelationalDatabase
 from .schema import (
     KIND_ENTITY_ATTR,
@@ -76,15 +76,19 @@ from .schema import (
 # ---------------------------------------------------------------------------
 
 #: Max dense cells ``impl="auto"`` will materialize before switching to the
-#: sparse COO backend (2**26 float32 cells = 256 MiB).  See module docstring.
+#: sparse COO backend (2**26 float32 cells = 256 MiB) — the built-in
+#: default of the ``dense_cell_budget`` engine-config field.  The live
+#: value resolves through :mod:`repro.core.config` (see module docstring).
 DENSE_CELL_BUDGET: int = 1 << 26
 
 
 def set_dense_cell_budget(n_cells: int) -> int:
-    """Set the global dense/sparse auto-switch budget; returns the old value."""
-    global DENSE_CELL_BUDGET
-    old, DENSE_CELL_BUDGET = DENSE_CELL_BUDGET, int(n_cells)
-    return old
+    """Set the global dense/sparse auto-switch budget; returns the old value.
+
+    .. deprecated:: delegates to :mod:`repro.core.config`; prefer
+       ``engine_config(dense_cell_budget=...)`` for scoped use.
+    """
+    return config.set_override("dense_cell_budget", int(n_cells))
 
 
 #: Minimum ``db.total_tuples`` for ``device_resident=True`` to actually run
@@ -100,29 +104,13 @@ def set_dense_cell_budget(n_cells: int) -> int:
 _DEVICE_MIN_ROWS_DEFAULT = 1 << 18
 
 
-def _env_device_min_rows() -> int:
-    raw = os.environ.get("REPRO_DEVICE_MIN_ROWS", "").strip()
-    if not raw:
-        return _DEVICE_MIN_ROWS_DEFAULT
-    try:
-        rows = int(raw)
-    except ValueError as e:
-        # fail loudly, like REPRO_BUCKET_BASE: a typo'd value would silently
-        # fall back to the default and defeat the knob
-        raise ValueError(
-            f"REPRO_DEVICE_MIN_ROWS must parse as int, got {raw!r}"
-        ) from e
-    if rows < 0:
-        raise ValueError(f"REPRO_DEVICE_MIN_ROWS must be >= 0, got {rows}")
-    return rows
-
-
-_DEVICE_MIN_ROWS = _env_device_min_rows()
-
-
 def device_min_rows() -> int:
-    """Current device-build row threshold (``0`` = always honor the flag)."""
-    return _DEVICE_MIN_ROWS
+    """Current device-build row threshold (``0`` = always honor the flag).
+
+    Resolves through :mod:`repro.core.config` (``REPRO_DEVICE_MIN_ROWS``
+    env fallback, ``engine_config(device_min_rows=...)`` for scoped use).
+    """
+    return config.resolve("device_min_rows")
 
 
 def set_device_min_rows(rows: int) -> int:
@@ -131,14 +119,14 @@ def set_device_min_rows(rows: int) -> int:
     Benchmarks and device tests pass ``0`` to force the device path on
     small databases; production tuning moves the crossover measured by
     ``bench_scale``.
+
+    .. deprecated:: delegates to :mod:`repro.core.config`; prefer
+       ``engine_config(device_min_rows=...)`` for scoped use.
     """
-    global _DEVICE_MIN_ROWS
-    old = _DEVICE_MIN_ROWS
     rows = int(rows)
     if rows < 0:
         raise ValueError(f"device min rows must be >= 0, got {rows}")
-    _DEVICE_MIN_ROWS = rows
-    return old
+    return config.set_override("device_min_rows", rows)
 
 
 def pow2_bucket(n: int) -> int:
@@ -883,7 +871,7 @@ def _pick_backend(
         raise ValueError(f"impl must be one of {_VALID_IMPLS}, got {impl!r}")
     if impl == "sparse":
         return "sparse"
-    budget = DENSE_CELL_BUDGET if dense_cell_budget is None else dense_cell_budget
+    budget = config.resolve("dense_cell_budget", dense_cell_budget)
     if impl == "auto" and dense_cells_of(db, rvs, group_fovar) > budget:
         return "sparse"
     return "dense"
@@ -931,7 +919,7 @@ def contingency_table(
     with ``device_resident=True``.
     """
     if _pick_backend(db, rvs, impl, group_fovar, dense_cell_budget) == "sparse":
-        if device_resident and db.total_tuples >= _DEVICE_MIN_ROWS:
+        if device_resident and db.total_tuples >= device_min_rows():
             # Device-side build: the join-tree contraction and Möbius
             # recursion run as COO code algebra over jax.Arrays — no host
             # COO column is ever materialized, so there is no bulk h2d copy

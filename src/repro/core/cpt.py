@@ -70,9 +70,9 @@ def mle_factor(
 
     fct = as_host(fct)
     if isinstance(fct, SparseCT):
-        from .counts import DENSE_CELL_BUDGET
+        from .config import resolve
 
-        fct = fct.to_dense(budget=DENSE_CELL_BUDGET)
+        fct = fct.to_dense(budget=resolve("dense_cell_budget"))
     ct = fct.transpose(tuple(parents) + (child,))
     t = ct.table
     child_card = t.shape[-1]

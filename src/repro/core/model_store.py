@@ -1,0 +1,226 @@
+"""Durable model store: learned first-order Bayes nets as managed artifacts.
+
+FactorBase inherits BayesStore's stance that statistical models are
+first-class database citizens (paper §I): the learned structure and its
+``@par-RVID@_CPT`` tables live in relations, not in the memory of the
+process that happened to learn them.  This module is that contract for the
+jax_pallas engine: :func:`save_model` serializes a :class:`LearnedModel` —
+schema + BN structure + :class:`~repro.core.cpt.FactorTable` CPTs — into a
+single versioned ``.npz`` artifact, and :func:`load_model` reloads it
+**device-resident** (every CPT lands back on the accelerator via the
+transfer-accounted ``ops.to_device``) so the serving tier can answer
+``P(y | x)`` queries without re-learning anything.
+
+Artifact layout (format ``repro-model`` v1)::
+
+    model.npz
+      __meta__     JSON: format/version tag, schema spec (the declarative
+                   catalog of data/ingest.py, schema-only), BN rvs+parents,
+                   per-factor child/parents/axis metadata, free-form user
+                   metadata
+      factor_000…  one float32 array per family CPT, axes (*parents, child)
+
+Everything numeric rides ``.npz`` raw bytes — float32 tables round-trip
+**bit-identically**, which is what makes save → fresh process → load →
+predict produce the same posteriors to the last ulp (enforced by
+``tests/test_model_store.py`` and the ``bench_serve`` gate).  The schema
+travels as the same declarative spec ``data/ingest.py`` ingests, so an
+artifact is self-describing: a fresh process can validate an incoming
+database against ``model.schema`` before serving it.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+import numpy as np
+
+from ..kernels import ops
+from .bn import BayesNet
+from .cpt import FactorTable
+from .schema import RelationalSchema
+
+__all__ = [
+    "FORMAT",
+    "VERSION",
+    "LearnedModel",
+    "ModelStoreError",
+    "load_model",
+    "save_model",
+    "schema_spec",
+]
+
+FORMAT = "repro-model"
+VERSION = 1
+
+_META_KEY = "__meta__"
+
+
+class ModelStoreError(ValueError):
+    """A model artifact failed validation (wrong format, version, shape)."""
+
+
+@dataclass(frozen=True)
+class LearnedModel:
+    """A learned model: schema contract + BN structure + CPT factors.
+
+    ``factors`` maps each child par-RV to its family CPT; ``meta`` is
+    free-form JSON-serializable provenance (score used, alpha, dataset
+    name, …) that rides along in the artifact.
+    """
+
+    schema: RelationalSchema
+    bn: BayesNet
+    factors: dict[str, FactorTable]
+    meta: Mapping[str, Any] = field(default_factory=dict)
+
+    def validate(self) -> None:
+        self.schema.validate()
+        missing = [rv for rv in self.bn.rvs if rv not in self.factors]
+        if missing:
+            raise ModelStoreError(
+                f"model is missing CPTs for {missing}; every BN family "
+                "needs a factor table"
+            )
+        for child, factor in self.factors.items():
+            if factor.child != child:
+                raise ModelStoreError(
+                    f"factor stored under {child!r} is for {factor.child!r}"
+                )
+            if tuple(factor.parents) != tuple(self.bn.parents[child]):
+                raise ModelStoreError(
+                    f"factor {child!r} has parents {factor.parents}, BN "
+                    f"says {tuple(self.bn.parents[child])}"
+                )
+
+
+def schema_spec(schema: RelationalSchema) -> dict:
+    """The schema as a declarative, row-free ``data/ingest.py`` spec.
+
+    ``ingest_schema(schema_spec(s)) == s`` — the artifact's schema block is
+    exactly the catalog form the ingestion front door already validates.
+    """
+    tables: dict[str, Any] = {}
+    for edecl in schema.entities:
+        tables[edecl.name] = {
+            "columns": {a: list(dom) for a, dom in edecl.attributes},
+        }
+    for rdecl in schema.relationships:
+        tables[rdecl.name] = {
+            "foreign_keys": {"fk1": rdecl.entities[0], "fk2": rdecl.entities[1]},
+            "columns": {a: list(dom) for a, dom in rdecl.attributes},
+        }
+    return {"tables": tables}
+
+
+def save_model(model: LearnedModel, path) -> str:
+    """Serialize ``model`` into one versioned ``.npz`` artifact at ``path``.
+
+    Returns the path written.  CPT arrays are stored as raw float32 —
+    loading them back is bit-identical.
+    """
+    model.validate()
+    try:
+        user_meta = json.loads(json.dumps(dict(model.meta)))
+    except (TypeError, ValueError) as e:
+        raise ModelStoreError(
+            f"model.meta must be JSON-serializable: {e}"
+        ) from e
+
+    arrays: dict[str, np.ndarray] = {}
+    factor_meta = []
+    for i, child in enumerate(sorted(model.factors)):
+        factor = model.factors[child]
+        key = f"factor_{i:03d}"
+        arrays[key] = np.asarray(ops.to_host(factor.table), np.float32)
+        factor_meta.append(
+            {"child": factor.child, "parents": list(factor.parents), "key": key}
+        )
+
+    meta = {
+        "format": FORMAT,
+        "version": VERSION,
+        "schema": schema_spec(model.schema),
+        "bn": {
+            "rvs": list(model.bn.rvs),
+            "parents": {rv: list(model.bn.parents[rv]) for rv in model.bn.rvs},
+        },
+        "factors": factor_meta,
+        "meta": user_meta,
+    }
+    # no sort_keys: the spec's table order IS the schema's declaration
+    # order, and the catalog derives par-RV enumeration from it
+    arrays[_META_KEY] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), dtype=np.uint8
+    )
+    path = str(path)
+    with open(path, "wb") as fh:
+        np.savez(fh, **arrays)
+    return path
+
+
+def _read_meta(archive: np.lib.npyio.NpzFile, path: str) -> dict:
+    if _META_KEY not in archive:
+        raise ModelStoreError(
+            f"{path}: not a {FORMAT} artifact (missing {_META_KEY!r} entry)"
+        )
+    try:
+        meta = json.loads(bytes(archive[_META_KEY].tobytes()).decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ModelStoreError(f"{path}: corrupt {_META_KEY!r} block: {e}") from e
+    if not isinstance(meta, dict) or meta.get("format") != FORMAT:
+        raise ModelStoreError(
+            f"{path}: not a {FORMAT} artifact "
+            f"(format tag {meta.get('format') if isinstance(meta, dict) else meta!r})"
+        )
+    if meta.get("version") != VERSION:
+        raise ModelStoreError(
+            f"{path}: artifact version {meta.get('version')!r} is not the "
+            f"supported version {VERSION}; re-save the model with this engine"
+        )
+    return meta
+
+
+def load_model(path, *, device_resident: bool = True) -> LearnedModel:
+    """Reload a saved model, CPTs device-resident by default.
+
+    The load path issues no jit compilations of its own — warm-path
+    recompiles stay at zero — and every CPT transfer is accounted through
+    ``ops.to_device`` (``device_resident=False`` keeps host arrays, for
+    tooling that only inspects the artifact).
+    """
+    from ..data.ingest import ingest_schema
+
+    path = str(path)
+    with np.load(path) as archive:
+        meta = _read_meta(archive, path)
+        schema = ingest_schema(meta["schema"])
+        bn_meta = meta["bn"]
+        bn = BayesNet(
+            rvs=tuple(bn_meta["rvs"]),
+            parents={
+                rv: tuple(parents) for rv, parents in bn_meta["parents"].items()
+            },
+        )
+        factors: dict[str, FactorTable] = {}
+        for fmeta in meta["factors"]:
+            key = fmeta["key"]
+            if key not in archive:
+                raise ModelStoreError(
+                    f"{path}: factor array {key!r} for {fmeta['child']!r} "
+                    "is missing from the archive"
+                )
+            table = np.asarray(archive[key], np.float32)
+            factors[fmeta["child"]] = FactorTable(
+                child=fmeta["child"],
+                parents=tuple(fmeta["parents"]),
+                table=ops.to_device(table) if device_resident else table,
+            )
+
+    model = LearnedModel(
+        schema=schema, bn=bn, factors=factors, meta=meta.get("meta", {})
+    )
+    model.validate()
+    return model

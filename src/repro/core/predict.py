@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..kernels.bucketing import bucket_rows
 from .bn import BayesNet
 from .counts import GROUP_AXIS, contingency_table
 from .cpt import FactorTable
@@ -48,6 +49,35 @@ class PredictionResult:
         """The paper's CLL metric: mean log P(true label | X_-Y)."""
         p = jnp.take_along_axis(self.probs, true_codes[:, None].astype(jnp.int32), axis=1)
         return float(jnp.mean(jnp.log(jnp.maximum(p, _LOG_TINY))))
+
+
+def family_row_scores(
+    counts: jax.Array, logmat: jax.Array, *, impl: str = "auto"
+) -> jax.Array:
+    """One family's contribution for a batch of rows: ``counts @ logmat``.
+
+    ``counts`` is ``(B, C)`` per-row family counts, ``logmat`` is ``(C,
+    |Y|)`` log-CPT columns; the result is ``(B, |Y|)``.  Rows are padded to
+    the bucket-ladder rung (zero rows are identity for the contraction)
+    before the ``block_predict`` kernel runs, then sliced back.
+
+    This is the **bit-identity seam** shared by :func:`predict_single_loop`
+    and the serving tier's micro-batcher: because both sides launch the
+    same rung-shaped programs, a row's float32 dot reduces identically
+    whether it arrived alone or inside a batch — which is what lets the
+    ``bench_serve`` gate demand served posteriors *bitwise* equal to the
+    single-instance oracle rather than "close".  (The rung is clamped to
+    >= 2 rows: XLA:CPU lowers 1-row dots through a different GEMV path
+    whose reduction order differs from the batched GEMM's.)
+    """
+    n = counts.shape[0]
+    pad = max(bucket_rows(max(n, 1)), 2)
+    if pad != n:
+        counts = jnp.concatenate(
+            [counts, jnp.zeros((pad - n,) + counts.shape[1:], counts.dtype)]
+        )
+    out = ops.block_predict(counts, logmat, impl=impl)
+    return out[:n] if pad != n else out
 
 
 def _families_with(bn: BayesNet, target: str) -> list[str]:
@@ -146,16 +176,18 @@ def predict_single_loop(
             if rest:
                 ct = contingency_table(db, rest, impl=impl, restrict={fovar: e})
                 if isinstance(ct, SparseCT):
+                    # densify the restricted row (counts are exact integers,
+                    # so this is lossless) and ride the same contraction as
+                    # the dense branch — one reduction order everywhere
                     ct = ct.transpose(rest)
-                    lm = np.asarray(logmat, np.float32)
-                    s = s + jnp.asarray(
-                        (ct.counts[:, None] * lm[ct.codes]).sum(0, dtype=np.float32)
-                    )
-                    continue
-                counts = ct.transpose(rest).table.reshape(1, -1)
+                    row = np.zeros((logmat.shape[0],), np.float32)
+                    np.add.at(row, np.asarray(ct.codes), np.asarray(ct.counts))
+                    counts = jnp.asarray(row).reshape(1, -1)
+                else:
+                    counts = ct.transpose(rest).table.reshape(1, -1)
             else:
                 counts = jnp.ones((1, 1), jnp.float32)
-            s = s + ops.block_predict(counts, logmat, impl=kimpl)[0]
+            s = s + family_row_scores(counts, logmat, impl=kimpl)[0]
         rows.append(s)
     scores = jnp.stack(rows, axis=0)
     logz = jax.scipy.special.logsumexp(scores, axis=1, keepdims=True)

@@ -54,7 +54,6 @@ launches per sweep with no host round-trip of the joint CT.
 from __future__ import annotations
 
 import math
-import os
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +62,7 @@ from jax.experimental import enable_x64
 
 from ..kernels import bucketing, ops
 from ..kernels.sparse_score import MAX_FAMILIES
+from . import config
 from . import database as _database
 from .counts import (
     CTLike,
@@ -91,7 +91,8 @@ from .sparse_counts import (
 #: handful of tiny family scorings undercut — the movielens regression,
 #: where hill-climb sweeps average ~2-3 fresh candidates and the batched
 #: leg measured *slower* than serial.  Large sweeps keep the batched path,
-#: which wins by amortizing exactly those costs.
+#: which wins by amortizing exactly those costs.  (The built-in default of
+#: the ``batch_min_candidates`` engine-config field.)
 _BATCH_MIN_DEFAULT = 8
 
 
@@ -100,20 +101,10 @@ def batch_min_candidates() -> int:
 
     ``0`` disables the serial route entirely (every memo-missing batch is
     set-oriented, the pre-router behavior); large values effectively force
-    serial scoring.
+    serial scoring.  Resolves through :mod:`repro.core.config`
+    (``engine_config(batch_min_candidates=...)`` for scoped use).
     """
-    raw = os.environ.get("REPRO_BATCH_MIN_CANDIDATES", "").strip()
-    if not raw:
-        return _BATCH_MIN_DEFAULT
-    try:
-        n = int(raw)
-    except ValueError as e:
-        raise ValueError(
-            f"REPRO_BATCH_MIN_CANDIDATES must be an integer >= 0, got {raw!r}"
-        ) from e
-    if n < 0:
-        raise ValueError(f"REPRO_BATCH_MIN_CANDIDATES must be >= 0, got {n}")
-    return n
+    return config.resolve("batch_min_candidates")
 
 
 def incremental_enabled() -> bool:
@@ -124,12 +115,7 @@ def incremental_enabled() -> bool:
     signed ΔCT — the bisection aid for suspected delta-propagation bugs
     (results are bit-identical either way; only latency differs).
     """
-    raw = os.environ.get("REPRO_INCREMENTAL", "").strip()
-    if not raw:
-        return True
-    if raw not in ("0", "1"):
-        raise ValueError(f"REPRO_INCREMENTAL must be 0 or 1, got {raw!r}")
-    return raw == "1"
+    return config.resolve("incremental")
 
 
 class CountCache:
@@ -641,8 +627,9 @@ class ScoreManager(CountCache):
         pathological batch degrades to a few, never to one per family.
         """
         self._ensure_cells()
-        # read at call time so set_dense_cell_budget() is honored
-        from .counts import DENSE_CELL_BUDGET
+        # resolved at call time so set_dense_cell_budget() / engine_config
+        # scoping are honored
+        cell_budget = config.resolve("dense_cell_budget")
         bucket = pow2_bucket
 
         dims = {
@@ -659,7 +646,7 @@ class ScoreManager(CountCache):
         for fam in order:
             p_b, c_b = dims[fam]
             cand_p, cand_c = max(cur_p, p_b), max(cur_c, c_b)
-            if not cur or bucket(len(cur) + 1) * cand_p * cand_c <= DENSE_CELL_BUDGET:
+            if not cur or bucket(len(cur) + 1) * cand_p * cand_c <= cell_budget:
                 cur.append(fam)
                 cur_p, cur_c = cand_p, cand_c
             else:

@@ -79,7 +79,6 @@ from __future__ import annotations
 import contextlib
 import functools
 import math
-import os
 from dataclasses import dataclass
 
 import jax
@@ -88,6 +87,7 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from ..kernels import bucketing, ops
+from . import config
 from .counts import (
     GROUP_AXIS,
     ContingencyTable,
@@ -1209,26 +1209,22 @@ class _DevMsg:
 # super-program back to its eager body — same source, same results — as a
 # bisection aid when a fusion is suspected.
 
-_FUSED_MODES = ("0", "1")
-_FUSED = os.environ.get("REPRO_FUSED_BUILD", "1").strip() or "1"
-if _FUSED not in _FUSED_MODES:
-    # fail loudly, like the other REPRO_* knobs
-    raise ValueError(
-        f"REPRO_FUSED_BUILD must be one of {_FUSED_MODES}, got {_FUSED!r}"
-    )
-
-
 def fused_build() -> bool:
-    """Whether the device build runs its jitted super-programs (default)."""
-    return _FUSED == "1"
+    """Whether the device build runs its jitted super-programs (default).
+
+    Resolves through :mod:`repro.core.config` (``REPRO_FUSED_BUILD`` env
+    fallback, ``engine_config(fused_build=...)`` for scoped use).
+    """
+    return config.resolve("fused_build")
 
 
 def set_fused_build(on: bool) -> bool:
-    """Toggle the super-program fusion; returns the previous setting."""
-    global _FUSED
-    old = _FUSED == "1"
-    _FUSED = "1" if on else "0"
-    return old
+    """Toggle the super-program fusion; returns the previous setting.
+
+    .. deprecated:: delegates to :mod:`repro.core.config`; prefer
+       ``engine_config(fused_build=...)`` for scoped use.
+    """
+    return config.set_override("fused_build", bool(on))
 
 
 def _maybe_jit(fn=None, *, static_argnums=()):
@@ -1705,20 +1701,10 @@ def coo_shards() -> int:
 
     ``1`` (the unset default) is the single-device build.  Like the other
     env knobs, a malformed value fails loudly rather than silently running
-    unsharded.
+    unsharded.  Resolves through :mod:`repro.core.config`
+    (``engine_config(coo_shards=...)`` for scoped use).
     """
-    raw = os.environ.get("REPRO_COO_SHARDS", "").strip()
-    if not raw:
-        return 1
-    try:
-        n = int(raw)
-    except ValueError as e:
-        raise ValueError(
-            f"REPRO_COO_SHARDS must be an integer >= 1, got {raw!r}"
-        ) from e
-    if n < 1:
-        raise ValueError(f"REPRO_COO_SHARDS must be >= 1, got {n}")
-    return n
+    return config.resolve("coo_shards")
 
 
 def _shard_view(
@@ -2200,20 +2186,10 @@ def msg_cache_cap() -> int:
 
     Default 128 entries; ``0`` disables caching entirely.  Like the other
     env knobs, a malformed value fails loudly rather than silently running
-    uncached.
+    uncached.  Resolves through :mod:`repro.core.config`
+    (``engine_config(msg_cache=...)`` for scoped use).
     """
-    raw = os.environ.get("REPRO_MSG_CACHE", "").strip()
-    if not raw:
-        return 128
-    try:
-        n = int(raw)
-    except ValueError as e:
-        raise ValueError(
-            f"REPRO_MSG_CACHE must be an integer >= 0, got {raw!r}"
-        ) from e
-    if n < 0:
-        raise ValueError(f"REPRO_MSG_CACHE must be >= 0, got {n}")
-    return n
+    return config.resolve("msg_cache")
 
 
 class LeafMessageCache:

@@ -37,16 +37,25 @@ where XLA actually implements donation).
 from __future__ import annotations
 
 import math
-import os
 
 import jax
+
+# The config module is the single owner of every REPRO_* env read and of
+# the kwarg > context > setter > env > default precedence chain.  It is
+# imported lazily (inside functions) because the core and kernels layers
+# import each other's modules at import time and this file sits at the
+# bottom of that graph.
+
+
+def _config():
+    from ..core import config
+
+    return config
+
 
 # ---------------------------------------------------------------------------
 # The bucket ladder
 # ---------------------------------------------------------------------------
-
-_DEFAULT_BASE = 128
-_DEFAULT_GROWTH = 2.0
 
 
 def _validated_ladder(base: int, growth: float) -> tuple[int, float]:
@@ -60,28 +69,10 @@ def _validated_ladder(base: int, growth: float) -> tuple[int, float]:
     return base, growth
 
 
-def _env_ladder() -> tuple[int, float]:
-    raw_base = os.environ.get("REPRO_BUCKET_BASE", "").strip()
-    raw_growth = os.environ.get("REPRO_BUCKET_GROWTH", "").strip()
-    try:
-        base = int(raw_base) if raw_base else _DEFAULT_BASE
-        growth = float(raw_growth) if raw_growth else _DEFAULT_GROWTH
-    except ValueError as e:
-        # fail loudly, like REPRO_KERNEL_IMPL: a typo'd value would silently
-        # fall back to defaults and defeat the knob
-        raise ValueError(
-            f"REPRO_BUCKET_BASE / REPRO_BUCKET_GROWTH must parse as int / "
-            f"float, got {raw_base!r} / {raw_growth!r}"
-        ) from e
-    return _validated_ladder(base, growth)
-
-
-_BASE, _GROWTH = _env_ladder()
-
-
 def bucket_ladder() -> tuple[int, float]:
     """Current ``(base, growth)`` of the row-count bucket ladder."""
-    return _BASE, _GROWTH
+    cfg = _config()
+    return cfg.resolve("bucket_base"), cfg.resolve("bucket_growth")
 
 
 def set_bucket_ladder(
@@ -92,12 +83,17 @@ def set_bucket_ladder(
     Tests shrink the base to force padding on tiny inputs; production
     tuning widens ``growth`` to trade sort overhead (each stream is padded
     by at most one growth factor) against program count.
+
+    .. deprecated:: delegates to :mod:`repro.core.config`; prefer
+       ``engine_config(bucket_base=..., bucket_growth=...)`` for scoped use.
     """
-    global _BASE, _GROWTH
-    old = (_BASE, _GROWTH)
-    _BASE, _GROWTH = _validated_ladder(
-        _BASE if base is None else base, _GROWTH if growth is None else growth
+    cfg = _config()
+    old = bucket_ladder()
+    new_base, new_growth = _validated_ladder(
+        old[0] if base is None else base, old[1] if growth is None else growth
     )
+    cfg.set_override("bucket_base", new_base)
+    cfg.set_override("bucket_growth", new_growth)
     return old
 
 
@@ -145,9 +141,10 @@ def bucket_rows(n: int, *, tight: bool = False) -> int:
     n = int(n)
     if n <= 0:
         return 0
-    rung = _BASE
+    base, growth = bucket_ladder()
+    rung = base
     while rung < n:
-        rung = max(rung + 1, math.ceil(rung * _GROWTH))
+        rung = max(rung + 1, math.ceil(rung * growth))
     if not tight:
         rung = max(rung, _STREAM_FLOOR)
     return rung
@@ -270,24 +267,22 @@ def enable_persistent_cache(cache_dir) -> None:
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
 
 
-_CACHE_ENV = os.environ.get("REPRO_JAX_CACHE_DIR", "").strip()
-if _CACHE_ENV:
-    enable_persistent_cache(_CACHE_ENV)
-
+# REPRO_JAX_CACHE_DIR wiring happens when repro.core.config is imported
+# (it owns the env read); calling enable_persistent_cache directly remains
+# the programmatic form of the same knob.
 
 _DONATE_MODES = ("auto", "0", "1")
-_DONATE = os.environ.get("REPRO_DONATE", "auto").strip().lower() or "auto"
-if _DONATE not in _DONATE_MODES:
-    raise ValueError(f"REPRO_DONATE must be one of {_DONATE_MODES}, got {_DONATE!r}")
 
 
 def set_donation(mode: str) -> str:
-    """Set the donation policy (``auto|0|1``); returns the previous mode."""
-    global _DONATE
+    """Set the donation policy (``auto|0|1``); returns the previous mode.
+
+    .. deprecated:: delegates to :mod:`repro.core.config`; prefer
+       ``engine_config(donation=...)`` for scoped use.
+    """
     if mode not in _DONATE_MODES:
         raise ValueError(f"donation mode must be one of {_DONATE_MODES}, got {mode!r}")
-    old, _DONATE = _DONATE, mode
-    return old
+    return _config().set_override("donation", mode)
 
 
 def donate_buffers() -> bool:
@@ -298,8 +293,9 @@ def donate_buffers() -> bool:
     call).  ``auto`` enables it away from CPU — XLA:CPU ignores donation
     and warns, so forcing it there (``REPRO_DONATE=1``) is for tests only.
     """
-    if _DONATE == "1":
+    mode = _config().resolve("donation")
+    if mode == "1":
         return True
-    if _DONATE == "0":
+    if mode == "0":
         return False
     return jax.default_backend() != "cpu"

@@ -18,7 +18,6 @@ shard_map computations; the count manager's distributed path relies on that.
 from __future__ import annotations
 
 import functools
-import os
 from collections import Counter
 
 import jax
@@ -40,45 +39,48 @@ from .factor_loglik import factor_loglik_batched_pallas, factor_loglik_pallas
 from .mle_cpt import mle_cpt_batched_pallas, mle_cpt_pallas
 from .sparse_score import sparse_family_score_pallas
 
-#: Environment override for the ``impl="auto"`` dispatch policy.  CI sets
-#: ``REPRO_KERNEL_IMPL=pallas`` on a CPU-only leg so every auto call runs the
-#: interpret-mode kernels (dispatch-path coverage without a TPU); ``ref``
-#: forces the oracles.  Explicit per-call ``impl=`` always wins.
-_ENV_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "").strip().lower()
-if _ENV_IMPL not in ("", "pallas", "ref"):
-    # fail loudly: a typo'd value would silently fall back to the oracles
-    # and defeat the CI leg whose whole purpose is kernel-dispatch coverage
-    raise ValueError(
-        f"REPRO_KERNEL_IMPL must be 'pallas' or 'ref' (or unset), "
-        f"got {_ENV_IMPL!r}"
-    )
+def _config():
+    # lazy: core.config sits above the kernels layer in the import graph
+    from ..core import config
+
+    return config
+
+
+def _env_impl() -> str:
+    """The ``impl="auto"`` dispatch override (``REPRO_KERNEL_IMPL`` knob).
+
+    CI sets ``REPRO_KERNEL_IMPL=pallas`` on a CPU-only leg so every auto
+    call runs the interpret-mode kernels (dispatch-path coverage without a
+    TPU); ``ref`` forces the oracles.  Explicit per-call ``impl=`` always
+    wins.  Resolved through :mod:`repro.core.config` at call time (scoped
+    via ``engine_config(kernel_impl=...)``), fail-loud on malformed values.
+    """
+    return _config().resolve("kernel_impl")
+
 
 #: Engine policy for ``coo_aggregate``'s general (sort) path.  ``auto``
 #: picks the fused Pallas bitonic sort+segment-sum kernel on TPU for rungs
 #: it can hold in VMEM and the XLA ``sort_key_val`` path everywhere else;
 #: ``xla`` forces the oracle, ``pallas`` forces the kernel (interpret mode
 #: off-TPU — the CI sort-dispatch leg).  Same fail-loudly rule as
-#: ``REPRO_KERNEL_IMPL``.
+#: ``REPRO_KERNEL_IMPL``; env knob ``REPRO_SORT_IMPL``.
 _SORT_IMPLS = ("auto", "xla", "pallas")
-_SORT_IMPL = os.environ.get("REPRO_SORT_IMPL", "auto").strip().lower() or "auto"
-if _SORT_IMPL not in _SORT_IMPLS:
-    raise ValueError(
-        f"REPRO_SORT_IMPL must be one of {_SORT_IMPLS}, got {_SORT_IMPL!r}"
-    )
 
 
 def set_sort_impl(mode: str) -> str:
-    """Set the sort-engine policy (``auto|xla|pallas``); returns the old one."""
-    global _SORT_IMPL
+    """Set the sort-engine policy (``auto|xla|pallas``); returns the old one.
+
+    .. deprecated:: delegates to :mod:`repro.core.config`; prefer
+       ``engine_config(sort_impl=...)`` for scoped use.
+    """
     if mode not in _SORT_IMPLS:
         raise ValueError(f"sort impl must be one of {_SORT_IMPLS}, got {mode!r}")
-    old, _SORT_IMPL = _SORT_IMPL, mode
-    return old
+    return _config().set_override("sort_impl", mode)
 
 
 def sort_impl() -> str:
     """Current ``coo_aggregate`` sort-engine policy (``auto|xla|pallas``)."""
-    return _SORT_IMPL
+    return _config().resolve("sort_impl")
 
 
 def _use_pallas_sort(n: int, code_dtype) -> tuple[bool, bool]:
@@ -91,9 +93,10 @@ def _use_pallas_sort(n: int, code_dtype) -> tuple[bool, bool]:
     """
     if code_dtype != jnp.int64:
         return False, False
-    if _SORT_IMPL == "pallas":
+    mode = sort_impl()
+    if mode == "pallas":
         return True, jax.default_backend() != "tpu"
-    if _SORT_IMPL == "xla":
+    if mode == "xla":
         return False, False
     on_tpu = jax.default_backend() == "tpu"
     eligible = code_dtype == jnp.int64 and n <= PALLAS_SORT_MAX_ROWS
@@ -202,8 +205,9 @@ def kernel_impl(impl: str) -> str:
 def _use_pallas(impl: str) -> tuple[bool, bool]:
     """-> (use_pallas, interpret)."""
     on_tpu = jax.default_backend() == "tpu"
-    if impl == "auto" and _ENV_IMPL in ("pallas", "ref"):
-        impl = _ENV_IMPL
+    env_impl = _env_impl()
+    if impl == "auto" and env_impl in ("pallas", "ref"):
+        impl = env_impl
     if impl == "auto":
         return on_tpu, False
     if impl == "pallas":
@@ -391,10 +395,13 @@ _pallas_agg_jit = jax.jit(_pallas_agg_impl, static_argnums=(2,))
 _pallas_agg_counted_jit = jax.jit(_pallas_agg_counted_impl, static_argnums=(2,))
 
 #: Histogram-aggregation engages when the (bucketed) code space fits under
-#: this many dense accumulator bins (f64 accumulator: 32 MB at the default).
-#: Above it, the general sort path runs.  Overridable for experiments via
-#: ``REPRO_COO_HIST_BINS`` (0 disables the histogram path entirely).
-_HIST_BINS_BUDGET = 1 << 22
+#: the bin budget (f64 accumulator: 32 MB at the default 2^22).  Above it,
+#: the general sort path runs.  Overridable for experiments via
+#: ``REPRO_COO_HIST_BINS`` / ``engine_config(coo_hist_bins=...)`` (0
+#: disables the histogram path entirely).  ``None`` defers to the config
+#: resolution chain; tests monkeypatch this attribute directly (it is read
+#: at call time).
+_HIST_BINS_BUDGET: int | None = None
 
 #: Streams below this many (bucketed) rows always take the sort path.  Two
 #: reasons, both measured on XLA:CPU.  Compile diversity: every distinct
@@ -407,14 +414,12 @@ _HIST_BINS_BUDGET = 1 << 22
 #: ``bins <= rows`` (below) keeps hist off streams whose O(bins)
 #: accumulator + compaction would dwarf the sort it replaces.
 _HIST_MIN_ROWS = 1 << 16
-_env_hist = os.environ.get("REPRO_COO_HIST_BINS", "").strip()
-if _env_hist:
-    try:
-        _HIST_BINS_BUDGET = int(_env_hist)
-    except ValueError as e:
-        raise ValueError(
-            f"REPRO_COO_HIST_BINS must be an integer, got {_env_hist!r}"
-        ) from e
+
+
+def _hist_bins_budget() -> int:
+    if _HIST_BINS_BUDGET is not None:
+        return _HIST_BINS_BUDGET
+    return _config().resolve("coo_hist_bins")
 
 
 @functools.partial(jax.jit, static_argnames=("num_bins",))
@@ -570,7 +575,7 @@ def _aggregate_dispatch(codes, weights, num_bins, *, with_count: bool):
             num_bins is not None
             and 0 < num_bins
             and n_pad >= _HIST_MIN_ROWS
-            and bucketing.bucket_bins(num_bins) <= min(_HIST_BINS_BUDGET, n_pad)
+            and bucketing.bucket_bins(num_bins) <= min(_hist_bins_budget(), n_pad)
         )
         if use_hist:
             bins = bucketing.bucket_bins(num_bins)

@@ -1,0 +1,371 @@
+"""Micro-batched block-prediction service: the traffic-bearing §VI path.
+
+The paper's block-access result (§VI, Figure 9) is that scoring a *set* of
+test instances costs one grouped count query + one matmul per family,
+instead of one restricted count pipeline per instance.  This module turns
+that batch observation into a serving loop:
+
+* **Resident model state.**  At construction the service runs each
+  family's grouped count query ONCE (the expensive, data-touching part)
+  and keeps the per-entity count matrix and the log-CPT matrix
+  device-resident.  A request for entities ``[e1..ek]`` is then a gather +
+  the ``block_predict`` contraction — no count pipeline on the hot path.
+
+* **Micro-batching on the bucket ladder.**  Requests land in a bounded
+  queue; a worker thread drains it and flushes a batch when it has
+  ``max_batch`` rows or the oldest request has waited ``flush_ms``.  The
+  gathered batch is padded up to the geometric bucket-ladder rung
+  (:func:`~repro.kernels.bucketing.bucket_rows`, min 2 rows), so arbitrary
+  traffic shapes hit O(#rungs) compiled programs: after
+  :meth:`PredictService.warmup`, the serving path compiles **zero** new
+  XLA programs — the ``bench_serve`` CI gate.
+
+* **Bit-identity.**  Scoring rides
+  :func:`~repro.core.predict.family_row_scores` — the same rung-padded
+  contraction ``predict_single_loop`` uses — and the same family order and
+  normalization, so served posteriors are *bitwise* equal to the
+  single-instance oracle on the same model (the ``serve_equal`` gate),
+  not merely close.
+
+* **Accounting.**  Per-request latency quantiles are tracked in-service;
+  compiles and kernel launches ride the existing global counters in
+  :mod:`repro.kernels.ops` / :mod:`repro.kernels.bucketing`, snapshotted
+  at warmup so :meth:`PredictService.stats` reports warm-path deltas.
+
+Responses are host numpy arrays (the device->host copy is part of serving
+a request and is transfer-accounted through ``ops.to_host``).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.config import resolve as _resolve_config
+from ..core.counts import GROUP_AXIS, contingency_table
+from ..core.model_store import LearnedModel
+from ..core.predict import _families_with, _log_factor_matrix, family_row_scores
+from ..core.sparse_counts import SparseCT
+from ..kernels import bucketing, ops
+from ..kernels.bucketing import bucket_rows
+
+__all__ = ["PredictService", "ServedPrediction", "ServiceOverloaded"]
+
+
+class ServiceOverloaded(RuntimeError):
+    """The bounded request queue is full — backpressure, not silent queuing."""
+
+
+@dataclass(frozen=True)
+class ServedPrediction:
+    """One answered request: posteriors for the requested entities."""
+
+    target: str
+    entity_ids: np.ndarray    # (k,) int32 — the ids as requested
+    log_scores: np.ndarray    # (k, |Y|) unnormalized, float32
+    probs: np.ndarray         # (k, |Y|) normalized (Eq. 2), float32
+    latency_ms: float         # enqueue -> response
+
+
+@dataclass(frozen=True)
+class _Request:
+    ids: np.ndarray
+    future: Future
+    enqueued: float
+
+
+_SHUTDOWN = object()
+
+
+class PredictService:
+    """Answer batched ``P(y | x)`` queries for one (db, model, target).
+
+    Parameters
+    ----------
+    db:
+        The evidence database (its schema must equal ``model.schema``).
+    model:
+        A :class:`~repro.core.model_store.LearnedModel` — typically
+        ``load_model(path)`` output, CPTs device-resident.
+    target:
+        The class par-RV, an entity attribute (paper §VII).
+    max_batch:
+        Flush a micro-batch once it holds this many rows.
+    flush_ms:
+        Flush once the oldest queued request has waited this long.
+    queue_size:
+        Bound of the request queue; :meth:`submit` raises
+        :class:`ServiceOverloaded` when it is full.
+    impl:
+        Kernel dispatch policy for the resident build and the hot path
+        (``auto`` honors ``engine_config(kernel_impl=...)`` as usual).
+    """
+
+    def __init__(
+        self,
+        db,
+        model: LearnedModel,
+        target: str,
+        *,
+        max_batch: int = 64,
+        flush_ms: float = 2.0,
+        queue_size: int = 1024,
+        impl: str = "auto",
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if flush_ms < 0:
+            raise ValueError(f"flush_ms must be >= 0, got {flush_ms}")
+        if queue_size < 1:
+            raise ValueError(f"queue_size must be >= 1, got {queue_size}")
+        if model.schema != db.schema:
+            raise ValueError(
+                "model/database schema mismatch: the artifact was learned "
+                "on a different relational schema than the serving database"
+            )
+
+        cat = db.catalog
+        target_rv = cat[target]
+        if target_rv.kind != "entity_attr":
+            raise ValueError(
+                f"serving targets are entity attributes (paper §VII), "
+                f"got {target!r} of kind {target_rv.kind!r}"
+            )
+
+        self.target = target
+        self.max_batch = int(max_batch)
+        self.flush_s = float(flush_ms) / 1e3
+        self._impl = impl
+        self._kimpl = ops.kernel_impl(impl)
+        self.n_entities = db.entities[target_rv.table].n_rows
+        self.n_y = target_rv.cardinality
+
+        # Resident model state: one grouped count query per family, run
+        # once, then (counts, log-CPT) stay on device for the hot path.
+        fovar = target_rv.fovars[0].fid
+        self._fams: list[tuple[jnp.ndarray | None, jnp.ndarray]] = []
+        for child in _families_with(model.bn, target):
+            rest, logmat = _log_factor_matrix(model.factors[child], target)
+            logmat = logmat.reshape(-1, self.n_y)
+            if rest:
+                gct = contingency_table(db, rest, impl=impl, group_fovar=fovar)
+                gct = gct.transpose((GROUP_AXIS,) + rest)
+                if isinstance(gct, SparseCT):
+                    # densify once at build time (counts are exact ints) so
+                    # the hot path is a uniform gather + dense contraction
+                    gct = gct.to_dense(
+                        budget=_resolve_config("dense_cell_budget")
+                    )
+                counts = ops.to_device(
+                    np.asarray(ops.to_host(gct.table), np.float32).reshape(
+                        self.n_entities, -1
+                    )
+                )
+            else:
+                counts = None  # family is {Y} alone: one grounding per entity
+            self._fams.append((counts, ops.to_device(np.asarray(logmat))))
+
+        self._queue: queue.Queue = queue.Queue(maxsize=int(queue_size))
+        self._lock = threading.Lock()
+        self._latencies_ms: list[float] = []
+        self._batch_rows: list[int] = []
+        self._n_requests = 0
+        self._launches0 = ops.total_launches()
+        self._compiles0 = bucketing.total_compiles()
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._serve_loop, name="repro-predict-service", daemon=True
+        )
+        self._worker.start()
+
+    # -- scoring ------------------------------------------------------------
+
+    def _score_batch(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(log_scores, probs) host arrays for ``ids`` — the §VI block path.
+
+        Every device op runs at the bucket rung of ``len(ids)`` (padding
+        gathers entity 0; its rows are sliced off host-side so result
+        shapes never leak data-dependent sizes into compiled programs).
+        """
+        n = len(ids)
+        pad = max(bucket_rows(max(n, 1)), 2)
+        idx = np.zeros((pad,), np.int32)
+        idx[:n] = ids
+        idx = jnp.asarray(idx)
+
+        scores = jnp.zeros((pad, self.n_y), jnp.float32)
+        for counts, logmat in self._fams:
+            if counts is not None:
+                rows = jnp.take(counts, idx, axis=0)
+            else:
+                rows = jnp.ones((pad, 1), jnp.float32)
+            scores = scores + family_row_scores(rows, logmat, impl=self._kimpl)
+        logz = jax.scipy.special.logsumexp(scores, axis=1, keepdims=True)
+        probs = jnp.exp(scores - logz)
+        log_host = ops.to_host(scores)[:n]
+        prob_host = ops.to_host(probs)[:n]
+        return log_host, prob_host
+
+    # -- the micro-batching loop -------------------------------------------
+
+    def _serve_loop(self) -> None:
+        while True:
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                if self._closed:
+                    return
+                continue
+            if first is _SHUTDOWN:
+                return
+            batch = [first]
+            total = len(first.ids)
+            deadline = first.enqueued + self.flush_s
+            while total < self.max_batch:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    break
+                try:
+                    req = self._queue.get(timeout=wait)
+                except queue.Empty:
+                    break
+                if req is _SHUTDOWN:
+                    self._flush(batch)
+                    return
+                batch.append(req)
+                total += len(req.ids)
+            self._flush(batch)
+
+    def _flush(self, batch: list[_Request]) -> None:
+        ids = np.concatenate([req.ids for req in batch])
+        try:
+            log_scores, probs = self._score_batch(ids)
+        except BaseException as e:  # surface failures to every waiter
+            for req in batch:
+                if not req.future.cancelled():
+                    req.future.set_exception(e)
+            return
+        done = time.perf_counter()
+        offset = 0
+        with self._lock:
+            self._batch_rows.append(len(ids))
+        for req in batch:
+            k = len(req.ids)
+            latency_ms = (done - req.enqueued) * 1e3
+            result = ServedPrediction(
+                target=self.target,
+                entity_ids=req.ids,
+                log_scores=log_scores[offset:offset + k],
+                probs=probs[offset:offset + k],
+                latency_ms=latency_ms,
+            )
+            offset += k
+            with self._lock:
+                self._latencies_ms.append(latency_ms)
+            if not req.future.cancelled():
+                req.future.set_result(result)
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, entity_ids) -> Future:
+        """Enqueue one request; resolves to a :class:`ServedPrediction`."""
+        if self._closed:
+            raise RuntimeError("PredictService is closed")
+        ids = np.atleast_1d(np.asarray(entity_ids, np.int32))
+        if ids.ndim != 1 or ids.size == 0:
+            raise ValueError(f"entity_ids must be a non-empty 1-d list, got {entity_ids!r}")
+        if ids.min() < 0 or ids.max() >= self.n_entities:
+            raise ValueError(
+                f"entity ids must be in [0, {self.n_entities}), "
+                f"got range [{ids.min()}, {ids.max()}]"
+            )
+        fut: Future = Future()
+        req = _Request(ids=ids, future=fut, enqueued=time.perf_counter())
+        with self._lock:
+            self._n_requests += 1
+        try:
+            self._queue.put_nowait(req)
+        except queue.Full:
+            raise ServiceOverloaded(
+                f"request queue is full ({self._queue.maxsize} pending); "
+                "shed load or raise queue_size"
+            ) from None
+        return fut
+
+    def predict(self, entity_ids, timeout: float | None = 30.0) -> ServedPrediction:
+        """Synchronous convenience: submit one request and wait for it."""
+        return self.submit(entity_ids).result(timeout=timeout)
+
+    def warmup(self, batch_sizes=None) -> dict:
+        """Compile the serving programs for every rung up to ``max_batch``.
+
+        Returns ``{"rungs": [...], "compiles": n}``.  After warmup the hot
+        path compiles nothing: :meth:`stats` reports ``warm_compiles``
+        relative to this point.
+        """
+        if batch_sizes is None:
+            rungs: list[int] = []
+            n = 1
+            while True:
+                rung = max(bucket_rows(n), 2)
+                if rung not in rungs:
+                    rungs.append(rung)
+                if rung >= max(self.max_batch, 1):
+                    break
+                n = rung + 1
+        else:
+            rungs = sorted({max(bucket_rows(max(int(b), 1)), 2) for b in batch_sizes})
+        before = bucketing.total_compiles()
+        for rung in rungs:
+            self._score_batch(np.zeros((rung,), np.int32))
+        self._launches0 = ops.total_launches()
+        self._compiles0 = bucketing.total_compiles()
+        with self._lock:
+            self._latencies_ms.clear()
+            self._batch_rows.clear()
+            self._n_requests = 0
+        return {"rungs": rungs, "compiles": bucketing.total_compiles() - before}
+
+    def stats(self) -> dict:
+        """Serving counters: latency quantiles + warm-path compile/launch deltas.
+
+        ``warm_compiles`` / ``launches`` ride the existing global
+        accounting in :mod:`repro.kernels` (deltas since the last
+        :meth:`warmup`, or construction), so other activity on the same
+        process shows up here — bracket measurements accordingly.
+        """
+        with self._lock:
+            lat = np.asarray(self._latencies_ms, np.float64)
+            rows = list(self._batch_rows)
+            n_requests = self._n_requests
+        return {
+            "requests": n_requests,
+            "answered": int(lat.size),
+            "batches": len(rows),
+            "rows_per_batch": (float(np.mean(rows)) if rows else 0.0),
+            "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "warm_compiles": bucketing.total_compiles() - self._compiles0,
+            "launches": ops.total_launches() - self._launches0,
+        }
+
+    def close(self) -> None:
+        """Stop the worker after draining already-queued requests."""
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.put(_SHUTDOWN)
+        self._worker.join(timeout=10.0)
+
+    def __enter__(self) -> "PredictService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

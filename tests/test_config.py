@@ -1,0 +1,261 @@
+"""EngineConfig: the kwarg > context > setter > env > default chain.
+
+Every REPRO_* knob in the engine resolves through
+:mod:`repro.core.config`; these tests pin the precedence order, context
+nesting and thread isolation, fail-loud validation, and the invariant
+that no other module reads REPRO_* environment variables directly (the
+same check ``tools/check_env_reads.py`` runs in CI).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import pytest
+
+from repro.core import config
+from repro.core.config import EngineConfig, current_config, engine_config, resolve
+
+
+@pytest.fixture(autouse=True)
+def _clean_knobs(monkeypatch):
+    """Each test starts from built-in defaults: no env, no global overrides."""
+    for spec in config._FIELDS.values():
+        if spec.env is not None:
+            monkeypatch.delenv(spec.env, raising=False)
+    saved = dict(config._GLOBAL_OVERRIDES)
+    config._GLOBAL_OVERRIDES.clear()
+    yield
+    config._GLOBAL_OVERRIDES.clear()
+    config._GLOBAL_OVERRIDES.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# precedence
+# ---------------------------------------------------------------------------
+
+
+def test_default_wins_when_nothing_set():
+    assert resolve("bucket_base") == 128
+    assert resolve("incremental") is True
+    assert resolve("kernel_impl") == ""
+
+
+def test_env_beats_default(monkeypatch):
+    monkeypatch.setenv("REPRO_BUCKET_BASE", "64")
+    assert resolve("bucket_base") == 64
+
+
+def test_env_is_read_per_call(monkeypatch):
+    monkeypatch.setenv("REPRO_BATCH_MIN_CANDIDATES", "3")
+    assert resolve("batch_min_candidates") == 3
+    monkeypatch.setenv("REPRO_BATCH_MIN_CANDIDATES", "5")
+    assert resolve("batch_min_candidates") == 5
+    monkeypatch.delenv("REPRO_BATCH_MIN_CANDIDATES")
+    assert resolve("batch_min_candidates") == 8
+
+
+def test_setter_beats_env(monkeypatch):
+    monkeypatch.setenv("REPRO_COO_SHARDS", "2")
+    old = config.set_override("coo_shards", 4)
+    assert old == 2  # setters return the previously-resolved value
+    assert resolve("coo_shards") == 4
+    config.set_override("coo_shards", None)  # clear -> env visible again
+    assert resolve("coo_shards") == 2
+
+
+def test_context_beats_setter_and_env(monkeypatch):
+    monkeypatch.setenv("REPRO_MSG_CACHE", "7")
+    config.set_override("msg_cache", 9)
+    with engine_config(msg_cache=11):
+        assert resolve("msg_cache") == 11
+    assert resolve("msg_cache") == 9
+
+
+def test_kwarg_beats_context():
+    with engine_config(device_min_rows=100):
+        assert resolve("device_min_rows", 200) == 200
+        assert resolve("device_min_rows") == 100
+
+
+def test_none_kwarg_means_unset():
+    with engine_config(device_min_rows=100):
+        assert resolve("device_min_rows", None) == 100
+
+
+def test_context_nesting_innermost_wins():
+    with engine_config(bucket_base=64):
+        with engine_config(bucket_base=32):
+            assert resolve("bucket_base") == 32
+        assert resolve("bucket_base") == 64
+    assert resolve("bucket_base") == 128
+
+
+def test_nested_contexts_merge_distinct_fields():
+    with engine_config(bucket_base=64):
+        with engine_config(coo_shards=2):
+            assert resolve("bucket_base") == 64  # outer still visible
+            assert resolve("coo_shards") == 2
+        assert resolve("coo_shards") == 1
+
+
+def test_context_yields_snapshot():
+    with engine_config(bucket_base=64, incremental=False) as cfg:
+        assert isinstance(cfg, EngineConfig)
+        assert cfg.bucket_base == 64
+        assert cfg.incremental is False
+        assert cfg.msg_cache == 128  # untouched fields at their defaults
+
+
+def test_context_restores_on_exception():
+    with pytest.raises(RuntimeError):
+        with engine_config(bucket_base=64):
+            raise RuntimeError("boom")
+    assert resolve("bucket_base") == 128
+
+
+# ---------------------------------------------------------------------------
+# thread / task isolation
+# ---------------------------------------------------------------------------
+
+
+def test_contexts_are_thread_local():
+    seen = {}
+    barrier = threading.Barrier(2)
+
+    def worker(name, base):
+        with engine_config(bucket_base=base):
+            barrier.wait(timeout=10)  # both threads inside their contexts
+            seen[name] = resolve("bucket_base")
+            barrier.wait(timeout=10)
+
+    threads = [
+        threading.Thread(target=worker, args=("a", 32)),
+        threading.Thread(target=worker, args=("b", 64)),
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert seen == {"a": 32, "b": 64}
+
+
+def test_fresh_thread_sees_no_context():
+    out = {}
+    with engine_config(bucket_base=64):
+        # a thread spawned inside the context does NOT inherit it:
+        # contextvars are copied at thread creation only for the main
+        # coroutine machinery, not threading.Thread
+        t = threading.Thread(target=lambda: out.update(v=resolve("bucket_base")))
+        t.start()
+        t.join(timeout=30)
+    assert out["v"] == 128
+
+
+# ---------------------------------------------------------------------------
+# validation: fail loud, never coerce silently
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_field_rejected():
+    with pytest.raises(ValueError, match="unknown engine-config field"):
+        with engine_config(no_such_knob=1):
+            pass
+    with pytest.raises(ValueError, match="unknown engine-config field"):
+        resolve("no_such_knob")
+
+
+def test_bad_env_value_raises(monkeypatch):
+    monkeypatch.setenv("REPRO_INCREMENTAL", "maybe")
+    with pytest.raises(ValueError, match="REPRO_INCREMENTAL"):
+        resolve("incremental")
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "cuda")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_IMPL"):
+        resolve("kernel_impl")
+
+
+def test_bad_context_value_raises_on_entry():
+    with pytest.raises(ValueError):
+        with engine_config(bucket_growth=0.5):  # growth must be > 1
+            pass
+    with pytest.raises(ValueError):
+        with engine_config(donation="2"):
+            pass
+
+
+def test_setters_still_validate():
+    from repro.kernels.bucketing import set_bucket_ladder, set_donation
+
+    with pytest.raises(ValueError):
+        set_bucket_ladder(base=0)
+    with pytest.raises(ValueError):
+        set_donation("yes")
+
+
+# ---------------------------------------------------------------------------
+# the EngineConfig snapshot + legacy setter delegation
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_is_frozen():
+    cfg = current_config()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.bucket_base = 1
+
+
+def test_current_config_reflects_context():
+    with engine_config(sort_impl="xla", fused_build=False):
+        cfg = current_config()
+        assert cfg.sort_impl == "xla"
+        assert cfg.fused_build is False
+    assert current_config().sort_impl == "auto"
+
+
+def test_legacy_setters_delegate():
+    """set_*() and the read functions see one shared config store."""
+    from repro.core.counts import device_min_rows, set_device_min_rows
+    from repro.kernels.bucketing import bucket_ladder, set_bucket_ladder
+
+    old = set_bucket_ladder(base=256)
+    try:
+        assert bucket_ladder()[0] == 256
+        assert current_config().bucket_base == 256
+    finally:
+        set_bucket_ladder(base=old[0], growth=old[1])
+
+    prev = set_device_min_rows(7)
+    try:
+        assert device_min_rows() == 7
+        with engine_config(device_min_rows=3):
+            assert device_min_rows() == 3  # context still outranks setter
+    finally:
+        config.set_override("device_min_rows", None)
+        assert device_min_rows() == prev
+
+
+def test_fields_cover_engine_config():
+    assert set(config._FIELDS) == {
+        f.name for f in dataclasses.fields(EngineConfig)
+    }
+
+
+# ---------------------------------------------------------------------------
+# single-owner invariant: nobody else reads REPRO_* env vars
+# ---------------------------------------------------------------------------
+
+
+def test_no_stray_env_reads():
+    """The CI lint, runnable as a plain test: config.py owns every REPRO_*
+    environ read (launch/ scripts are grandfathered — they must set
+    XLA_FLAGS before jax imports, ahead of any config machinery)."""
+    from pathlib import Path
+    import subprocess
+    import sys
+
+    root = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, str(root / "tools" / "check_env_reads.py")],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,201 @@
+"""Durable model store: save → load round trips are bit-identical.
+
+The artifact contract (``repro.core.model_store``): a saved model reloads
+— in the same process or a fresh one — with the same schema, the same BN,
+and float32 CPTs equal to the last ulp, so every downstream posterior is
+bitwise reproducible from the artifact alone.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import zipfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.cpt import learn_parameters
+from repro.core.database import university_db
+from repro.core.model_store import (
+    FORMAT,
+    VERSION,
+    LearnedModel,
+    ModelStoreError,
+    load_model,
+    save_model,
+    schema_spec,
+)
+from repro.core.predict import predict_block
+from repro.core.structure import CountCache, learn_and_join
+from repro.data.ingest import ingest_schema
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def model():
+    db = university_db()
+    cache = CountCache(db, mode="precount", impl="ref")
+    res = learn_and_join(
+        db, cache, score="aic", max_parents=2, max_chain=1, impl="ref"
+    )
+    factors = learn_parameters(res.bn, cache, alpha=0.1, impl="ref")
+    return db, LearnedModel(
+        schema=db.schema, bn=res.bn, factors=factors,
+        meta={"dataset": "university", "alpha": 0.1},
+    )
+
+
+def test_round_trip_identity(model, tmp_path):
+    db, m = model
+    path = save_model(m, tmp_path / "model.npz")
+    m2 = load_model(path)
+    assert m2.schema == m.schema
+    assert m2.bn == m.bn
+    assert set(m2.factors) == set(m.factors)
+    for child in m.factors:
+        assert m2.factors[child].parents == m.factors[child].parents
+        assert np.array_equal(
+            np.asarray(ops.to_host(m2.factors[child].table)),
+            np.asarray(ops.to_host(m.factors[child].table)),
+        )
+    assert dict(m2.meta) == dict(m.meta)
+
+
+def test_round_trip_predictions_bitwise(model, tmp_path):
+    db, m = model
+    m2 = load_model(save_model(m, tmp_path / "model.npz"))
+    target = "intelligence(student0)"
+    r1 = predict_block(db, m.bn, m.factors, target, impl="ref")
+    r2 = predict_block(db, m2.bn, m2.factors, target, impl="ref")
+    assert np.array_equal(np.asarray(r1.log_scores), np.asarray(r2.log_scores))
+    assert np.array_equal(np.asarray(r1.probs), np.asarray(r2.probs))
+
+
+def test_fresh_process_round_trip(model, tmp_path):
+    """save → NEW interpreter → load → predict, bitwise vs this process."""
+    db, m = model
+    path = save_model(m, tmp_path / "model.npz")
+    target = "intelligence(student0)"
+    want = np.asarray(predict_block(db, m.bn, m.factors, target, impl="ref").probs)
+    np.save(tmp_path / "want.npy", want)
+
+    script = f"""
+import numpy as np
+import repro
+from repro.core.database import university_db
+model = repro.load_model({str(path)!r})
+r = repro.predict(university_db(), model, {target!r}, impl="ref")
+want = np.load({str(tmp_path / "want.npy")!r})
+assert np.array_equal(np.asarray(r.probs), want), "probs drifted across processes"
+print("fresh-process OK")
+"""
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (
+        ":" + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "fresh-process OK" in proc.stdout
+
+
+def test_schema_spec_round_trips(model):
+    db, _ = model
+    assert ingest_schema(schema_spec(db.schema)) == db.schema
+
+
+def test_device_resident_flag(model, tmp_path):
+    _, m = model
+    path = save_model(m, tmp_path / "model.npz")
+    host = load_model(path, device_resident=False)
+    for f in host.factors.values():
+        assert isinstance(f.table, np.ndarray)
+
+
+def test_meta_rides_along(model, tmp_path):
+    _, m = model
+    m2 = load_model(save_model(m, tmp_path / "model.npz"))
+    assert m2.meta["dataset"] == "university"
+    assert m2.meta["alpha"] == 0.1
+
+
+def test_unserializable_meta_fails_loud(model, tmp_path):
+    db, m = model
+    bad = LearnedModel(
+        schema=m.schema, bn=m.bn, factors=m.factors, meta={"fn": object()}
+    )
+    with pytest.raises(ModelStoreError, match="JSON-serializable"):
+        save_model(bad, tmp_path / "bad.npz")
+
+
+def test_missing_factor_fails_validation(model, tmp_path):
+    _, m = model
+    some_child = next(iter(m.factors))
+    partial = {c: f for c, f in m.factors.items() if c != some_child}
+    broken = LearnedModel(schema=m.schema, bn=m.bn, factors=partial)
+    with pytest.raises(ModelStoreError, match="missing CPTs"):
+        save_model(broken, tmp_path / "broken.npz")
+
+
+def test_not_an_artifact_rejected(tmp_path):
+    path = tmp_path / "random.npz"
+    np.savez(path, stuff=np.zeros(3))
+    with pytest.raises(ModelStoreError, match="missing"):
+        load_model(path)
+
+
+def test_wrong_version_rejected(model, tmp_path):
+    _, m = model
+    path = save_model(m, tmp_path / "model.npz")
+    # rewrite the meta block with a bumped version, keeping the zip valid
+    with np.load(path) as archive:
+        arrays = {k: archive[k] for k in archive.files}
+    meta = json.loads(bytes(arrays["__meta__"].tobytes()).decode())
+    meta["version"] = VERSION + 1
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8
+    )
+    np.savez(path, **arrays)
+    with pytest.raises(ModelStoreError, match="version"):
+        load_model(path)
+
+
+def test_wrong_format_tag_rejected(model, tmp_path):
+    _, m = model
+    path = save_model(m, tmp_path / "model.npz")
+    with np.load(path) as archive:
+        arrays = {k: archive[k] for k in archive.files}
+    meta = json.loads(bytes(arrays["__meta__"].tobytes()).decode())
+    meta["format"] = "something-else"
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8
+    )
+    np.savez(path, **arrays)
+    with pytest.raises(ModelStoreError, match=FORMAT):
+        load_model(path)
+
+
+def test_artifact_is_a_plain_npz(model, tmp_path):
+    """The store writes a standard zip/npz — inspectable without repro."""
+    _, m = model
+    path = save_model(m, tmp_path / "model.npz")
+    assert zipfile.is_zipfile(path)
+    with np.load(path) as archive:
+        names = set(archive.files)
+    assert "__meta__" in names
+    assert any(n.startswith("factor_") for n in names)
+
+
+def test_repro_public_api_aliases(model, tmp_path):
+    _, m = model
+    assert repro.save_model is save_model
+    assert repro.load_model is load_model
+    assert repro.LearnedModel is LearnedModel

@@ -1,0 +1,243 @@
+"""Serving tier: micro-batched block prediction, bitwise-correct and warm.
+
+The service contract (``repro.serving.predict_service``): served
+posteriors are *bitwise* equal to ``predict_single_loop`` on the same
+model, micro-batches flush on size or deadline, the bounded queue sheds
+load loudly, and steady traffic after :meth:`warmup` compiles zero new
+XLA programs.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.core.cpt import learn_parameters
+from repro.core.database import university_db
+from repro.core.model_store import LearnedModel, load_model, save_model
+from repro.core.predict import predict_single_loop
+from repro.core.structure import CountCache, learn_and_join
+from repro.serving.predict_service import (
+    PredictService,
+    ServedPrediction,
+    ServiceOverloaded,
+)
+
+TARGET = "intelligence(student0)"
+
+
+@pytest.fixture(scope="module")
+def learned():
+    db = university_db()
+    cache = CountCache(db, mode="precount", impl="ref")
+    res = learn_and_join(
+        db, cache, score="aic", max_parents=2, max_chain=1, impl="ref"
+    )
+    factors = learn_parameters(res.bn, cache, alpha=0.1, impl="ref")
+    model = LearnedModel(schema=db.schema, bn=res.bn, factors=factors)
+    # the single-instance oracle, computed up front so its compiles stay
+    # out of every test's warm window
+    oracle = predict_single_loop(db, res.bn, factors, TARGET, impl="ref")
+    return db, model, np.asarray(oracle.probs), np.asarray(oracle.log_scores)
+
+
+@pytest.fixture()
+def service(learned):
+    db, model, _, _ = learned
+    svc = PredictService(db, model, TARGET, max_batch=16, flush_ms=2.0, impl="ref")
+    svc.warmup()
+    yield svc
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# bitwise correctness
+# ---------------------------------------------------------------------------
+
+
+def test_served_bitwise_equals_single_loop(learned, service):
+    _, _, op, ol = learned
+    for ids in ([0], [1, 2], [0, 1, 2], [2, 2, 0, 1, 2]):
+        r = service.predict(ids)
+        assert isinstance(r, ServedPrediction)
+        assert np.array_equal(r.probs, op[ids]), ids
+        assert np.array_equal(r.log_scores, ol[ids]), ids
+        assert r.probs.shape == (len(ids), service.n_y)
+
+
+def test_batched_with_strangers_still_bitwise(learned, service):
+    """A request's rows don't depend on who shares its micro-batch."""
+    _, _, op, _ = learned
+    futs = [service.submit([i % 3]) for i in range(32)]
+    for i, fut in enumerate(futs):
+        r = fut.result(timeout=30)
+        assert np.array_equal(r.probs, op[[i % 3]])
+
+
+def test_serves_from_reloaded_artifact(learned, tmp_path):
+    db, model, op, _ = learned
+    loaded = load_model(save_model(model, tmp_path / "m.npz"))
+    with PredictService(db, loaded, TARGET, impl="ref") as svc:
+        svc.warmup()
+        r = svc.predict([0, 1, 2])
+        assert np.array_equal(r.probs, op[[0, 1, 2]])
+
+
+# ---------------------------------------------------------------------------
+# micro-batching behavior
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_requests_coalesce(learned):
+    db, model, op, _ = learned
+    svc = PredictService(db, model, TARGET, max_batch=64, flush_ms=20.0, impl="ref")
+    svc.warmup()
+    try:
+        futs = [svc.submit([i % 3]) for i in range(24)]
+        for f in futs:
+            f.result(timeout=30)
+        st = svc.stats()
+        assert st["answered"] == 24
+        # 24 one-row requests under a generous deadline must NOT run as 24
+        # single-row launches — coalescing is the point of the service
+        assert st["batches"] < 24
+        assert st["rows_per_batch"] > 1.0
+    finally:
+        svc.close()
+
+
+def test_flush_on_max_batch_size(learned):
+    db, model, _, _ = learned
+    # deadline far away: only the size trigger can flush
+    svc = PredictService(db, model, TARGET, max_batch=4, flush_ms=5_000.0, impl="ref")
+    svc.warmup()
+    try:
+        futs = [svc.submit([0]) for _ in range(4)]
+        for f in futs:
+            f.result(timeout=10)  # would hang ~5s if size didn't trigger
+        assert svc.stats()["batches"] == 1
+    finally:
+        svc.close()
+
+
+def test_flush_on_deadline(learned):
+    db, model, op, _ = learned
+    svc = PredictService(db, model, TARGET, max_batch=1024, flush_ms=30.0, impl="ref")
+    svc.warmup()
+    try:
+        t0 = time.perf_counter()
+        r = svc.predict([1], timeout=10)
+        elapsed = time.perf_counter() - t0
+        assert np.array_equal(r.probs, op[[1]])
+        assert elapsed < 5.0  # the deadline, not max_batch=1024, flushed it
+    finally:
+        svc.close()
+
+
+def test_queue_bound_sheds_load(learned):
+    db, model, _, _ = learned
+    svc = PredictService(db, model, TARGET, queue_size=2, flush_ms=50.0, impl="ref")
+    # stall the worker by filling the queue faster than one flush window
+    with pytest.raises(ServiceOverloaded):
+        for _ in range(200):
+            svc.submit([0])
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# warm-path compile hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_zero_warm_compiles_across_batch_sizes(learned, service):
+    for ids in ([0], [0, 1], [0, 1, 2], list(range(3)) * 5):
+        service.predict(ids)
+    st = service.stats()
+    assert st["warm_compiles"] == 0, st
+
+
+def test_warmup_reports_rungs(learned):
+    db, model, _, _ = learned
+    svc = PredictService(db, model, TARGET, max_batch=16, impl="ref")
+    try:
+        info = svc.warmup()
+        assert info["rungs"]  # at least one rung compiled
+        assert all(r >= 2 for r in info["rungs"])
+        # second warmup is a no-op compile-wise: everything already cached
+        assert svc.warmup()["compiles"] == 0
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# validation + lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_rejects_out_of_range_ids(service):
+    with pytest.raises(ValueError, match="entity ids"):
+        service.predict([service.n_entities])
+    with pytest.raises(ValueError, match="entity ids"):
+        service.predict([-1])
+
+
+def test_rejects_empty_request(service):
+    with pytest.raises(ValueError, match="non-empty"):
+        service.predict([])
+
+
+def test_rejects_schema_mismatch(learned):
+    from repro.data.relational import BENCHMARKS, generate
+
+    db, model, _, _ = learned
+    other = generate(BENCHMARKS["uw-cse"].scaled(0.05), seed=0)
+    with pytest.raises(ValueError, match="schema"):
+        PredictService(other, model, TARGET)
+
+
+def test_rejects_relationship_target(learned):
+    db, model, _, _ = learned
+    rel_attrs = [v.vid for v in db.catalog.rel_attrs]
+    if not rel_attrs:
+        pytest.skip("no relationship attributes in the catalog")
+    with pytest.raises(ValueError, match="entity attributes"):
+        PredictService(db, model, rel_attrs[0])
+
+
+def test_submit_after_close_raises(learned):
+    db, model, _, _ = learned
+    svc = PredictService(db, model, TARGET, impl="ref")
+    svc.close()
+    svc.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit([0])
+
+
+def test_submit_returns_future(learned, service):
+    fut = service.submit([0])
+    assert isinstance(fut, Future)
+    fut.result(timeout=30)
+
+
+def test_thread_safe_submission(learned, service):
+    _, _, op, _ = learned
+    errors: list[Exception] = []
+
+    def hammer(worker_id):
+        try:
+            for i in range(16):
+                r = service.predict([(worker_id + i) % 3], timeout=30)
+                assert np.array_equal(r.probs, op[[(worker_id + i) % 3]])
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(w,)) for w in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors

@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""CI lint: repro.core.config is the single owner of REPRO_* env reads.
+
+Every engine knob resolves through the kwarg > context > setter > env >
+default chain in ``src/repro/core/config.py``; a direct
+``os.environ[...]`` / ``os.getenv(...)`` read of a ``REPRO_*`` variable
+anywhere else would silently bypass ``engine_config()`` scoping and the
+setter overrides.  This scanner walks the AST of every Python file under
+``src/``, ``benchmarks/`` and ``tools/`` and fails on any such read
+outside the allowlist.
+
+Allowlisted:
+
+  * ``src/repro/core/config.py`` — the owner.
+  * ``src/repro/launch/`` — launcher scripts must read/alter the
+    environment (``XLA_FLAGS``, dry-run device counts) *before* the first
+    ``jax`` import, ahead of any config machinery.
+  * ``tests/`` is not scanned — tests legitimately set and read env vars
+    through monkeypatch.
+
+Stdlib-only on purpose: the CI lint job runs it without installing the
+package.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "tools")
+ALLOW = (
+    Path("src/repro/core/config.py"),
+    Path("src/repro/launch"),
+)
+
+
+def _is_environ(node: ast.expr) -> bool:
+    """``os.environ`` / ``environ`` (from-imported)."""
+    if isinstance(node, ast.Attribute) and node.attr == "environ":
+        return True
+    return isinstance(node, ast.Name) and node.id == "environ"
+
+
+def _repro_key(node: ast.expr) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        if node.value.startswith("REPRO_"):
+            return node.value
+    return None
+
+
+def _violations(path: Path, tree: ast.AST) -> list[tuple[int, str]]:
+    out = []
+    for node in ast.walk(tree):
+        # os.environ["REPRO_X"] / os.environ.get("REPRO_X", ...)
+        if isinstance(node, ast.Subscript) and _is_environ(node.value):
+            key = _repro_key(node.slice)
+            if key:
+                out.append((node.lineno, f"os.environ[{key!r}]"))
+        if isinstance(node, ast.Call):
+            fn = node.func
+            # os.environ.get(...) / environ.get(...)
+            if (
+                isinstance(fn, ast.Attribute)
+                and fn.attr in ("get", "pop", "setdefault")
+                and _is_environ(fn.value)
+                and node.args
+            ):
+                key = _repro_key(node.args[0])
+                if key:
+                    out.append((node.lineno, f"os.environ.{fn.attr}({key!r})"))
+            # os.getenv("REPRO_X") / getenv("REPRO_X")
+            if (
+                (isinstance(fn, ast.Attribute) and fn.attr == "getenv")
+                or (isinstance(fn, ast.Name) and fn.id == "getenv")
+            ) and node.args:
+                key = _repro_key(node.args[0])
+                if key:
+                    out.append((node.lineno, f"getenv({key!r})"))
+    return out
+
+
+def main() -> int:
+    failed = []
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            rel = path.relative_to(ROOT)
+            if any(rel == a or a in rel.parents for a in ALLOW):
+                continue
+            try:
+                tree = ast.parse(path.read_text(), filename=str(rel))
+            except SyntaxError as e:
+                failed.append((rel, e.lineno or 0, f"syntax error: {e.msg}"))
+                continue
+            for lineno, what in _violations(rel, tree):
+                failed.append((rel, lineno, what))
+    if failed:
+        print(
+            "REPRO_* environment reads outside repro.core.config "
+            "(route them through config.resolve / engine_config):"
+        )
+        for rel, lineno, what in failed:
+            print(f"  {rel}:{lineno}: {what}")
+        return 1
+    print("env-read lint OK: config.py owns every REPRO_* read")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
